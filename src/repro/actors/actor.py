@@ -1,0 +1,60 @@
+"""Actor: the data-producing module (§3.2).
+
+Loop per the paper: at each episode/segment beginning request a Task from
+LeagueMgr (learning policy theta + opponent phi), pull both parameter sets
+from ModelPool, run the Env-Agt interaction, ship the trajectory segment to
+the Learner (here: a DataServer queue), and report game outcomes back to
+LeagueMgr at episode endings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.actors.rollout import build_rollout
+from repro.core import LeagueMgr, MatchResult
+from repro.envs.base import MultiAgentEnv
+
+
+class Actor:
+    def __init__(self, env: MultiAgentEnv, cfg, league: LeagueMgr, *,
+                 agent_id: str = "main", num_envs: int = 16, unroll_len: int = 16,
+                 learner_slots=None, seed: int = 0):
+        self.env, self.cfg, self.league = env, cfg, league
+        self.agent_id = agent_id
+        self.rollout, self.init_carry = build_rollout(
+            env, cfg, num_envs=num_envs, unroll_len=unroll_len,
+            learner_slots=learner_slots)
+        self.rng = jax.random.PRNGKey(seed)
+        self.carry = None
+        self.num_envs, self.unroll_len = num_envs, unroll_len
+        self.frames_produced = 0   # rfps numerator (paper Table 3)
+
+    def _next_rng(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    def run_segment(self):
+        """One Task -> one unroll segment. Returns the learner trajectory."""
+        task = self.league.request_task(self.agent_id)
+        theta = self.league.model_pool.pull(task.learner_key)
+        phi = self.league.model_pool.pull(task.opponent_keys[0])
+        if self.carry is None:
+            self.carry = self.init_carry(self._next_rng())
+        self.carry, traj, episodes = self.rollout(theta, phi, self.carry,
+                                                  self._next_rng())
+        self._report(task, episodes)
+        self.frames_produced += self.num_envs * self.unroll_len
+        return traj, task
+
+    def _report(self, task, episodes):
+        done = np.asarray(episodes["done"])      # (T, E)
+        outcome = np.asarray(episodes["outcome"])
+        for t, e in zip(*np.nonzero(done)):
+            self.league.report_result(MatchResult(
+                learner_key=task.learner_key,
+                opponent_keys=task.opponent_keys,
+                outcome=int(outcome[t, e]),
+                episode_len=int(t) + 1))

@@ -1,0 +1,36 @@
+"""Agt: the policy wrapper an Actor embeds (§3.2).
+
+Observations are token sequences; any assigned backbone consumes them and
+the action head is the (masked) LM head at the last position, the value the
+scalar head there — one policy interface for all ten architectures.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward_train
+from repro.rl.distributions import categorical_logp
+
+
+class ObsPolicy(NamedTuple):
+    logits_values: callable   # (params, obs (B,L)) -> (logits (B,A), values (B,))
+    act: callable             # (params, rng, obs) -> (action, logp, value)
+
+
+def make_obs_policy(cfg, num_actions: int) -> ObsPolicy:
+    assert num_actions <= cfg.vocab_size
+
+    def logits_values(params, obs):
+        logits, values, _ = forward_train(params, cfg, {"tokens": obs})
+        return logits[:, -1, :num_actions], values[:, -1]
+
+    def act(params, rng, obs):
+        lg, v = logits_values(params, obs)
+        a = jax.random.categorical(rng, lg, axis=-1)
+        logp = categorical_logp(lg, a)
+        return a, logp, v
+
+    return ObsPolicy(logits_values, act)

@@ -1,0 +1,104 @@
+"""Jitted vectorized rollout: the Actor's Env-Agt interaction loop (§3.2).
+
+One call steps `num_envs` environments for `unroll_len` steps (the paper's
+trajectory segment length L, eq. 1) with the learning agent on
+`learner_slots` and the sampled opponent phi on the rest. Auto-resets on
+done; emits the learner-side trajectory segment plus episode outcomes for
+LeagueMgr reporting. Pure function of (theta, phi, carry, rng) — the
+TPU-native ("Anakin") adaptation of TLeague's CPU actor fleet; the same
+function also serves host-CPU actors feeding a device learner.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.actors.policy import make_obs_policy
+from repro.envs.base import MultiAgentEnv
+
+
+def build_rollout(env: MultiAgentEnv, cfg, *, num_envs: int, unroll_len: int,
+                  learner_slots: Sequence[int] | None = None, jit: bool = True):
+    spec = env.spec
+    learner_slots = tuple(learner_slots if learner_slots is not None
+                          else range(spec.team_size))
+    opp_slots = tuple(i for i in range(spec.num_agents) if i not in learner_slots)
+    policy = make_obs_policy(cfg, spec.num_actions)
+    n_l = len(learner_slots)
+
+    v_reset = jax.vmap(env.reset)
+    v_step = jax.vmap(env.step, in_axes=(0, 0, 0))
+
+    def init_carry(rng):
+        states, obs = v_reset(jax.random.split(rng, num_envs))
+        return states, obs
+
+    def _act(params, rng, obs_slots):
+        """obs_slots: (E, k, L) -> actions/logp/values (E, k)."""
+        E, k, L0 = obs_slots.shape
+        a, logp, v = policy.act(params, rng, obs_slots.reshape(E * k, L0))
+        return (a.reshape(E, k), logp.reshape(E, k), v.reshape(E, k))
+
+    def rollout(learner_params, opponent_params, carry, rng):
+        def step_fn(c, rng_t):
+            states, obs = c
+            r_l, r_o, r_env = jax.random.split(rng_t, 3)
+            acts = jnp.zeros((num_envs, spec.num_agents), jnp.int32)
+            a_l, logp_l, v_l = _act(learner_params, r_l, obs[:, list(learner_slots)])
+            acts = acts.at[:, list(learner_slots)].set(a_l)
+            if opp_slots:
+                a_o, _, _ = _act(opponent_params, r_o, obs[:, list(opp_slots)])
+                acts = acts.at[:, list(opp_slots)].set(a_o)
+
+            states2, obs2, rewards, done, info = v_step(states, acts,
+                                                        jax.random.split(r_env, num_envs))
+            # auto-reset finished envs
+            states3, obs3 = v_reset(jax.random.split(r_env, num_envs))
+            sel = lambda a, b: jnp.where(
+                done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+            states_n = jax.tree.map(sel, states3, states2)
+            obs_n = jax.tree.map(sel, obs3, obs2)
+
+            rec = {
+                "obs": obs[:, list(learner_slots)],            # (E, k, L)
+                "actions": a_l,
+                "behavior_logp": logp_l,
+                "behavior_values": v_l,
+                "rewards": rewards[:, list(learner_slots)],
+                "done": done,
+                "outcome": info.get("outcome", jnp.zeros((num_envs,), jnp.int32)),
+            }
+            return (states_n, obs_n), rec
+
+        carry, recs = jax.lax.scan(step_fn, carry, jax.random.split(rng, unroll_len))
+        # bootstrap value of the final observation
+        _, final_obs = carry
+        _, _, v_boot = _act(learner_params, rng, final_obs[:, list(learner_slots)])
+
+        # reshape (T, E, k, ...) -> (E*k, T, ...)
+        def to_bt(x):
+            x = jnp.moveaxis(x, 0, 1)                          # (E, T, k, ...)
+            if x.ndim >= 3 and x.shape[2] == n_l:
+                x = jnp.moveaxis(x, 2, 1)                      # (E, k, T, ...)
+                return x.reshape((num_envs * n_l, unroll_len) + x.shape[3:])
+            return x
+
+        done_bt = jnp.repeat(jnp.moveaxis(recs["done"], 0, 1), n_l, axis=0)  # (E*k, T)
+        traj = {
+            "obs": to_bt(recs["obs"]),
+            "actions": to_bt(recs["actions"]),
+            "behavior_logp": to_bt(recs["behavior_logp"]),
+            "behavior_values": to_bt(recs["behavior_values"]),
+            "rewards": to_bt(recs["rewards"]),
+            "done": done_bt,
+            "bootstrap_value": v_boot.reshape(num_envs * n_l),
+        }
+        episodes = {"done": recs["done"], "outcome": recs["outcome"]}  # (T, E)
+        return carry, traj, episodes
+
+    if jit:
+        rollout = jax.jit(rollout)
+    return rollout, init_carry

@@ -1,0 +1,53 @@
+"""Checkpointing: pytrees -> .npz (params/opt state), league state -> .json.
+
+The paper freezes models into the ModelPool and persists the league
+(payoff matrix, hyperparams, model lineage); `save_league`/`load_league`
+cover that, `save_pytree`/`load_pytree` cover the neural-net side.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    arrays, _ = _flatten_with_names(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    with np.load(path) as data:
+        arrays, treedef = _flatten_with_names(template)
+        leaves = []
+        flat, _ = jax.tree_util.tree_flatten_with_path(template)
+        for p, leaf in flat:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+            arr = data[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(template), leaves)
+
+
+def save_league(path: str, state: dict) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(state, f, indent=1, default=lambda o: o.tolist() if hasattr(o, "tolist") else str(o))
+
+
+def load_league(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,32 @@
+"""Assigned-architecture registry: `get_arch(name)`, `list_archs()`.
+
+Every entry cites its source (model card / paper) and exactly matches the
+assignment table. `<cfg>.smoke()` is the reduced same-family variant for CPU
+smoke tests; full configs are exercised via the dry-run only.
+"""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, InputShape, INPUT_SHAPES
+from repro.utils.registry import Registry
+
+ARCHS: Registry = Registry("arch")
+
+from repro.configs import (  # noqa: E402  (registration imports)
+    qwen3_8b,
+    mistral_large_123b,
+    command_r_35b,
+    pixtral_12b,
+    rwkv6_3b,
+    hubert_xlarge,
+    gemma2_2b,
+    kimi_k2_1t_a32b,
+    qwen3_moe_235b_a22b,
+    hymba_1p5b,
+    tleague_nets,
+)
+
+
+def get_arch(name: str) -> ArchConfig:
+    return ARCHS.get(name)
+
+
+def list_archs():
+    return ARCHS.names()

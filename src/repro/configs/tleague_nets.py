@@ -1,0 +1,49 @@
+"""The paper's own policy-net scale (TPolicies §3.5): small nets used for the
+actual CPU-runnable league training (examples, integration tests).
+
+TLeague's ViZDoom/Pommerman nets are conv+LSTM; our env observations are
+tokenized (DESIGN.md §4), so the equivalent sequence policy is a small
+transformer. Registered alongside the assigned archs so the whole system is
+exercised end-to-end at laptop scale with the same code paths.
+"""
+from repro.configs import ARCHS
+from repro.configs.base import ArchConfig
+
+# action/observation vocab for the bundled envs (see repro/envs):
+# env obs tokens + action tokens share one table.
+POLICY_S = ArchConfig(
+    name="tleague-policy-s",
+    family="dense",
+    source="arXiv:2011.12895 (TLeague, TPolicies-scale policy net)",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=512,
+    rope_theta=10_000.0,
+    param_dtype="float32",
+    value_head_hidden=64,
+    max_position=2048,
+)
+
+POLICY_M = ArchConfig(
+    name="tleague-policy-m",
+    family="dense",
+    source="arXiv:2011.12895 (TLeague)",
+    num_layers=4,
+    d_model=256,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=32,
+    d_ff=512,
+    vocab_size=512,
+    rope_theta=10_000.0,
+    param_dtype="float32",
+    value_head_hidden=128,
+    max_position=2048,
+)
+
+ARCHS.register("tleague-policy-s", POLICY_S)
+ARCHS.register("tleague-policy-m", POLICY_M)

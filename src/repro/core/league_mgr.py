@@ -1,0 +1,133 @@
+"""LeagueMgr: sponsors the training, coordinates all other modules (§3.2).
+
+Lifecycle per learning agent (M_G of them can run in parallel):
+  - the current learning model key theta is registered with GameMgr+HyperMgr
+  - Actors call `request_task` at each episode beginning -> Task(theta, phi~Q)
+  - Actors call `report_result` at each episode end -> payoff/Elo update
+  - the Learner calls `request_learner_task` at each learning-period
+    beginning (rank-0 only, as in the paper's MPI semantics)
+  - `end_learning_period` freezes theta into the pool (M <- M + {theta}),
+    mints theta_{v+1} (inheriting params via the ModelPool and hypers via
+    HyperMgr — optionally PBT-perturbed), and returns the new key.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.game_mgr import GameMgr, SelfPlayPFSPGameMgr
+from repro.core.hyper_mgr import HyperMgr
+from repro.core.model_pool import ModelPool
+from repro.core.payoff import PayoffMatrix
+from repro.core.types import Hyperparam, MatchResult, ModelKey, Task
+
+
+@dataclass
+class LearningAgent:
+    agent_id: str
+    current: ModelKey
+    game_mgr: GameMgr
+    frozen_count: int = 0
+
+
+class LeagueMgr:
+    def __init__(self, model_pool: Optional[ModelPool] = None,
+                 hyper_mgr: Optional[HyperMgr] = None,
+                 payoff: Optional[PayoffMatrix] = None,
+                 pbt: bool = False, seed: int = 0):
+        self.model_pool = model_pool or ModelPool()
+        self.hyper_mgr = hyper_mgr or HyperMgr(seed=seed)
+        self.payoff = payoff or PayoffMatrix()
+        self.agents: Dict[str, LearningAgent] = {}
+        self.frozen_pool: List[ModelKey] = []   # M, ordered by freeze time
+        self.pbt = pbt
+        self._task_ids = itertools.count()
+        self._results: List[MatchResult] = []
+
+    # -- setup -------------------------------------------------------------------
+    def add_learning_agent(self, agent_id: str, init_params: Any,
+                           game_mgr: Optional[GameMgr] = None,
+                           hyper: Optional[Hyperparam] = None,
+                           seed_into_pool: bool = True) -> ModelKey:
+        """Register a learning agent with its seed model theta_1 (random init
+        or imitation-learned, §3.1)."""
+        gm = game_mgr or SelfPlayPFSPGameMgr(payoff=self.payoff)
+        gm.payoff = self.payoff                 # all agents share one payoff matrix
+        key = ModelKey(agent_id, 0)
+        self.model_pool.push(key, init_params)
+        self.hyper_mgr.register(key, hyper)
+        gm.add_player(key)
+        self.agents[agent_id] = LearningAgent(agent_id, key, gm)
+        if seed_into_pool:
+            # the seed policy is a valid opponent from the start
+            frozen_seed = ModelKey(agent_id, 0)
+            if frozen_seed not in self.frozen_pool:
+                self.frozen_pool.append(frozen_seed)
+        return key
+
+    # -- actor-facing API -----------------------------------------------------
+    def request_task(self, agent_id: str = "main") -> Task:
+        ag = self.agents[agent_id]
+        opponents = [k for k in self.frozen_pool if k in self.model_pool]
+        opp = ag.game_mgr.get_opponent(ag.current, opponents)
+        return Task(learner_key=ag.current, opponent_keys=(opp,),
+                    hyperparam=self.hyper_mgr.get(ag.current),
+                    task_id=next(self._task_ids))
+
+    def report_result(self, result: MatchResult):
+        self._results.append(result)
+        for key in (result.learner_key, *result.opponent_keys):
+            if key not in self.payoff:
+                self.payoff.add_model(key)
+        ag = self.agents.get(result.learner_key.agent_id)
+        (ag.game_mgr if ag else GameMgr(payoff=self.payoff)).on_match_result(result)
+
+    # -- learner-facing API ------------------------------------------------------
+    def request_learner_task(self, agent_id: str = "main") -> Task:
+        return self.request_task(agent_id)
+
+    def end_learning_period(self, agent_id: str, params: Any) -> ModelKey:
+        """Freeze theta, mint theta_{v+1} (same lineage), PBT if enabled."""
+        ag = self.agents[agent_id]
+        old = ag.current
+        self.model_pool.push(old, params)       # final weights
+        self.model_pool.freeze(old)
+        if old not in self.frozen_pool:
+            self.frozen_pool.append(old)
+        new = ModelKey(agent_id, old.version + 1)
+        self.model_pool.push(new, params)       # warm start from theta
+        self.hyper_mgr.inherit(new, old)
+        if self.pbt:
+            self._maybe_pbt(agent_id, new)
+        ag.game_mgr.add_player(new, parent=old)
+        if new not in self.payoff:
+            self.payoff.add_model(new)
+        ag.current = new
+        ag.frozen_count += 1
+        return new
+
+    def _maybe_pbt(self, agent_id: str, new_key: ModelKey):
+        """If this agent's Elo trails the best learning agent by >100, copy
+        the leader's params+hypers (exploit) and perturb (explore)."""
+        if len(self.agents) < 2:
+            self.hyper_mgr.explore(new_key)
+            return
+        elos = {aid: self.payoff.elo.get(a.current, self.payoff.init_elo)
+                for aid, a in self.agents.items()}
+        best = max(elos, key=elos.get)
+        if best != agent_id and elos[best] - elos[agent_id] > 100.0:
+            leader = self.agents[best]
+            self.model_pool.push(new_key, self.model_pool.pull(leader.current))
+            self.hyper_mgr.exploit_explore(new_key, leader.current)
+        else:
+            self.hyper_mgr.explore(new_key)
+
+    # -- introspection ---------------------------------------------------------
+    def league_state(self) -> dict:
+        return {
+            "frozen_pool": [str(k) for k in self.frozen_pool],
+            "agents": {aid: str(a.current) for aid, a in self.agents.items()},
+            "elo": {str(k): v for k, v in self.payoff.elo.items()},
+            "num_results": len(self._results),
+        }

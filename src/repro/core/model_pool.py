@@ -1,0 +1,65 @@
+"""ModelPool: the concrete neural-net parameter store (§3.2).
+
+The paper runs M_M replicas behind a load balancer with everything
+in-memory for instantaneous read/write. On one host that collapses to a
+dict, but the API is the paper's: `pull`/`push` for the current learning
+params (Actors pull theta and phi periodically; the Learner pushes theta),
+`freeze` at learning-period end (theta joins the opponent pool M), and a
+replica-pick hook preserved so the microservice semantics stay visible.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Any, Dict, Optional
+
+from repro.core.types import ModelKey
+
+
+class ModelPool:
+    def __init__(self, num_replicas: int = 1, seed: int = 0):
+        self.num_replicas = max(1, num_replicas)
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self._params: Dict[ModelKey, Any] = {}
+        self._frozen: Dict[ModelKey, bool] = {}
+        self._step: Dict[ModelKey, int] = {}
+        self.read_counts = [0] * self.num_replicas  # replica load-balance bookkeeping
+
+    def _pick_replica(self) -> int:
+        r = self._rng.randrange(self.num_replicas)
+        self.read_counts[r] += 1
+        return r
+
+    # -- API (paper protocol) -------------------------------------------------
+    def push(self, key: ModelKey, params: Any, step: int = 0) -> None:
+        with self._lock:
+            if self._frozen.get(key):
+                raise ValueError(f"model {key} is frozen; push refused")
+            self._params[key] = params
+            self._step[key] = step
+
+    def pull(self, key: ModelKey) -> Any:
+        self._pick_replica()
+        with self._lock:
+            return self._params[key]
+
+    def pull_attr(self, key: ModelKey) -> dict:
+        with self._lock:
+            return {"step": self._step.get(key, 0), "frozen": self._frozen.get(key, False)}
+
+    def freeze(self, key: ModelKey) -> None:
+        with self._lock:
+            if key not in self._params:
+                raise KeyError(key)
+            self._frozen[key] = True
+
+    def keys(self):
+        with self._lock:
+            return list(self._params)
+
+    def __contains__(self, key: ModelKey):
+        return key in self._params
+
+    def __len__(self):
+        return len(self._params)

@@ -1,0 +1,103 @@
+"""Payoff matrix + Elo ratings over the model pool (GameMgr's state, §3.2).
+
+Maintains win/tie/loss counts for every (row=learner lineage model,
+col=opponent model) pair, exposes win-rates (ties = half win, as the paper's
+Pommerman evaluation counts them) and incremental Elo updates used by
+PBT/Elo-matched opponent sampling [Jaderberg et al. 2019].
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.types import MatchResult, ModelKey
+
+
+class PayoffMatrix:
+    def __init__(self, elo_k: float = 16.0, init_elo: float = 1200.0):
+        self.models: List[ModelKey] = []
+        self._index: Dict[ModelKey, int] = {}
+        self._wins = np.zeros((0, 0), np.float64)
+        self._ties = np.zeros((0, 0), np.float64)
+        self._losses = np.zeros((0, 0), np.float64)
+        self.elo: Dict[ModelKey, float] = {}
+        self.elo_k = elo_k
+        self.init_elo = init_elo
+
+    # -- pool growth ---------------------------------------------------------
+    def add_model(self, key: ModelKey, init_elo: float | None = None):
+        if key in self._index:
+            return
+        self._index[key] = len(self.models)
+        self.models.append(key)
+        n = len(self.models)
+        for name in ("_wins", "_ties", "_losses"):
+            m = getattr(self, name)
+            grown = np.zeros((n, n), np.float64)
+            grown[: m.shape[0], : m.shape[1]] = m
+            setattr(self, name, grown)
+        self.elo[key] = self.init_elo if init_elo is None else init_elo
+
+    def __contains__(self, key: ModelKey):
+        return key in self._index
+
+    def __len__(self):
+        return len(self.models)
+
+    # -- updates ---------------------------------------------------------------
+    def record(self, result: MatchResult):
+        i = self._index[result.learner_key]
+        for opp in result.opponent_keys:
+            j = self._index[opp]
+            if result.outcome > 0:
+                self._wins[i, j] += 1
+                self._losses[j, i] += 1
+            elif result.outcome < 0:
+                self._losses[i, j] += 1
+                self._wins[j, i] += 1
+            else:
+                self._ties[i, j] += 1
+                self._ties[j, i] += 1
+            self._update_elo(result.learner_key, opp, result.outcome)
+
+    def _update_elo(self, a: ModelKey, b: ModelKey, outcome: int):
+        ra, rb = self.elo[a], self.elo[b]
+        ea = 1.0 / (1.0 + 10 ** ((rb - ra) / 400.0))
+        sa = 0.5 + 0.5 * outcome
+        self.elo[a] = ra + self.elo_k * (sa - ea)
+        self.elo[b] = rb + self.elo_k * ((1.0 - sa) - (1.0 - ea))
+
+    # -- queries -----------------------------------------------------------------
+    def games(self, a: ModelKey, b: ModelKey) -> float:
+        i, j = self._index[a], self._index[b]
+        return self._wins[i, j] + self._ties[i, j] + self._losses[i, j]
+
+    def winrate(self, a: ModelKey, b: ModelKey, prior: float = 0.5,
+                prior_games: float = 2.0) -> float:
+        """P(a beats b), ties half-counted, with a Beta-style prior so unseen
+        pairs look 50/50 instead of 0 or NaN."""
+        i, j = self._index[a], self._index[b]
+        w = self._wins[i, j] + 0.5 * self._ties[i, j] + prior * prior_games
+        n = self.games(a, b) + prior_games
+        return float(w / n)
+
+    def winrates_vs(self, a: ModelKey, opponents: Sequence[ModelKey]) -> np.ndarray:
+        return np.array([self.winrate(a, o) for o in opponents])
+
+    def matrix(self) -> np.ndarray:
+        """Full win-rate matrix (rows beat cols)."""
+        n = len(self.models)
+        out = np.full((n, n), 0.5)
+        for i, a in enumerate(self.models):
+            for j, b in enumerate(self.models):
+                if i != j and self.games(a, b) > 0:
+                    out[i, j] = self.winrate(a, b)
+        return out
+
+    def to_state(self) -> dict:
+        return {
+            "models": [str(m) for m in self.models],
+            "wins": self._wins, "ties": self._ties, "losses": self._losses,
+            "elo": {str(k): v for k, v in self.elo.items()},
+        }

@@ -1,0 +1,58 @@
+"""League-protocol datatypes — the inter-module message contract (§3.3).
+
+In the paper these are the private ZeroMQ RPC messages between LeagueMgr,
+Actor, Learner and ModelPool; here they are the same protocol as dataclasses
+passed over in-process queues (DESIGN.md §2, transport adaptation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+Outcome = int  # +1 win, 0 tie, -1 loss (from the learning agent's perspective)
+
+
+@dataclass(frozen=True)
+class ModelKey:
+    """Identifies a frozen (or currently-learning) policy in the pool."""
+    agent_id: str          # which learning agent produced it ("main", "exploiter:0", ...)
+    version: int           # freeze counter within that agent's lineage
+
+    def __str__(self):
+        return f"{self.agent_id}:{self.version:04d}"
+
+
+@dataclass
+class Hyperparam:
+    """Per-model hyperparameters the HyperMgr manages (and PBT perturbs)."""
+    learning_rate: float = 3e-4
+    gamma: float = 0.99
+    lam: float = 0.95
+    entropy_coef: float = 0.01
+    clip_eps: float = 0.2
+    # opponent-sampling knobs
+    elo_sigma: float = 200.0        # Gaussian Elo-matching variance (PBT/Quake-III)
+    pfsp_weighting: str = "squared"  # 'linear' | 'squared' | 'variance'
+
+    def to_dict(self) -> Dict:
+        return dict(self.__dict__)
+
+
+@dataclass(frozen=True)
+class Task:
+    """What LeagueMgr hands to an Actor (and, consistently, to the Learner):
+    who learns, against whom, with which hyperparameters."""
+    learner_key: ModelKey
+    opponent_keys: Tuple[ModelKey, ...]   # >=1; FSP extends to multi-opponent
+    hyperparam: Hyperparam
+    task_id: int = 0
+
+
+@dataclass(frozen=True)
+class MatchResult:
+    """Episode outcome reported by an Actor at episode end."""
+    learner_key: ModelKey
+    opponent_keys: Tuple[ModelKey, ...]
+    outcome: Outcome
+    episode_len: int = 0
+    info: Optional[Dict] = None

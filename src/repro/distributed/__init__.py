@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (
+    param_shardings, batch_shardings, state_shardings, data_axes,
+)

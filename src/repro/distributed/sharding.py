@@ -1,0 +1,187 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Baseline layout (DESIGN.md §5) on mesh (data=16, model=16) [+ pod=2]:
+  - batch over ('pod','data') — trajectory/data parallelism (M_L learners)
+  - tensor parallelism over 'model': attention q-heads / FFN hidden / MoE
+    experts / vocab
+  - FSDP over 'data' for the big 2D weights (the >=100B archs don't fit
+    replicated): the weight's contraction dim shards over 'data' and GSPMD
+    all-gathers/reduce-scatters around each use — exactly the ZeRO-3
+    pattern, which here replaces the paper's Horovod full allreduce.
+
+Every rule checks divisibility and drops the axis when it doesn't divide
+(gemma2's 8 q-heads vs model=16 -> heads replicated; hubert's vocab 504 ->
+head replicated) so every (arch x shape x mesh) lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+_HINT_MESH: Mesh | None = None
+
+
+def set_hint_mesh(mesh: Mesh | None):
+    """Register the mesh that in-graph `shard_hint`s resolve against (the
+    `with mesh:` context is not introspectable at trace time). Called by the
+    dry-run step factory and the distributed train driver; leaving it None
+    (CPU tests, single device) makes every hint a no-op."""
+    global _HINT_MESH
+    _HINT_MESH = mesh
+
+
+def shard_hint(x, spec_pref):
+    """Best-effort in-graph sharding constraint (used inside model code, e.g.
+    the MoE dispatch — EXPERIMENTS.md §Perf-2). `spec_pref` holds one entry
+    per dim: None | axis name | tuple of axis names; entries are filtered by
+    the axes present in the hint mesh and by divisibility."""
+    m = _HINT_MESH
+    if m is None:
+        return x
+    sizes = dict(m.shape)
+    spec = []
+    for dim, pref in zip(x.shape, spec_pref):
+        if pref is None:
+            spec.append(None)
+            continue
+        axes = (pref,) if isinstance(pref, str) else tuple(pref)
+        axes = tuple(a for a in axes if a in sizes)
+        n = int(np.prod([sizes[a] for a in axes])) if axes else 1
+        spec.append(axes if (axes and dim % n == 0) else None)
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(m, P(*[a if a is None or isinstance(a, str)
+                                    else tuple(a) for a in spec])))
+    except Exception:
+        return x
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh, shape, wanted):
+    """Keep only axes that divide their dim; wanted: tuple of (axis|None)."""
+    out = []
+    for dim, ax in zip(shape, wanted):
+        if ax is None:
+            out.append(None)
+        elif dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _rule(mesh, name: str, shape, fsdp: bool, stacked: bool):
+    """PartitionSpec for one param leaf. `stacked` = leading layer-stack dim."""
+    dp = data_axes(mesh)
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    nd = len(core)
+
+    def spec(*axes):
+        return _fit(mesh, shape, lead + tuple(axes))
+
+    d_ax = dp if fsdp else None     # contraction-dim FSDP axis
+
+    if nd == 3 and ("moe/up" in name or "moe/gate" in name):
+        return spec("model", d_ax, None)          # (E, d, ff)
+    if nd == 3 and "moe/down" in name:
+        return spec("model", None, d_ax)          # (E, ff, d)
+    if "embed/table" in name:
+        return _fit(mesh, shape, ("model", dp if fsdp else None))
+    if nd == 2 and "lm_head" in name:
+        return spec(d_ax, "model")
+    if nd == 2:
+        # column-parallel in-projections, row-parallel out-projections
+        if any(t in name for t in ("/wo/", "down")) or name.endswith("wo/w"):
+            return spec("model", d_ax)
+        if any(t in name for t in ("wq", "wk", "wv", "up", "gate", "wr",
+                                   "wg", "in_proj", "x_proj", "lora_a",
+                                   "router")):
+            return spec(d_ax, "model")
+        return spec(d_ax, "model")
+    # 1D/scalars and anything exotic: replicated
+    return P(*((None,) * len(shape)))
+
+
+def param_shardings(param_shapes: Any, cfg, mesh: Mesh, *, fsdp: bool = True):
+    """param_shapes: pytree of ShapeDtypeStruct (jax.eval_shape(init_params)).
+    Block stacks (params['blocks'], 'dense_prefix') have a leading repeat dim.
+    Returns a pytree of NamedSharding."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        name = _path_str(path)
+        stacked = name.startswith(("blocks/", "dense_prefix/"))
+        spec = _rule(mesh, name, leaf.shape, fsdp, stacked)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_shapes: Any, mesh: Mesh):
+    """Leading dim = global batch -> shard over ('pod','data') when it
+    divides (long_500k's batch=1 stays replicated)."""
+    dp = data_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = _fit(mesh, leaf.shape, (dp,) + (None,) * (leaf.ndim - 1))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def state_shardings(state_shapes: Any, cfg, mesh: Mesh,
+                    *, shard_cache_len: bool = False):
+    """Decode-state shardings. KV caches are (R, B, W, KV, hd): batch over
+    data axes; KV heads over 'model' when divisible, else optionally the
+    cache length W over 'model' (`shard_cache_len` — the context-parallel
+    variant), else replicated on 'model'."""
+    dp = data_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    out = []
+    for path, leaf in flat:
+        name = _path_str(path)
+        if leaf.ndim == 5 and ("/k" in name or "/v" in name):
+            r, b, w, kv, hd = leaf.shape
+            if kv % mesh.shape["model"] == 0:
+                spec = _fit(mesh, leaf.shape, (None, dp, None, "model", None))
+            elif shard_cache_len:
+                spec = _fit(mesh, leaf.shape, (None, dp, "model", None, None))
+            else:
+                spec = _fit(mesh, leaf.shape, (None, dp, None, None, None))
+        elif "tm_S" in name and leaf.ndim == 4:      # rwkv state (R,B,H,hs,hs)->4 after stack? keep general
+            spec = _fit(mesh, leaf.shape, (None, dp, "model", None))
+        elif "tm_S" in name and leaf.ndim == 5:
+            spec = _fit(mesh, leaf.shape, (None, dp, "model", None, None))
+        elif "ssm" in name and leaf.ndim == 4:        # mamba h (R,B,di,N)
+            spec = _fit(mesh, leaf.shape, (None, dp, "model", None))
+        elif "conv" in name and leaf.ndim == 4:       # conv buf (R,B,K-1,di)
+            spec = _fit(mesh, leaf.shape, (None, dp, None, "model"))
+        elif leaf.ndim >= 2:
+            spec = _fit(mesh, leaf.shape, (None, dp) + (None,) * (leaf.ndim - 2))
+        elif leaf.ndim == 1:
+            spec = _fit(mesh, leaf.shape, (dp,))
+        else:
+            spec = P()
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

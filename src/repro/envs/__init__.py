@@ -1,0 +1,2 @@
+from repro.envs.base import EnvSpec, MultiAgentEnv, ENVS, make_env
+from repro.envs import matrix_games, pommerman_lite, duel  # noqa: F401 (registration)

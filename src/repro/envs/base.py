@@ -1,0 +1,45 @@
+"""Pure-JAX multi-agent environment protocol (the Arena/Env role, §3.2, §3.5).
+
+The paper requires gym-compatible multi-agent envs:
+    l_obs = env.reset();  l_obs, l_rwd, done, info = env.step(l_act)
+Our functional equivalent (so envs jit/vmap/scan on-device — the TPU-native
+actor adaptation, DESIGN.md §2):
+
+    state, obs = env.reset(rng)
+    state, obs, rewards, done, info = env.step(state, actions, rng)
+
+obs is (num_agents, obs_len) int32 *tokens* — every env tokenizes its
+observation so any assigned policy backbone consumes it directly.
+rewards is (num_agents,) fp32; done is a scalar bool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Tuple
+
+from repro.utils.registry import Registry
+
+
+@dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    num_agents: int
+    obs_len: int            # tokens per observation
+    num_actions: int
+    max_steps: int
+    obs_vocab: int          # obs token ids live in [0, obs_vocab)
+    team_size: int = 1      # >1: consecutive slots form teams (Pommerman Team mode)
+    zero_sum: bool = True
+
+
+class MultiAgentEnv(NamedTuple):
+    spec: EnvSpec
+    reset: Callable      # rng -> (state, obs)
+    step: Callable       # (state, actions, rng) -> (state, obs, rewards, done, info)
+
+
+ENVS: Registry = Registry("env")
+
+
+def make_env(name: str, **kw) -> MultiAgentEnv:
+    return ENVS.get(name)(**kw)

@@ -1,0 +1,125 @@
+"""Duel: ViZDoom CIG-track-1-like FFA arena (paper §4.2 analogue).
+
+8-player FFA reduced to 4 agents on a 9x9 grid with pillars. Agents face a
+direction, move forward, turn, or fire; a shot travels along the facing line
+(range 5, blocked by pillars) and frags the first agent hit, who respawns at
+the cell farthest from the shooter. Score = FRAG (kills; no rocket splash =>
+no suicides). Episode ends after `max_steps`; the info carries per-agent
+FRAGs so evaluation ranks players exactly like the CIG protocol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import ENVS, EnvSpec, MultiAgentEnv
+
+N = 9
+RANGE = 5
+MAX_STEPS = 64
+FACINGS = jnp.array([[-1, 0], [0, 1], [1, 0], [0, -1]])  # N,E,S,W
+SPAWNS = jnp.array([[0, 0], [0, N - 1], [N - 1, 0], [N - 1, N - 1]])
+
+PILLARS = jnp.zeros((N, N), bool).at[3, 3].set(True).at[3, 5].set(True) \
+    .at[5, 3].set(True).at[5, 5].set(True).at[4, 4].set(True)
+
+# actions: 0 idle, 1 forward, 2 turn-left, 3 turn-right, 4 fire
+VIEW = 5
+
+
+def make_duel(frag_reward: float = 1.0, hit_penalty: float = 0.5) -> MultiAgentEnv:
+    spec = EnvSpec(name="duel", num_agents=4, obs_len=VIEW * VIEW + 2,
+                   num_actions=5, max_steps=MAX_STEPS, obs_vocab=16,
+                   zero_sum=False)
+
+    def reset(rng):
+        state = {"pos": SPAWNS, "facing": jnp.array([2, 2, 0, 0]),
+                 "frags": jnp.zeros((4,), jnp.int32), "t": jnp.int32(0)}
+        return state, _obs(state)
+
+    def _obs(state):
+        half = VIEW // 2
+        rows = jnp.arange(VIEW) - half
+        obs = []
+        for i in range(4):
+            r0, c0 = state["pos"][i, 0], state["pos"][i, 1]
+            rr = r0 + rows[:, None]
+            cc = c0 + rows[None, :]
+            inb = (rr >= 0) & (rr < N) & (cc >= 0) & (cc < N)
+            rrc, ccc = jnp.clip(rr, 0, N - 1), jnp.clip(cc, 0, N - 1)
+            cell = jnp.where(PILLARS[rrc, ccc], 1, 0)
+            for j in range(4):
+                here = (rr == state["pos"][j, 0]) & (cc == state["pos"][j, 1])
+                cell = jnp.where(here, 4 if j == i else 6, cell)
+            cell = jnp.where(inb, cell, 7)
+            obs.append(jnp.concatenate([
+                cell.reshape(-1),
+                (8 + state["facing"][i])[None],
+                (12 + jnp.clip(state["frags"][i], 0, 3))[None],
+            ]))
+        return jnp.stack(obs)
+
+    def step(state, actions, rng):
+        pos, facing = state["pos"], state["facing"]
+        # turns
+        facing = jnp.where(actions == 2, (facing - 1) % 4, facing)
+        facing = jnp.where(actions == 3, (facing + 1) % 4, facing)
+        # forward moves (lower index wins conflicts)
+        new_pos = pos
+        for i in range(4):
+            cand = jnp.clip(pos[i] + FACINGS[facing[i]], 0, N - 1)
+            free = ~PILLARS[cand[0], cand[1]]
+            occ = jnp.bool_(False)
+            for j in range(4):
+                occ = occ | (jnp.all(pos[j] == cand) & (j != i))
+            for j in range(i):
+                occ = occ | jnp.all(new_pos[j] == cand)
+            ok = (actions[i] == 1) & free & ~occ
+            new_pos = new_pos.at[i].set(jnp.where(ok, cand, pos[i]))
+        pos = new_pos
+
+        # fire: first agent on facing ray within RANGE, pillars block
+        rewards = jnp.zeros((4,))
+        frags = state["frags"]
+        hit_by = jnp.full((4,), -1, jnp.int32)   # victim -> shooter
+        for i in range(4):
+            d = FACINGS[facing[i]]
+            blocked = jnp.bool_(False)
+            already_hit = jnp.bool_(False)
+            for k in range(1, RANGE + 1):
+                rr = pos[i, 0] + d[0] * k
+                cc = pos[i, 1] + d[1] * k
+                inb = (rr >= 0) & (rr < N) & (cc >= 0) & (cc < N)
+                rrc, ccc = jnp.clip(rr, 0, N - 1), jnp.clip(cc, 0, N - 1)
+                blocked = blocked | (inb & PILLARS[rrc, ccc])
+                for j in range(4):
+                    if j == i:
+                        continue
+                    here = inb & jnp.all(pos[j] == jnp.stack([rrc, ccc]))
+                    hit = (actions[i] == 4) & here & ~blocked & ~already_hit
+                    hit_by = hit_by.at[j].set(jnp.where(hit & (hit_by[j] < 0), i, hit_by[j]))
+                    already_hit = already_hit | hit
+                    blocked = blocked | here  # bodies block the ray
+
+        for j in range(4):
+            was_hit = hit_by[j] >= 0
+            shooter = jnp.clip(hit_by[j], 0, 3)
+            frags = frags.at[shooter].add(was_hit.astype(jnp.int32))
+            rewards = rewards.at[shooter].add(jnp.where(was_hit, frag_reward, 0.0))
+            rewards = rewards.at[j].add(jnp.where(was_hit, -hit_penalty, 0.0))
+            # respawn victim at the spawn farthest from the shooter
+            dists = jnp.sum(jnp.abs(SPAWNS - pos[shooter][None]), axis=1)
+            pos = pos.at[j].set(jnp.where(was_hit, SPAWNS[jnp.argmax(dists)], pos[j]))
+
+        t = state["t"] + 1
+        done = t >= MAX_STEPS
+        new_state = {"pos": pos, "facing": facing, "frags": frags, "t": t}
+        best = jnp.argmax(frags)
+        outcome = jnp.where(done & (best == 0), 1, jnp.where(done, -1, 0))
+        return new_state, _obs(new_state), rewards, done, {"frags": frags,
+                                                           "outcome": outcome}
+
+    return MultiAgentEnv(spec, reset, step)
+
+
+ENVS.register("duel", make_duel)

@@ -1,0 +1,57 @@
+"""Matrix games: Rock-Paper-Scissors and friends (§3.1's motivating example).
+
+`rps` is iterated RPS with the opponent's last move in the observation —
+rich enough that independent RL visibly circulates (pure-rock -> pure-paper
+-> pure-scissors) while FSP converges to the uniform NE; `examples/rps_nash.py`
+reproduces that claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import ENVS, EnvSpec, MultiAgentEnv
+
+# payoff for (my_action, opp_action): rows rock/paper/scissors
+RPS_PAYOFF = jnp.array([
+    [0.0, -1.0, 1.0],
+    [1.0, 0.0, -1.0],
+    [-1.0, 1.0, 0.0],
+])
+
+# biased variant: scissors-wins pay double (NE no longer uniform)
+RPS_BIASED = jnp.array([
+    [0.0, -1.0, 1.0],
+    [1.0, 0.0, -2.0],
+    [-1.0, 2.0, 0.0],
+])
+
+
+def _make_rps(payoff, name: str, episode_len: int = 8) -> MultiAgentEnv:
+    spec = EnvSpec(name=name, num_agents=2, obs_len=2, num_actions=3,
+                   max_steps=episode_len, obs_vocab=8)
+
+    def reset(rng):
+        state = {"t": jnp.int32(0), "last": jnp.full((2,), 3, jnp.int32)}
+        obs = _obs(state)
+        return state, obs
+
+    def _obs(state):
+        # per agent: [opponent_last_action_token, step_parity]
+        opp_last = state["last"][::-1]
+        parity = jnp.broadcast_to(state["t"] % 2 + 4, (2,))
+        return jnp.stack([opp_last, parity], axis=1)
+
+    def step(state, actions, rng):
+        a0, a1 = actions[0], actions[1]
+        r0 = payoff[a0, a1]
+        state = {"t": state["t"] + 1, "last": actions}
+        done = state["t"] >= episode_len
+        rewards = jnp.stack([r0, -r0])
+        return state, _obs(state), rewards, done, {}
+
+    return MultiAgentEnv(spec, reset, step)
+
+
+ENVS.register("rps", lambda episode_len=8: _make_rps(RPS_PAYOFF, "rps", episode_len))
+ENVS.register("rps_biased", lambda episode_len=8: _make_rps(RPS_BIASED, "rps_biased", episode_len))

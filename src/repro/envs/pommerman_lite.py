@@ -1,0 +1,210 @@
+"""Pommerman-lite: 2v2 Team-mode bomber gridworld (paper §4.3 analogue).
+
+Faithful to the benchmark's structure at reduced scale: 9x9 board with rigid
+walls on the even lattice + random wooden walls, 4 agents in two diagonal
+teams, bombs with timers/blast-cross/chain detonation, fogged 5x5 local
+views (Team mode partial observability), team-zero-sum terminal reward,
+800->100 step tie limit. Fully jit/vmap-able: fixed-size bomb slots, static
+unrolls over the 4 agents.
+
+Cell codes: 0 empty, 1 rigid, 2 wood. Obs tokens: cell codes 0-2, 3 bomb,
+4 self, 5 teammate, 6 enemy, 7 out-of-bounds, 8+ammo (ammo token last).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import ENVS, EnvSpec, MultiAgentEnv
+
+N = 9                 # board side
+MAX_BOMBS = 8
+BOMB_TIMER = 4
+BLAST = 2             # blast radius (cross)
+VIEW = 5              # local view side
+MAX_STEPS = 100
+
+# teams: diagonal as in Pommerman (0,2) vs (1,3) -> we reorder slots so
+# consecutive slots are teammates: slots (0,1)=team A corners TL/BR,
+# slots (2,3)=team B corners TR/BL.
+SPAWNS = jnp.array([[0, 0], [N - 1, N - 1], [0, N - 1], [N - 1, 0]])
+TEAM = (0, 0, 1, 1)   # python constants: used for STATIC obs codes under jit
+MOVES = jnp.array([[0, 0], [-1, 0], [1, 0], [0, -1], [0, 1]])  # idle,U,D,L,R
+
+
+def _spawn_safe_mask():
+    """Cells that must stay clear so agents can always move off spawn."""
+    m = jnp.zeros((N, N), bool)
+    for r, c in [(0, 0), (N - 1, N - 1), (0, N - 1), (N - 1, 0)]:
+        for dr, dc in [(0, 0), (0, 1), (0, -1), (1, 0), (-1, 0)]:
+            rr, cc = r + dr, c + dc
+            if 0 <= rr < N and 0 <= cc < N:
+                m = m.at[rr, cc].set(True)
+    return m
+
+
+SAFE = _spawn_safe_mask()
+RIGID = (jnp.arange(N)[:, None] % 2 == 1) & (jnp.arange(N)[None, :] % 2 == 1)
+
+
+def make_pommerman_lite(wood_prob: float = 0.35, shaping: float = 0.05) -> MultiAgentEnv:
+    spec = EnvSpec(name="pommerman_lite", num_agents=4, obs_len=VIEW * VIEW + 1,
+                   num_actions=6, max_steps=MAX_STEPS, obs_vocab=16, team_size=2)
+
+    def reset(rng):
+        wood = (jax.random.uniform(rng, (N, N)) < wood_prob) & ~RIGID & ~SAFE
+        board = jnp.where(RIGID, 1, jnp.where(wood, 2, 0)).astype(jnp.int8)
+        state = {
+            "board": board,
+            "pos": SPAWNS,
+            "alive": jnp.ones((4,), bool),
+            "ammo": jnp.ones((4,), jnp.int32),
+            "bomb_pos": jnp.zeros((MAX_BOMBS, 2), jnp.int32),
+            "bomb_timer": jnp.full((MAX_BOMBS,), -1, jnp.int32),
+            "bomb_owner": jnp.zeros((MAX_BOMBS,), jnp.int32),
+            "t": jnp.int32(0),
+        }
+        return state, _obs(state)
+
+    def _cell_occupied(state, rc):
+        on_agent = jnp.any(jnp.all(state["pos"] == rc[None], axis=1) & state["alive"])
+        on_bomb = jnp.any(jnp.all(state["bomb_pos"] == rc[None], axis=1)
+                          & (state["bomb_timer"] >= 0))
+        return on_agent | on_bomb
+
+    def _obs(state):
+        board = state["board"]
+        bomb_map = jnp.zeros((N, N), bool)
+        for s in range(MAX_BOMBS):
+            live = state["bomb_timer"][s] >= 0
+            bomb_map = bomb_map.at[state["bomb_pos"][s, 0], state["bomb_pos"][s, 1]].max(live)
+        obs = []
+        half = VIEW // 2
+        rows = jnp.arange(VIEW) - half
+        for i in range(4):
+            r0, c0 = state["pos"][i, 0], state["pos"][i, 1]
+            rr = r0 + rows[:, None]
+            cc = c0 + rows[None, :]
+            inb = (rr >= 0) & (rr < N) & (cc >= 0) & (cc < N)
+            rrc = jnp.clip(rr, 0, N - 1)
+            ccc = jnp.clip(cc, 0, N - 1)
+            cell = board[rrc, ccc].astype(jnp.int32)
+            cell = jnp.where(bomb_map[rrc, ccc], 3, cell)
+            for j in range(4):
+                here = (rr == state["pos"][j, 0]) & (cc == state["pos"][j, 1]) & state["alive"][j]
+                code = 4 if j == i else (5 if TEAM[j] == TEAM[i] else 6)
+                cell = jnp.where(here, code, cell)
+            cell = jnp.where(inb, cell, 7)
+            ammo_tok = 8 + jnp.clip(state["ammo"][i], 0, 3)
+            obs.append(jnp.concatenate([cell.reshape(-1), ammo_tok[None]]))
+        return jnp.stack(obs)
+
+    def _blast_mask(state, timers):
+        """Cells covered by bombs whose timer hits 0 this step (with one round
+        of chain detonation)."""
+        board = state["board"]
+
+        def cross(rc):
+            m = jnp.zeros((N, N), bool)
+            r, c = rc[0], rc[1]
+            m = m.at[r, c].set(True)
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                blocked = jnp.bool_(False)
+                for k in range(1, BLAST + 1):
+                    rr, cc = r + dr * k, c + dc * k
+                    inb = (rr >= 0) & (rr < N) & (cc >= 0) & (cc < N)
+                    rrc, ccc = jnp.clip(rr, 0, N - 1), jnp.clip(cc, 0, N - 1)
+                    hit_rigid = inb & (board[rrc, ccc] == 1)
+                    place = inb & ~blocked & ~hit_rigid
+                    m = m.at[rrc, ccc].max(place)
+                    # wood stops further propagation (after being hit)
+                    blocked = blocked | hit_rigid | (inb & (board[rrc, ccc] == 2))
+            return m
+
+        exploding = timers == 0
+        blast = jnp.zeros((N, N), bool)
+        for s in range(MAX_BOMBS):
+            blast = blast | (cross(state["bomb_pos"][s]) & exploding[s])
+        # chain: bombs standing in the blast detonate too
+        chained = jnp.zeros((MAX_BOMBS,), bool)
+        for s in range(MAX_BOMBS):
+            on = blast[state["bomb_pos"][s, 0], state["bomb_pos"][s, 1]]
+            chained = chained.at[s].set(on & (timers[s] > 0))
+        for s in range(MAX_BOMBS):
+            blast = blast | (cross(state["bomb_pos"][s]) & chained[s])
+        exploded = exploding | chained
+        return blast, exploded
+
+    def step(state, actions, rng):
+        board = state["board"]
+        pos, alive, ammo = state["pos"], state["alive"], state["ammo"]
+
+        # -- movement (lower slot index wins conflicts) ------------------------
+        new_pos = pos
+        for i in range(4):
+            delta = MOVES[jnp.clip(actions[i], 0, 4)]
+            cand = jnp.clip(pos[i] + delta, 0, N - 1)
+            free = (board[cand[0], cand[1]] == 0) & ~_cell_occupied(state, cand)
+            taken = jnp.bool_(False)
+            for j in range(i):
+                taken = taken | jnp.all(new_pos[j] == cand)
+            ok = alive[i] & (actions[i] >= 1) & (actions[i] <= 4) & free & ~taken
+            new_pos = new_pos.at[i].set(jnp.where(ok, cand, pos[i]))
+        pos = new_pos
+
+        # -- bomb placement ------------------------------------------------------
+        bomb_pos, bomb_timer, bomb_owner = (state["bomb_pos"], state["bomb_timer"],
+                                            state["bomb_owner"])
+        for i in range(4):
+            wants = alive[i] & (actions[i] == 5) & (ammo[i] > 0)
+            occupied = jnp.any(jnp.all(bomb_pos == state["pos"][i][None], axis=1)
+                               & (bomb_timer >= 0))
+            free_slots = bomb_timer < 0
+            slot = jnp.argmax(free_slots)
+            can = wants & ~occupied & jnp.any(free_slots)
+            bomb_pos = bomb_pos.at[slot].set(jnp.where(can, state["pos"][i], bomb_pos[slot]))
+            bomb_timer = bomb_timer.at[slot].set(jnp.where(can, BOMB_TIMER, bomb_timer[slot]))
+            bomb_owner = bomb_owner.at[slot].set(jnp.where(can, i, bomb_owner[slot]))
+            ammo = ammo.at[i].add(-can.astype(jnp.int32))
+
+        # -- timers & explosions ---------------------------------------------------
+        bomb_timer = jnp.where(bomb_timer >= 0, bomb_timer - 1, bomb_timer)
+        blast, exploded = _blast_mask({**state, "bomb_pos": bomb_pos}, bomb_timer)
+        # return ammo to owners, clear exploded bombs
+        for s in range(MAX_BOMBS):
+            ammo = ammo.at[bomb_owner[s]].add(exploded[s].astype(jnp.int32))
+        bomb_timer = jnp.where(exploded, -1, bomb_timer)
+        # destroy wood
+        wood_destroyed = blast & (board == 2)
+        board = jnp.where(wood_destroyed, 0, board).astype(jnp.int8)
+        # kill agents in blast
+        killed = jnp.array([blast[pos[i, 0], pos[i, 1]] for i in range(4)]) & alive
+        alive = alive & ~killed
+
+        t = state["t"] + 1
+        team_alive = jnp.array([jnp.any(alive[:2]), jnp.any(alive[2:])])
+        done = (~team_alive[0]) | (~team_alive[1]) | (t >= MAX_STEPS)
+        win_a = team_alive[0] & ~team_alive[1]
+        win_b = team_alive[1] & ~team_alive[0]
+        terminal = (jnp.where(win_a, 1.0, 0.0) - jnp.where(win_b, 1.0, 0.0))
+        team_sign = jnp.array([1.0, 1.0, -1.0, -1.0])
+        rewards = jnp.where(done, terminal * team_sign, 0.0)
+        # shaping: wood destroyed credited to bomb owners (via exploded bombs)
+        if shaping:
+            n_wood = jnp.sum(wood_destroyed).astype(jnp.float32)
+            share = jnp.zeros((4,))
+            for s in range(MAX_BOMBS):
+                share = share.at[bomb_owner[s]].add(exploded[s].astype(jnp.float32))
+            share = share / jnp.maximum(jnp.sum(share), 1.0)
+            rewards = rewards + shaping * n_wood * share
+
+        new_state = {"board": board, "pos": pos, "alive": alive, "ammo": ammo,
+                     "bomb_pos": bomb_pos, "bomb_timer": bomb_timer,
+                     "bomb_owner": bomb_owner, "t": t}
+        outcome = jnp.where(win_a, 1, jnp.where(win_b, -1, 0))
+        return new_state, _obs(new_state), rewards, done, {"outcome": outcome}
+
+    return MultiAgentEnv(spec, reset, step)
+
+
+ENVS.register("pommerman_lite", make_pommerman_lite)

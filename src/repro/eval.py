@@ -1,0 +1,69 @@
+"""Evaluation harness: pit policies (learned or scripted) against each other
+in any bundled env — used by the paper-table benchmarks (Tables 1-2 FRAG
+ranking, Fig. 4 win-rate curves)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence
+
+import jax
+import numpy as np
+
+from repro.actors.policy import make_obs_policy
+from repro.envs.base import MultiAgentEnv
+
+
+def learned_policy_fn(cfg, num_actions, params, seed=0):
+    policy = make_obs_policy(cfg, num_actions)
+    act = jax.jit(policy.act)
+    rng_holder = {"rng": jax.random.PRNGKey(seed)}
+
+    def fn(obs, np_rng):
+        rng_holder["rng"], k = jax.random.split(rng_holder["rng"])
+        a, _, _ = act(params, k, jax.numpy.asarray(obs))
+        return np.asarray(a)
+
+    return fn
+
+
+def play_episodes(env: MultiAgentEnv, slot_policies: Sequence[Callable],
+                  episodes: int = 10, seed: int = 0) -> Dict:
+    """slot_policies[i](obs (1,L), np_rng) -> (1,) action for agent slot i.
+    Returns outcomes, per-slot reward sums, and env-specific info (frags)."""
+    assert len(slot_policies) == env.spec.num_agents
+    rng = jax.random.PRNGKey(seed)
+    np_rng = np.random.default_rng(seed)
+    step = jax.jit(env.step)
+    reset = jax.jit(env.reset)
+    outcomes, reward_sums, frags = [], [], []
+    for ep in range(episodes):
+        rng, k = jax.random.split(rng)
+        state, obs = reset(k)
+        done = False
+        rsum = np.zeros(env.spec.num_agents)
+        info = {}
+        t = 0
+        while not done and t < env.spec.max_steps + 1:
+            obs_np = np.asarray(obs)
+            acts = np.concatenate([
+                slot_policies[i](obs_np[i:i + 1], np_rng)
+                for i in range(env.spec.num_agents)])
+            rng, k = jax.random.split(rng)
+            state, obs, rew, done_, info = step(state, jax.numpy.asarray(acts), k)
+            rsum += np.asarray(rew)
+            done = bool(done_)
+            t += 1
+        outcomes.append(int(info.get("outcome", 0)))
+        reward_sums.append(rsum)
+        if "frags" in info:
+            frags.append(np.asarray(info["frags"]))
+    out = {"outcomes": np.array(outcomes),
+           "reward_sums": np.stack(reward_sums)}
+    if frags:
+        out["frags"] = np.stack(frags)
+    return out
+
+
+def winrate_vs(outcomes: np.ndarray) -> float:
+    """Ties half-counted, as the paper's Fig. 4 does."""
+    wins = (outcomes > 0).sum() + 0.5 * (outcomes == 0).sum()
+    return float(wins / len(outcomes))

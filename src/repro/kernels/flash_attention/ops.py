@@ -1,0 +1,60 @@
+"""Jit'd wrapper for the flash-attention kernel: padding to block multiples,
+GQA layout handling, and a custom_vjp whose backward pass recomputes through
+the memory-safe chunked reference (flash backward is a follow-up kernel;
+recompute-backward keeps training correct and HBM-light meanwhile)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention(q, k, v, scale, causal=True, window=0, cap=0.0,
+                    block_q=128, block_k=128, interpret=False):
+    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d) -> (B, H, Tq, d)."""
+    Tq, Tk = q.shape[2], k.shape[2]
+    bq = min(block_q, max(Tq, 8))
+    bk = min(block_k, max(Tk, 8))
+    qp = _pad_to(q, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    # padded q rows attend to real keys only (kv_len mask) and are sliced off.
+    o = flash_attention_fwd(qp, kp, vp, scale=scale, causal=causal,
+                            window=window, cap=cap, block_q=bq, block_k=bk,
+                            kv_len=Tk, interpret=interpret)
+    return o[:, :, :Tq]
+
+
+def _fwd(q, k, v, scale, causal, window, cap, block_q, block_k, interpret):
+    o = flash_attention(q, k, v, scale, causal, window, cap, block_q, block_k,
+                        interpret)
+    return o, (q, k, v)
+
+
+def _bwd(scale, causal, window, cap, block_q, block_k, interpret, res, g):
+    q, k, v = res
+
+    def f(q, k, v):
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, cap=cap)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

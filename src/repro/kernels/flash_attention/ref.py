@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, scale, causal=True, window=0, cap=0.0,
+                  kv_len=None):
+    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d). fp32 softmax, GQA by repeat."""
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qp = jnp.arange(Tq)[:, None]
+    kp = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if kv_len is not None:
+        mask &= kp < kv_len
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= qp - kp < window
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

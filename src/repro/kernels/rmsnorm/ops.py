@@ -1,0 +1,20 @@
+"""Jit wrapper: flatten leading dims, pad rows to the block multiple."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_p
+
+
+def rmsnorm(x, w, *, eps=1e-6, block_r=128, interpret=False):
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    R = x2.shape[0]
+    br = min(block_r, R)
+    pad = (-R) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    y = rmsnorm_p(x2, w, eps=eps, block_r=br, interpret=interpret)
+    return y[:R].reshape(shape)

@@ -1,0 +1,1 @@
+from repro.kernels.vtrace_scan.ops import reverse_discounted_scan

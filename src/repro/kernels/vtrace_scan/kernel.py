@@ -1,0 +1,54 @@
+"""Reverse discounted-scan kernel (TPU Pallas).
+
+The learner's "algorithm-specific terms" (paper §3.2: lambda-returns, GAE,
+V-trace) all reduce to one primitive:
+
+    y_t = delta_t + decay_t * y_{t+1},   y_T = init
+
+which is sequential in T but embarrassingly parallel in batch. TPU
+adaptation: tile the batch across the grid so each (block_b, T) tile sits in
+VMEM; the time recursion is a `fori_loop` over VMEM columns — lane-parallel
+across the batch tile (the VPU sees (block_b,) vectors), with zero HBM
+traffic beyond one read + one write per element. This is the kernelized
+form of what the paper's DataServer computes on CPU per minibatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scan_kernel(delta_ref, decay_ref, init_ref, y_ref, *, T):
+    carry = init_ref[...].astype(jnp.float32)              # (bb,)
+
+    def body(i, carry):
+        t = T - 1 - i
+        y = delta_ref[:, t].astype(jnp.float32) + decay_ref[:, t].astype(jnp.float32) * carry
+        y_ref[:, t] = y.astype(y_ref.dtype)
+        return y
+
+    jax.lax.fori_loop(0, T, body, carry)
+
+
+def reverse_discounted_scan_p(deltas, decays, init, *, block_b=8,
+                              interpret=False):
+    """deltas, decays: (B, T); init: (B,). Returns y: (B, T)."""
+    B, T = deltas.shape
+    assert B % block_b == 0
+
+    kernel = functools.partial(_scan_kernel, T=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+            pl.BlockSpec((block_b,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, T), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T), jnp.float32),
+        interpret=interpret,
+    )(deltas, decays, init)

@@ -1,0 +1,23 @@
+"""Jit wrapper: batch padding + dtype promotion for the reverse scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.vtrace_scan.kernel import reverse_discounted_scan_p
+
+
+def reverse_discounted_scan(deltas, decays, init=None, *, block_b=8,
+                            interpret=False):
+    B, T = deltas.shape
+    if init is None:
+        init = jnp.zeros((B,), jnp.float32)
+    bb = min(block_b, B)
+    pad = (-B) % bb
+    if pad:
+        deltas = jnp.pad(deltas, ((0, pad), (0, 0)))
+        decays = jnp.pad(decays, ((0, pad), (0, 0)))
+        init = jnp.pad(init, (0, pad))
+    y = reverse_discounted_scan_p(deltas, decays, init, block_b=bb,
+                                  interpret=interpret)
+    return y[:B]

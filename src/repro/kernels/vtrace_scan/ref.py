@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: reverse discounted scan via lax.scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reverse_discounted_scan_ref(deltas, decays, init):
+    """y_t = delta_t + decay_t * y_{t+1};  y beyond T-1 is `init`. (B, T)."""
+
+    def body(carry, xs):
+        d_t, g_t = xs
+        y = d_t + g_t * carry
+        return y, y
+
+    _, ys = jax.lax.scan(body, init.astype(jnp.float32),
+                         (deltas.T.astype(jnp.float32),
+                          decays.T.astype(jnp.float32)), reverse=True)
+    return ys.T

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): for every (arch x input-shape x mesh),
+`.lower().compile()` the real step function with production shardings and
+record memory/cost/collective analysis for the roofline (deliverable g).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.configs.base import INPUT_SHAPES  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import make_dryrun_step  # noqa: E402
+
+ASSIGNED = [
+    "qwen3-8b", "mistral-large-123b", "command-r-35b", "pixtral-12b",
+    "rwkv6-3b", "hubert-xlarge", "gemma2-2b", "kimi-k2-1t-a32b",
+    "qwen3-moe-235b-a22b", "hymba-1.5b",
+]
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred|"
+                       r"f8e4m3fn|f8e5m2)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dt: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the optimized HLO."""
+    per_op = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(?:-start|-done)?\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        if "-done(" in s:
+            continue  # counted at -start
+        # operand shapes: everything inside the call parens
+        call = s[s.index("("):]
+        shapes = _SHAPE_RE.findall(call)
+        b = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if b == 0:  # fall back to result shape
+            shapes = _SHAPE_RE.findall(s)
+            b = sum(_shape_bytes(dt, dims) for dt, dims in shapes[:1])
+        per_op[op] += b
+        counts[op] += 1
+    per_op_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {"total": sum(per_op.values()), **per_op, **per_op_counts}
+
+
+def _measure_shallow(cfg, shape, mesh, *, fsdp, shard_cache_len, remat,
+                     moe_ep=False):
+    """XLA cost analysis counts while-loop (scan) bodies ONCE, not x trips.
+    Measure 1-unit and 2-unit UNROLLED variants and extrapolate:
+        total = m(1) + (R_full - 1) * (m(2) - m(1)).
+    Exact for per-layer-homogeneous stacks (all assigned archs)."""
+    import dataclasses
+    u = len(cfg.layer_pattern)
+    fkd = cfg.moe.first_k_dense if cfg.moe else 0
+    r_full = (cfg.num_layers - fkd) // u
+    ms = []
+    for reps in (1, 2):
+        c = dataclasses.replace(cfg, num_layers=fkd + u * reps)
+        with mesh:
+            built = make_dryrun_step(c, shape, mesh, fsdp=fsdp,
+                                     shard_cache_len=shard_cache_len,
+                                     remat=remat, unroll=True, moe_ep=moe_ep)
+            compiled = jax.jit(built["fn"], in_shardings=built["in_shardings"],
+                               out_shardings=built["out_shardings"]
+                               ).lower(*built["args"]).compile()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            coll = collective_bytes(compiled.as_text())
+            ms.append({"flops": float(cost.get("flops", 0.0)),
+                       "bytes": float(cost.get("bytes accessed", 0.0)),
+                       "coll": coll})
+
+    def extrap(a, b):
+        return a + (r_full - 1) * (b - a)
+
+    out = {
+        "flops": extrap(ms[0]["flops"], ms[1]["flops"]),
+        "bytes": extrap(ms[0]["bytes"], ms[1]["bytes"]),
+        "collective_bytes": extrap(ms[0]["coll"]["total"], ms[1]["coll"]["total"]),
+        "per_unit_flops": ms[1]["flops"] - ms[0]["flops"],
+        "per_unit_coll": ms[1]["coll"]["total"] - ms[0]["coll"]["total"],
+        "units": r_full,
+        "coll_breakdown": {k: extrap(ms[0]["coll"][k], ms[1]["coll"][k])
+                           for k in _COLLECTIVES},
+    }
+    return out
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            fsdp: bool = True, shard_cache_len: bool = False,
+            remat: bool = True, measure: bool = True, moe_ep: bool = False,
+            verbose: bool = True) -> dict:
+    cfg = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": 512 if multi_pod else 256,
+           "fsdp": fsdp, "shard_cache_len": shard_cache_len, "remat": remat,
+           "moe_ep": moe_ep,
+           "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+    t0 = time.time()
+    try:
+        with mesh:
+            built = make_dryrun_step(cfg, shape, mesh, fsdp=fsdp,
+                                     shard_cache_len=shard_cache_len,
+                                     remat=remat, moe_ep=moe_ep)
+            if built["kind"] == "skip":
+                rec["status"] = "skip"
+                rec["reason"] = "encoder-only arch: no decode step (DESIGN.md)"
+                return rec
+            rec["kind"] = built["kind"]
+            lowered = jax.jit(built["fn"],
+                              in_shardings=built["in_shardings"],
+                              out_shardings=built["out_shardings"]
+                              ).lower(*built["args"])
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            rec["lower_s"] = round(t1 - t0, 1)
+            rec["compile_s"] = round(t2 - t1, 1)
+
+            try:
+                mem = compiled.memory_analysis()
+                rec["memory"] = {
+                    k: int(getattr(mem, k))
+                    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes", "generated_code_size_in_bytes")
+                    if hasattr(mem, k)}
+            except Exception as e:  # CPU backend may not support it
+                rec["memory"] = {"error": str(e)}
+
+            try:
+                cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):
+                    cost = cost[0]
+                rec["cost"] = {k: float(v) for k, v in cost.items()
+                               if isinstance(v, (int, float)) and
+                               (k in ("flops",) or k.startswith("bytes") or
+                                k.startswith("utilization") or "transcendentals" in k)}
+            except Exception as e:
+                rec["cost"] = {"error": str(e)}
+
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo)
+            rec["hlo_lines"] = hlo.count("\n")
+            if measure:
+                rec["measured"] = _measure_shallow(
+                    cfg, shape, mesh, fsdp=fsdp,
+                    shard_cache_len=shard_cache_len, remat=remat,
+                    moe_ep=moe_ep)
+            rec["status"] = "ok"
+            if verbose:
+                print(f"[dryrun] {arch} x {shape} x {rec['mesh']} "
+                      f"({rec['kind']}): OK lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s "
+                      f"flops={rec['cost'].get('flops', -1):.3e} "
+                      f"coll={rec['collectives']['total']:.3e}B")
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch} x {shape}: FAIL {rec['error'][:200]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--shard-cache-len", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="explicit shard_map expert parallelism (Perf-2)")
+    ap.add_argument("--no-measure", action="store_true",
+                    help="skip the 2-point unrolled cost measurement "
+                         "(multi-pod pass: roofline is single-pod only)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for a in archs:
+        for s in shapes:
+            rec = run_one(a, s, multi_pod=args.multi_pod,
+                          fsdp=not args.no_fsdp,
+                          shard_cache_len=args.shard_cache_len,
+                          remat=not args.no_remat,
+                          measure=not args.no_measure, moe_ep=args.moe_ep)
+            results.append(rec)
+            tag = f"{a}_{s}_{rec['mesh']}" + ("" if not args.shard_cache_len else "_scl") \
+                  + ("" if not args.no_fsdp else "_nofsdp") \
+                  + ("" if not args.moe_ep else "_ep")
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"/ {len(results)} pairs")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Cloud-native launcher: render the k8s spec for a distributed run (§3.4).
+
+The paper prepares one yml.jinja2 per training ("56 Learners, 8 InfServers,
+each Learner 1 GPU, every 7 Learners + 1 InfServer co-located...") and runs
+`render_template | kubectl apply -f -`. This module is that renderer,
+dependency-free: LeagueMgr/ModelPool/Learner/InfServer as Services, Actors
+as a ReplicaSet (auto-restart on env crashes per the k8s imperative
+semantics), nodeSelector co-location, all RL + league hyperparameters in
+the spec. On a TPU cloud the Learner block becomes a JobSet over the pod
+slice; the rendered spec is what `kubectl apply` would take.
+
+  PYTHONPATH=src python -m repro.launch.k8s --learners 56 --inf-servers 8 \
+      --actors-per-learner 16 | kubectl apply -f -   # (on a real cluster)
+"""
+from __future__ import annotations
+
+import argparse
+
+SERVICE_TMPL = """\
+---
+apiVersion: v1
+kind: Service
+metadata:
+  name: {signature}-{role}
+  labels: {{app: {signature}, role: {role}}}
+spec:
+  selector: {{app: {signature}, role: {role}}}
+  ports: [{{port: {port}, targetPort: {port}}}]
+---
+apiVersion: apps/v1
+kind: Deployment
+metadata:
+  name: {signature}-{role}
+spec:
+  replicas: {replicas}
+  selector: {{matchLabels: {{app: {signature}, role: {role}}}}}
+  template:
+    metadata: {{labels: {{app: {signature}, role: {role}}}}}
+    spec:
+      nodeSelector: {{pool: {node_pool}}}
+      containers:
+      - name: {role}
+        image: {image}
+        command: ["python", "-m", "{module}"]
+        args: {args}
+        resources:
+          requests: {{cpu: "{cpus}"{accel}}}
+          limits: {{cpu: "{cpus}"{accel}}}
+        env:
+        - {{name: LEAGUE_MGR_EP, value: "tcp://{signature}-league-mgr:9003"}}
+        - {{name: MODEL_POOL_EP, value: "tcp://{signature}-model-pool:9004"}}
+"""
+
+
+def render(*, signature="tleague", image="repro:latest", learners=8,
+           inf_servers=2, actors_per_learner=16, model_pools=2,
+           actor_cpus=4, learner_accel="google.com/tpu: 1",
+           env="pommerman_lite", arch="tleague-policy-s",
+           game_mgr="sp_pfsp", lr=3e-4):
+    common = dict(signature=signature, image=image)
+    blocks = []
+    blocks.append(SERVICE_TMPL.format(
+        role="league-mgr", port=9003, replicas=1, node_pool="cpu-highmem",
+        module="repro.launch.train",
+        args=f'["--env", "{env}", "--arch", "{arch}", "--game-mgr", "{game_mgr}", "--lr", "{lr}"]',
+        cpus=8, accel="", **common))
+    blocks.append(SERVICE_TMPL.format(
+        role="model-pool", port=9004, replicas=model_pools,
+        node_pool="cpu-highmem", module="repro.core.model_pool",
+        args="[]", cpus=8, accel="", **common))
+    blocks.append(SERVICE_TMPL.format(
+        role="learner", port=9005, replicas=learners, node_pool="tpu-v5e",
+        module="repro.launch.train", args='["--role", "learner"]',
+        cpus=16, accel=", " + learner_accel, **common))
+    blocks.append(SERVICE_TMPL.format(
+        role="inf-server", port=9006, replicas=inf_servers,
+        node_pool="tpu-v5e", module="repro.infserver.server", args="[]",
+        cpus=8, accel=", " + learner_accel, **common))
+    blocks.append(SERVICE_TMPL.format(
+        role="actor", port=9007, replicas=learners * actors_per_learner,
+        node_pool="cpu", module="repro.actors.actor", args="[]",
+        cpus=actor_cpus, accel="", **common))
+    return "".join(blocks)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--signature", default="tleague")
+    ap.add_argument("--learners", type=int, default=8)
+    ap.add_argument("--inf-servers", type=int, default=2)
+    ap.add_argument("--actors-per-learner", type=int, default=16)
+    ap.add_argument("--model-pools", type=int, default=2)
+    ap.add_argument("--env", default="pommerman_lite")
+    ap.add_argument("--arch", default="tleague-policy-s")
+    args = ap.parse_args()
+    print(render(signature=args.signature, learners=args.learners,
+                 inf_servers=args.inf_servers,
+                 actors_per_learner=args.actors_per_learner,
+                 model_pools=args.model_pools, env=args.env, arch=args.arch))
+
+
+if __name__ == "__main__":
+    main()

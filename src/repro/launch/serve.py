@@ -1,0 +1,88 @@
+"""Serving driver: prefill + autoregressive serve_step for any assigned
+arch (the InfServer data path at production layout; CPU-runnable on the
+reduced variants).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
+      --batch 4 --prompt-len 64 --new-tokens 16 [--sliding]
+
+On a pod, the same step functions lower under the production mesh with
+serving shardings (TP-only weights + length-sharded cache — the §Perf-1
+layout): see `repro.launch.steps.make_dryrun_step(..., fsdp=False,
+shard_cache_len=True)`.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import decode_step, init_params, prefill
+
+
+def serve(arch: str, *, smoke: bool = True, batch: int = 4,
+          prompt_len: int = 64, new_tokens: int = 16, sliding: bool = False,
+          temperature: float = 1.0, seed: int = 0, verbose: bool = True):
+    cfg = get_arch(arch)
+    if smoke:
+        cfg = cfg.smoke()
+    assert not cfg.encoder_only, "encoder-only archs have no decode step"
+    rng = jax.random.PRNGKey(seed)
+    params = init_params(rng, cfg)
+    toks = jax.random.randint(rng, (batch, prompt_len), 0, cfg.vocab_size)
+
+    window = 0
+    if sliding and cfg.family != "ssm":
+        window = cfg.long_context_window
+
+    t0 = time.perf_counter()
+    pf = jax.jit(lambda p, b: prefill(p, cfg, b, sliding=sliding))
+    logits, values, state = pf(params, {"tokens": toks})
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    dstep = jax.jit(lambda p, t, s: decode_step(p, cfg, t, s, window=window,
+                                                uniform=True))
+    out = []
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(new_tokens):
+        lg, _, state = dstep(params, tok, state)
+        rng, k = jax.random.split(rng)
+        if temperature > 0:
+            tok = jax.random.categorical(k, lg[:, -1] / temperature)[:, None]
+        else:
+            tok = jnp.argmax(lg[:, -1:], -1)
+        tok = tok.astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = (time.perf_counter() - t0) / new_tokens
+    if verbose:
+        print(f"[serve] {cfg.name}: prefill({batch}x{prompt_len}) "
+              f"{t_prefill*1e3:.1f}ms; decode {t_decode*1e3:.1f}ms/token "
+              f"(window={window or 'full'})")
+        print("[serve] sampled tokens[0]:",
+              [int(t[0, 0]) for t in out])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--sliding", action="store_true")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    args = ap.parse_args()
+    serve(args.arch, smoke=args.smoke, batch=args.batch,
+          prompt_len=args.prompt_len, new_tokens=args.new_tokens,
+          sliding=args.sliding, temperature=args.temperature)
+
+
+if __name__ == "__main__":
+    main()

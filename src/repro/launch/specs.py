@@ -1,0 +1,100 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation) — the dry-run's
+contract (deliverable e).
+
+Step kinds per shape (assignment):
+  train_4k    -> train_step (learner): trajectory batch; hubert -> MLM batch
+  prefill_32k -> prefill (InfServer prefill / encoder forward)
+  decode_32k  -> serve_step: ONE token + full KV cache of seq_len
+  long_500k   -> serve_step with the sub-quadratic variant (ring-buffer
+                 sliding-window cache for attention archs; O(1) SSM state)
+Skips (DESIGN.md §4): hubert has no decode step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, INPUT_SHAPES, InputShape
+from repro.models import init_decode_state
+
+NUM_PATCHES = 1024   # vlm stub frontend: patch embeddings per sequence
+
+SDS = jax.ShapeDtypeStruct
+
+
+def step_kind(cfg: ArchConfig, shape: InputShape) -> str:
+    if shape.kind == "train":
+        return "mlm_train" if cfg.encoder_only else "train"
+    if shape.kind == "prefill":
+        return "prefill"
+    if cfg.encoder_only:
+        return "skip"            # encoder-only: no decode step
+    return "decode"
+
+
+def uses_sliding(cfg: ArchConfig, shape: InputShape) -> bool:
+    """long_500k runs the O(window) ring-buffer variant for attention archs."""
+    return shape.kind == "decode" and shape.seq_len > 65536
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.encoder_only:
+        return {
+            "frame_embeds": SDS((B, S, cfg.d_model), cdt),
+            "units": SDS((B, S), jnp.int32),
+            "mask": SDS((B, S), jnp.bool_),
+        }
+    specs: Dict[str, Any] = {}
+    s_tok = S
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = SDS((B, NUM_PATCHES, cfg.d_model), cdt)
+        s_tok = S - NUM_PATCHES
+    specs["tokens"] = SDS((B, s_tok), jnp.int32)
+    for f in ("behavior_logp", "behavior_values", "rewards", "discounts"):
+        specs[f] = SDS((B, s_tok), jnp.float32)
+    specs["actions"] = SDS((B, s_tok), jnp.int32)
+    specs["bootstrap_value"] = SDS((B,), jnp.float32)
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.encoder_only:
+        return {"frame_embeds": SDS((B, S, cfg.d_model), cdt)}
+    specs: Dict[str, Any] = {}
+    s_tok = S
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = SDS((B, NUM_PATCHES, cfg.d_model), cdt)
+        s_tok = S - NUM_PATCHES
+    specs["tokens"] = SDS((B, s_tok), jnp.int32)
+    return specs
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape) -> Tuple[Any, Any]:
+    """Returns (token_specs, state_specs) via eval_shape (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    sliding = uses_sliding(cfg, shape)
+    state = jax.eval_shape(functools.partial(
+        init_decode_state, cfg, B, S, sliding=sliding))
+    return SDS((B, 1), jnp.int32), state
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """(kind, specs) for one (arch, input-shape)."""
+    shape = INPUT_SHAPES[shape_name]
+    kind = step_kind(cfg, shape)
+    if kind in ("train", "mlm_train"):
+        return kind, train_batch_specs(cfg, shape)
+    if kind == "prefill":
+        return kind, prefill_batch_specs(cfg, shape)
+    if kind == "decode":
+        toks, state = decode_specs(cfg, shape)
+        return kind, {"tokens": toks, "state": state}
+    return "skip", None

@@ -1,0 +1,126 @@
+"""Dry-run step factory: builds (fn, args, in_shardings, out_shardings) for
+every (arch x input-shape x mesh) combination — the thing dryrun.py lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, INPUT_SHAPES
+from repro.distributed.sharding import (batch_shardings, param_shardings,
+                                        set_hint_mesh, state_shardings)
+from repro.launch import specs as SP
+from repro.learners.steps import build_mlm_train_step, build_seq_train_step
+from repro.models import decode_step, init_params, prefill
+from repro.optim import adamw
+
+
+def make_optimizer(cfg: ArchConfig):
+    return adamw(3e-4, clip_norm=1.0,
+                 master_fp32=(cfg.param_dtype == "bfloat16"))
+
+
+def _opt_shardings(opt_shapes, pshard, mesh):
+    out = {"step": NamedSharding(mesh, P()), "mu": pshard, "nu": pshard}
+    if "master" in opt_shapes:
+        out["master"] = pshard
+    return out
+
+
+def _replicate_tree(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def make_dryrun_step(cfg: ArchConfig, shape_name: str, mesh, *,
+                     fsdp: bool = True, shard_cache_len: bool = False,
+                     loss: str = "ppo", remat: bool = True,
+                     unroll: bool = False, q_chunk: int = 512,
+                     uniform_lengths: bool = True, moe_ep: bool = False):
+    """Returns dict(kind, fn, args, in_shardings, out_shardings) or
+    dict(kind='skip')."""
+    kind, sp = SP.input_specs(cfg, shape_name)
+    if kind == "skip":
+        return {"kind": "skip"}
+    set_hint_mesh(mesh)   # in-graph shard_hints (MoE dispatch) resolve here
+    from repro.models.moe import set_expert_parallel
+    set_expert_parallel(moe_ep)   # §Perf-2: explicit shard_map expert parallelism
+
+    params_shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                                   jax.random.PRNGKey(0))
+    pshard = param_shardings(params_shapes, cfg, mesh, fsdp=fsdp)
+
+    if kind in ("train", "mlm_train"):
+        opt = make_optimizer(cfg)
+        if kind == "train":
+            fn = build_seq_train_step(cfg, opt, loss=loss, q_chunk=q_chunk,
+                                      remat=remat, unroll=unroll, jit=False)
+        else:
+            fn = build_mlm_train_step(cfg, opt, remat=remat, unroll=unroll,
+                                      jit=False)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        oshard = _opt_shardings(opt_shapes, pshard, mesh)
+        bshard = batch_shardings(sp, mesh)
+        metrics_shapes = jax.eval_shape(fn, params_shapes, opt_shapes, sp)[2]
+        return {
+            "kind": kind, "fn": fn,
+            "args": (params_shapes, opt_shapes, sp),
+            "in_shardings": (pshard, oshard, bshard),
+            "out_shardings": (pshard, oshard, _replicate_tree(metrics_shapes, mesh)),
+        }
+
+    if kind == "prefill":
+        sliding = False
+
+        def fn(params, batch):
+            logits, values, state = prefill(params, cfg, batch,
+                                            sliding=sliding, q_chunk=q_chunk,
+                                            unroll=unroll)
+            return logits[:, -1], values[:, -1], state
+
+        bshard = batch_shardings(sp, mesh)
+        B = INPUT_SHAPES[shape_name].global_batch
+        out_state_shapes = jax.eval_shape(fn, params_shapes, sp)[2]
+        sshard = state_shardings(out_state_shapes, cfg, mesh,
+                                 shard_cache_len=shard_cache_len)
+        dp_out = batch_shardings(
+            (jax.ShapeDtypeStruct((B, cfg.vocab_size), jnp.float32),
+             jax.ShapeDtypeStruct((B,), jnp.float32)), mesh)
+        return {
+            "kind": kind, "fn": fn,
+            "args": (params_shapes, sp),
+            "in_shardings": (pshard, bshard),
+            "out_shardings": (dp_out[0], dp_out[1], sshard),
+        }
+
+    # decode
+    shp = INPUT_SHAPES[shape_name]
+    sliding = SP.uses_sliding(cfg, shp)
+    window = 0
+    if sliding and cfg.family != "ssm":
+        # window == ring-buffer cache length
+        kv0 = jax.tree_util.tree_leaves(sp["state"]["blocks"])[0]
+        window = min(shp.seq_len, cfg.long_context_window)
+
+    def fn(params, tokens, state):
+        # uniform=True: serving batches decode in lockstep (same position
+        # per row) -> dynamic_update_slice keeps the cache sharding intact.
+        return decode_step(params, cfg, tokens, state, window=window,
+                           unroll=unroll, uniform=uniform_lengths)
+
+    sshard = state_shardings(sp["state"], cfg, mesh,
+                             shard_cache_len=shard_cache_len)
+    tshard = batch_shardings(sp["tokens"], mesh)
+    B = shp.global_batch
+    head_out = batch_shardings(
+        (jax.ShapeDtypeStruct((B, 1, cfg.vocab_size), jnp.float32),
+         jax.ShapeDtypeStruct((B, 1), jnp.float32)), mesh)
+    return {
+        "kind": kind, "fn": fn,
+        "args": (params_shapes, sp["tokens"], sp["state"]),
+        "in_shardings": (pshard, tshard, sshard),
+        "out_shardings": (head_out[0], head_out[1], sshard),
+    }

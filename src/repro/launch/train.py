@@ -1,0 +1,117 @@
+"""League training driver (the paper's full lifecycle, single-host scale).
+
+Wires LeagueMgr + ModelPool + HyperMgr + GameMgr + Actors + Learner and runs
+learning periods with freezes — the same modules the k8s deployment would
+run as services (launch/k8s.py renders that spec).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --env pommerman_lite \
+      --arch tleague-policy-s --game-mgr sp_pfsp --periods 3 --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.actors import Actor
+from repro.configs import get_arch
+from repro.core import GAME_MGRS, Hyperparam, LeagueMgr
+from repro.core.game_mgr import GameMgr
+from repro.envs import make_env
+from repro.learners import DataServer, Learner, build_env_train_step
+from repro.models import init_params
+from repro.optim import adamw
+from repro.rl.ppo import PPOConfig
+from repro.checkpoint import save_league, save_pytree
+
+
+def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
+                        game_mgr="sp_pfsp", loss="ppo", num_envs=16,
+                        unroll_len=16, periods=2, steps_per_period=16,
+                        num_actors=1, num_exploiters=0, pbt=False,
+                        lr=3e-4, seed=0, log_every=8, checkpoint_dir=None,
+                        verbose=True):
+    env = make_env(env_name)
+    cfg = get_arch(arch)
+    rng = jax.random.PRNGKey(seed)
+    league = LeagueMgr(pbt=pbt, seed=seed)
+    opt = adamw(lr, clip_norm=1.0)
+
+    agents = {}
+    ids = ["main"] + [f"exploiter:{i}" for i in range(num_exploiters)]
+    for i, aid in enumerate(ids):
+        params = init_params(jax.random.fold_in(rng, i), cfg)
+        gm_name = game_mgr if aid == "main" else "exploiter"
+        gm = GAME_MGRS[gm_name](payoff=league.payoff, seed=seed + i)
+        league.add_learning_agent(aid, params, game_mgr=gm)
+        actors = [Actor(env, cfg, league, agent_id=aid, num_envs=num_envs,
+                        unroll_len=unroll_len, seed=seed * 1000 + i * 100 + a)
+                  for a in range(num_actors)]
+        step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
+        learner = Learner(league, step, opt, params, agent_id=aid,
+                          data_server=DataServer())
+        agents[aid] = (actors, learner)
+
+    history = []
+    t0 = time.time()
+    for period in range(periods):
+        for it in range(steps_per_period):
+            for aid, (actors, learner) in agents.items():
+                for actor in actors:
+                    traj, _ = actor.run_segment()
+                    learner.data_server.put(traj)
+                m = learner.learn(num_steps=len(actors))
+                if verbose and it % log_every == 0 and m:
+                    tp = learner.data_server.throughput()
+                    print(f"[train] p{period} it{it} {aid} "
+                          f"loss={float(m['loss']):.3f} "
+                          f"ent={float(m['entropy']):.3f} "
+                          f"rfps={tp['rfps']:.0f} cfps={tp['cfps']:.0f}")
+                history.append({"period": period, "it": it, "agent": aid,
+                                "loss": float(m.get("loss", float("nan")))})
+        for aid, (_, learner) in agents.items():
+            new_key = learner.end_learning_period()
+            if verbose:
+                print(f"[train] period {period} end: {aid} froze -> {new_key}")
+
+    state = league.league_state()
+    state["wall_s"] = time.time() - t0
+    if checkpoint_dir:
+        save_league(f"{checkpoint_dir}/league.json", state)
+        for aid, (_, learner) in agents.items():
+            save_pytree(f"{checkpoint_dir}/{aid.replace(':', '_')}.npz",
+                        learner.params)
+    return league, agents, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="pommerman_lite")
+    ap.add_argument("--arch", default="tleague-policy-s")
+    ap.add_argument("--game-mgr", default="sp_pfsp", choices=sorted(GAME_MGRS))
+    ap.add_argument("--loss", default="ppo", choices=["ppo", "vtrace"])
+    ap.add_argument("--num-envs", type=int, default=16)
+    ap.add_argument("--unroll-len", type=int, default=16)
+    ap.add_argument("--periods", type=int, default=2)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--actors", type=int, default=1)
+    ap.add_argument("--exploiters", type=int, default=0)
+    ap.add_argument("--pbt", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None)
+    args = ap.parse_args()
+    league, _, _ = run_league_training(
+        env_name=args.env, arch=args.arch, game_mgr=args.game_mgr,
+        loss=args.loss, num_envs=args.num_envs, unroll_len=args.unroll_len,
+        periods=args.periods, steps_per_period=args.steps,
+        num_actors=args.actors, num_exploiters=args.exploiters, pbt=args.pbt,
+        lr=args.lr, seed=args.seed, checkpoint_dir=args.checkpoint_dir)
+    print(json.dumps(league.league_state(), indent=1))
+
+
+if __name__ == "__main__":
+    main()

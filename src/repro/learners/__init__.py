@@ -1,0 +1,3 @@
+from repro.learners.replay import DataServer
+from repro.learners.steps import build_env_train_step, build_seq_train_step, build_mlm_train_step
+from repro.learners.learner import Learner

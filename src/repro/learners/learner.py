@@ -1,0 +1,58 @@
+"""Learner: the data-consuming module (§3.2).
+
+Owns the train step, an embedded DataServer, and the league protocol:
+requests its task at each learning-period beginning (rank-0 semantics),
+periodically pushes theta to the ModelPool so Actors stay fresh, and at
+learning-period end freezes theta into the opponent pool via LeagueMgr.
+The M_L-way synchronous gradient sync lives inside the (p)jit'd train step.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import LeagueMgr
+from repro.learners.replay import DataServer
+
+
+class Learner:
+    def __init__(self, league: LeagueMgr, train_step: Callable, optimizer,
+                 init_params, *, agent_id: str = "main",
+                 publish_every: int = 1, data_server: Optional[DataServer] = None):
+        self.league = league
+        self.agent_id = agent_id
+        self.train_step = train_step
+        self.optimizer = optimizer
+        self.params = init_params
+        self.opt_state = optimizer.init(init_params)
+        self.data_server = data_server or DataServer()
+        self.publish_every = publish_every
+        self.step_count = 0
+        self.task = league.request_learner_task(agent_id)
+
+    @property
+    def current_key(self):
+        return self.league.agents[self.agent_id].current
+
+    def learn(self, num_steps: int = 1):
+        """Consume `num_steps` minibatches from the DataServer."""
+        last_metrics = {}
+        for _ in range(num_steps):
+            if not self.data_server.ready():
+                break
+            traj = self.data_server.sample()
+            self.params, self.opt_state, last_metrics = self.train_step(
+                self.params, self.opt_state, traj)
+            self.step_count += 1
+            if self.step_count % self.publish_every == 0:
+                self.league.model_pool.push(self.current_key, self.params,
+                                            step=self.step_count)
+        return last_metrics
+
+    def end_learning_period(self):
+        """Freeze theta into M, warm-start theta_{v+1} (paper lifecycle)."""
+        new_key = self.league.end_learning_period(self.agent_id, self.params)
+        self.opt_state = self.optimizer.init(self.params)   # fresh moments
+        self.task = self.league.request_learner_task(self.agent_id)
+        return new_key

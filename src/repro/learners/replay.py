@@ -1,0 +1,60 @@
+"""DataServer + ReplayMem: the Learner's embedded data path (§3.2).
+
+Receives trajectory segments from Actors, stores them in a bounded replay,
+serves minibatches to the train step, and tracks the paper's throughput
+telemetry: rfps (frames received / sec) and cfps (frames consumed / sec);
+cfps/rfps is the average learn-repeat ratio, and a `blocking` mode makes
+cfps track rfps for on-policy PPO (§4.4).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Any, Deque, Optional
+
+import jax
+import numpy as np
+
+
+class DataServer:
+    def __init__(self, capacity_segments: int = 64, seed: int = 0,
+                 blocking: bool = True):
+        self.buf: Deque[Any] = collections.deque(maxlen=capacity_segments)
+        self.rng = np.random.default_rng(seed)
+        self.blocking = blocking
+        self.frames_received = 0
+        self.frames_consumed = 0
+        self._t0 = time.monotonic()
+        self._unconsumed = 0
+
+    # -- actor side --------------------------------------------------------------
+    def put(self, traj) -> None:
+        frames = int(np.prod(np.asarray(traj["actions"]).shape[:2]))
+        self.frames_received += frames
+        self._unconsumed += frames
+        self.buf.append(traj)
+
+    # -- learner side -----------------------------------------------------------
+    def ready(self) -> bool:
+        return len(self.buf) > 0 and (not self.blocking or self._unconsumed > 0)
+
+    def sample(self):
+        """Most-recent-first when blocking (on-policy); uniform otherwise."""
+        assert self.buf, "DataServer empty"
+        if self.blocking:
+            traj = self.buf[-1]
+        else:
+            traj = self.buf[self.rng.integers(len(self.buf))]
+        frames = int(np.prod(np.asarray(traj["actions"]).shape[:2]))
+        self.frames_consumed += frames
+        self._unconsumed = max(0, self._unconsumed - frames)
+        return traj
+
+    # -- telemetry (paper Table 3) ----------------------------------------------
+    def throughput(self) -> dict:
+        dt = max(time.monotonic() - self._t0, 1e-9)
+        return {
+            "rfps": self.frames_received / dt,
+            "cfps": self.frames_consumed / dt,
+            "repeat_ratio": self.frames_consumed / max(self.frames_received, 1),
+        }

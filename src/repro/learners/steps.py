@@ -1,0 +1,127 @@
+"""Train-step factories — the Learner's compute (§3.2).
+
+Three flavors covering every assigned arch x task:
+  env_train_step — PPO/V-trace over env trajectory segments with the
+                   memoryless obs-token policy (the real league training).
+  seq_train_step — PPO/V-trace over full token sequences (AlphaStar-style
+                   autoregressive action head). This is what `train_4k`
+                   lowers at scale: the learner consumes (B, S) trajectories.
+  mlm_train_step — masked-unit prediction for the encoder-only audio arch
+                   (hubert), its `train_4k` objective.
+
+Each returns f(params, opt_state, batch) -> (params, opt_state, metrics);
+under pjit the gradient psum over the mesh data/pod axes is the paper's
+Horovod allreduce (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.actors.policy import make_obs_policy
+from repro.models import forward_train
+from repro.rl.ppo import PPOConfig, ppo_loss
+from repro.rl.vtrace_loss import VTraceConfig, vtrace_loss
+
+
+def _loss_for(kind):
+    return {"ppo": (ppo_loss, PPOConfig), "vtrace": (vtrace_loss, VTraceConfig)}[kind]
+
+
+def build_env_train_step(cfg, num_actions: int, optimizer, hp=None,
+                         loss: str = "ppo", jit: bool = True):
+    loss_fn_impl, hp_cls = _loss_for(loss)
+    hp = hp or hp_cls()
+    policy = make_obs_policy(cfg, num_actions)
+
+    def train_step(params, opt_state, traj):
+        B, T, L0 = traj["obs"].shape
+        discounts = hp.gamma * (1.0 - traj["done"].astype(jnp.float32))
+        tfields = {
+            "actions": traj["actions"],
+            "behavior_logp": traj["behavior_logp"],
+            "behavior_values": traj["behavior_values"],
+            "rewards": traj["rewards"],
+            "discounts": discounts,
+            "bootstrap_value": traj["bootstrap_value"],
+        }
+
+        def loss_fn(p):
+            lg, v = policy.logits_values(p, traj["obs"].reshape(B * T, L0))
+            logits = lg.reshape(B, T, num_actions)
+            values = v.reshape(B, T)
+            return loss_fn_impl(logits, values, tfields, hp)
+
+        (lv, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        metrics = {**metrics, **om, "loss": lv}
+        return params, opt_state, metrics
+
+    return jax.jit(train_step, donate_argnums=(0, 1)) if jit else train_step
+
+
+def build_seq_train_step(cfg, optimizer, hp=None, loss: str = "ppo",
+                         q_chunk: int = 512, remat: bool = True,
+                         unroll: bool = False, jit: bool = False):
+    """Sequence-model PPO/V-trace: actions are tokens; logits from the LM
+    head over the whole unroll. The big-arch learner step (`train_4k`)."""
+    loss_fn_impl, hp_cls = _loss_for(loss)
+    hp = hp or hp_cls()
+
+    def train_step(params, opt_state, batch):
+        tfields = {
+            "actions": batch["actions"],
+            "behavior_logp": batch["behavior_logp"],
+            "behavior_values": batch["behavior_values"],
+            "rewards": batch["rewards"],
+            "discounts": batch["discounts"],
+            "bootstrap_value": batch["bootstrap_value"],
+        }
+        inputs = {k: batch[k] for k in ("tokens", "patch_embeds", "frame_embeds")
+                  if k in batch}
+
+        def loss_fn(p):
+            logits, values, aux = forward_train(p, cfg, inputs, q_chunk=q_chunk,
+                                                remat=remat, unroll=unroll)
+            # modality prefixes (vlm patches) are observation-only: the RL
+            # fields are aligned to the *last* S_act positions.
+            S_act = tfields["actions"].shape[1]
+            logits = logits[:, -S_act:]
+            values = values[:, -S_act:]
+            lv, metrics = loss_fn_impl(logits, values, tfields, hp)
+            return lv + aux, metrics
+
+        (lv, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **om, "loss": lv}
+
+    return jax.jit(train_step, donate_argnums=(0, 1)) if jit else train_step
+
+
+def build_mlm_train_step(cfg, optimizer, remat: bool = True, unroll: bool = False,
+                         jit: bool = False):
+    """HuBERT-style masked-unit prediction (encoder-only audio)."""
+    assert cfg.encoder_only
+
+    def train_step(params, opt_state, batch):
+        frames, units, mask = batch["frame_embeds"], batch["units"], batch["mask"]
+
+        def loss_fn(p):
+            x = jnp.where(mask[..., None], 0.0, frames)   # mask-out input frames
+            logits, _, _ = forward_train(p, cfg, {"frame_embeds": x, "tokens": None},
+                                         remat=remat, unroll=unroll)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, units[..., None], axis=-1)[..., 0]
+            m = mask.astype(jnp.float32)
+            loss = jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+            acc = jnp.sum((jnp.argmax(logits, -1) == units) * m) / jnp.maximum(jnp.sum(m), 1.0)
+            return loss, {"masked_acc": acc}
+
+        (lv, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, om = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **om, "loss": lv}
+
+    return jax.jit(train_step, donate_argnums=(0, 1)) if jit else train_step

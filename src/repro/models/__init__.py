@@ -1,0 +1,7 @@
+from repro.models.transformer import (
+    init_params,
+    forward_train,
+    prefill,
+    decode_step,
+    init_decode_state,
+)

@@ -1,0 +1,187 @@
+"""GQA attention: full-sequence (chunked, memory-safe at 32k+) and cached decode.
+
+Features used by the assigned archs: grouped-query attention, per-head
+qk-norm (qwen3), attention logit softcapping (gemma2), sliding-window masks
+(gemma2 local layers; the long-context variant for every dense arch), and a
+ring-buffer KV cache so `long_500k` decode holds O(window) state.
+
+The pure-jnp paths here are also the oracle the Pallas kernels are tested
+against (`repro/kernels/flash_attention/ref.py` wraps them).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16/softcap fine
+
+
+def init_attention(rng, cfg, dtype):
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.q_dim, dtype, cfg.attn_bias),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.kv_dim, dtype, cfg.attn_bias),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.kv_dim, dtype, cfg.attn_bias),
+        "wo": L.dense_init(ks[3], cfg.q_dim, cfg.d_model, dtype, bias=False),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.rmsnorm_init(cfg.head_dim, dtype)
+        p["k_norm"] = L.rmsnorm_init(cfg.head_dim, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions):
+    B, T, _ = x.shape
+    q = L.dense(p["wq"], x).reshape(B, T, cfg.num_heads, cfg.head_dim)
+    k = L.dense(p["wk"], x).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    v = L.dense(p["wv"], x).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = L.rmsnorm(p["q_norm"], q)
+        k = L.rmsnorm(p["k_norm"], k)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, q_pos, k_pos, *, causal, window, cap, scale, k_valid=None):
+    """q: (B,Tq,H,hd)  k,v: (B,Tk,KV,hd)  -> (B,Tq,H,hd). fp32 softmax."""
+    B, Tq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Tq, KV, G, hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg, k).astype(jnp.float32) * scale
+    s = L.softcap(s, cap)
+    mask = jnp.ones((B, 1, 1, Tq, k.shape[1]), bool)
+    qp = q_pos[:, None, None, :, None]
+    kp = k_pos[:, None, None, None, :]
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= qp - kp < window
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", w.astype(v.dtype), v)
+    return o.reshape(B, Tq, H, hd)
+
+
+def chunked_attend(q, k, v, q_pos, k_pos, *, causal, window, cap, scale,
+                   q_chunk=512, unroll=False):
+    """Memory-safe attention: `lax.scan` over query chunks so only an
+    O(q_chunk * T) score block is ever live (the pure-jnp stand-in for the
+    Pallas flash kernel; also its oracle).
+
+    §Perf: when a causal sliding window is active and the sequence is long,
+    each query chunk only attends to a dynamic slice of q_chunk+window keys
+    instead of all T — the masked-out key blocks were pure waste (this cut
+    hymba prefill_32k attention work ~T/(q_chunk+window) = 21x; see
+    EXPERIMENTS.md §Perf-3)."""
+    B, T, H, hd = q.shape
+    if T <= q_chunk or T % q_chunk:
+        return _attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                       cap=cap, scale=scale)
+    n = T // q_chunk
+    qc = q.reshape(B, n, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = q_pos.reshape(B, n, q_chunk).transpose(1, 0, 2)
+    Lw = q_chunk + window
+    windowed = causal and window and Lw < T
+
+    def body(carry, xs):
+        qi, pi, idx = xs
+        if windowed:
+            start = jnp.clip((idx + 1) * q_chunk - Lw, 0, T - Lw)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, Lw, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, Lw, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(k_pos, start, Lw, axis=1)
+        else:
+            ks, vs, kp = k, v, k_pos
+        oi = _attend(qi, ks, vs, pi, kp, causal=causal, window=window,
+                     cap=cap, scale=scale)
+        return carry, oi
+
+    idxs = jnp.arange(n)
+    if unroll:
+        ocs = [body(None, (qc[i], pc[i], idxs[i]))[1] for i in range(n)]
+        oc = jnp.stack(ocs)
+    else:
+        _, oc = jax.lax.scan(body, None, (qc, pc, idxs))
+    return oc.transpose(1, 0, 2, 3, 4).reshape(B, T, H, hd)
+
+
+def full_attention(p, cfg, x, positions, *, layer_type="global", q_chunk=512,
+                   unroll=False):
+    """Full-sequence attention, scanned over query chunks (no O(T^2) buffer).
+
+    layer_type: 'global' (full causal), 'local' (sliding window), or the
+    config-level sliding_window if set. Encoder-only archs are bidirectional.
+    """
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    window = cfg.sliding_window if (layer_type == "local" and cfg.sliding_window) else 0
+    o = chunked_attend(q, k, v, positions, positions, causal=not cfg.encoder_only,
+                       window=window, cap=cfg.attn_logit_softcap,
+                       scale=cfg.head_dim ** -0.5, q_chunk=q_chunk, unroll=unroll)
+    return L.dense(p["wo"], o.reshape(B, T, cfg.q_dim))
+
+
+# -- decode with (ring-buffer) KV cache ---------------------------------------
+
+def init_kv_cache(cfg, batch, cache_len, dtype, prefilled: int = 0):
+    """Cache of `cache_len` slots. `prefilled` marks how many are valid
+    (dry-run decode shapes prefill the whole cache)."""
+    k = jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    v = jnp.zeros_like(k)
+    if prefilled:
+        pos = jnp.broadcast_to(jnp.arange(cache_len, dtype=jnp.int32), (batch, cache_len))
+        length = jnp.full((batch,), prefilled, jnp.int32)
+    else:
+        pos = jnp.full((batch, cache_len), -1, jnp.int32)
+        length = jnp.zeros((batch,), jnp.int32)
+    return {"k": k, "v": v, "pos": pos, "length": length}
+
+
+def decode_attention(p, cfg, x, cache, *, layer_type="global", window_override=0,
+                     uniform=False):
+    """One-token decode. x: (B, 1, d). Returns (y, new_cache).
+
+    The new k/v is written at slot (length mod cache_len) — a ring buffer:
+    with window_override=W and cache_len=W this is O(W) memory at any
+    sequence length (the sub-quadratic long_500k variant).
+
+    `uniform=True` (all rows at the same position — the serving dry-run
+    case) writes via dynamic_update_slice instead of a batched scatter:
+    GSPMD keeps the cache sharding intact (the scatter forced an
+    "involuntary full rematerialization" = replicate + repartition of the
+    whole multi-GiB cache each step; see EXPERIMENTS.md §Perf-1).
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    t = cache["length"]                              # (B,) current position
+    q, k, v = _project_qkv(p, cfg, x, t[:, None])
+    W = cache["k"].shape[1]
+    slot = (t % W).astype(jnp.int32)
+    if uniform:
+        s0 = slot[0]
+        z = jnp.int32(0)
+        new_k = jax.lax.dynamic_update_slice(cache["k"], k, (z, s0, z, z))
+        new_v = jax.lax.dynamic_update_slice(cache["v"], v, (z, s0, z, z))
+        new_pos = jax.lax.dynamic_update_slice(cache["pos"], t[:, None], (z, s0))
+    else:
+        b_idx = jnp.arange(B)
+        new_k = cache["k"].at[b_idx, slot].set(k[:, 0])
+        new_v = cache["v"].at[b_idx, slot].set(v[:, 0])
+        new_pos = cache["pos"].at[b_idx, slot].set(t)
+
+    window = window_override or (cfg.sliding_window if layer_type == "local" else 0)
+    k_valid = new_pos >= 0
+    o = _attend(q, new_k, new_v, t[:, None], new_pos,
+                causal=True, window=window, cap=cfg.attn_logit_softcap,
+                scale=cfg.head_dim ** -0.5, k_valid=k_valid)
+    y = L.dense(p["wo"], o.reshape(B, 1, cfg.q_dim))
+    new_cache = {"k": new_k, "v": new_v, "pos": new_pos, "length": t + 1}
+    return y, new_cache

@@ -1,0 +1,126 @@
+"""Shared primitive layers: norms, RoPE, MLPs, embeddings.
+
+Plain-pytree params (no flax in env). Convention: every layer has
+`init_<layer>(rng, ...) -> params` and `<layer>(params, x, ...) -> y`.
+Compute runs in cfg.compute_dtype with fp32 norm/softmax internals.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _normal(rng, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(rng, d_in, d_out, dtype, bias=False, scale=None):
+    scale = scale if scale is not None else d_in ** -0.5
+    p = {"w": _normal(rng, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# -- norms -------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_init(kind, d, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs      # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                            # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs ----------------------------------------------------------------------
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def mlp_init(rng, d_model, d_ff, dtype, gated=True, bias=False):
+    ks = jax.random.split(rng, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype, bias),
+         "down": dense_init(ks[1], d_ff, d_model, dtype, bias)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype, bias)
+    return p
+
+
+def mlp(p, x, activation="silu"):
+    a = act_fn(activation)
+    h = dense(p["up"], x)
+    if "gate" in p:
+        h = a(dense(p["gate"], x)) * h
+    else:
+        h = a(h)
+    return dense(p["down"], h)
+
+
+# -- embedding -----------------------------------------------------------------
+
+def embed_init(rng, vocab, d_model, dtype):
+    return {"table": _normal(rng, (vocab, d_model), 1.0, dtype)}
+
+
+def embed(p, tokens, compute_dtype, scale=False):
+    x = p["table"].astype(compute_dtype)[tokens]
+    if scale:
+        x = x * jnp.asarray(x.shape[-1] ** 0.5, compute_dtype)
+    return x
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap

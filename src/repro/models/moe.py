@@ -1,0 +1,250 @@
+"""Top-k MoE with sort-based token dispatch (Megablocks-style, TPU-adapted).
+
+Why not the GShard one-hot dispatch einsum: its (tokens, E, C) dispatch tensor
+is O(N*E*C) — at kimi-k2 scale (1M tokens, 384 experts) that is tens of TB.
+The sort-based route keeps everything O(N*k): argsort token->expert
+assignments, compute each token's position within its expert via a histogram
+(bincount) + prefix sum, scatter tokens into a dense (E, C, d) buffer
+(unique slots -> scatter-set, clean transpose/gradient), batched expert GEMM,
+gather back. Under pjit the (E, C, d) buffer shards over the expert/model
+axes and the token tensors over data — the reshard between them is the MoE
+all-to-all the paper-era systems did by hand.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def init_moe(rng, cfg, dtype):
+    e = cfg.moe
+    ks = jax.random.split(rng, 5)
+    d, ff = cfg.d_model, e.d_ff_expert
+    scale = d ** -0.5
+    p = {
+        "router": {"w": L._normal(ks[0], (d, e.num_experts), scale, jnp.float32)},
+        "up": L._normal(ks[1], (e.num_experts, d, ff), scale, dtype),
+        "gate": L._normal(ks[2], (e.num_experts, d, ff), scale, dtype),
+        "down": L._normal(ks[3], (e.num_experts, ff, d), ff ** -0.5, dtype),
+    }
+    if e.num_shared_experts:
+        p["shared"] = L.mlp_init(ks[4], d, cfg.d_ff * e.num_shared_experts, dtype,
+                                 gated=cfg.mlp_gated)
+    return p
+
+
+def route_topk(gates, k: int, capacity: int):
+    """gates: (N, E) fp32 probabilities. Returns (slot_idx (N,k), weight (N,k),
+    keep (N,k), aux_stats). slot_idx indexes an (E*capacity + 1) buffer; the
+    last row is the drop bucket."""
+    N, E = gates.shape
+    topv, topi = jax.lax.top_k(gates, k)                       # (N, k)
+    topv = topv / (jnp.sum(topv, -1, keepdims=True) + 1e-9)
+    # rank-major flatten: all rank-0 choices first => earlier ranks win capacity
+    flat_e = topi.T.reshape(-1)                                # (k*N,)
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=E)                    # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(k * N, dtype=jnp.int32) - starts[flat_e[order]].astype(jnp.int32)
+    pos_flat = jnp.zeros((k * N,), jnp.int32).at[order].set(pos_sorted)
+    pos = pos_flat.reshape(k, N).T                             # (N, k)
+    keep = pos < capacity
+    slot = jnp.where(keep, topi * capacity + pos, E * capacity)
+    return slot, topv, keep, counts
+
+
+PAD_ROWS = 16   # drop-bucket rows; >1 keeps buffer row count mesh-divisible
+
+
+# §Perf-2: expert-parallel path toggle (set by the launch/step factory; the
+# pure-GSPMD path stays the default for tests and the paper-faithful
+# baseline). See moe_apply_ep below.
+_EXPERT_PARALLEL = False
+
+
+def set_expert_parallel(on: bool):
+    global _EXPERT_PARALLEL
+    _EXPERT_PARALLEL = bool(on)
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, T, d) -> (y, aux_loss). Works for T==1 decode too.
+
+    Sharding (§Perf-2): token tensors are pinned to the data axes and the
+    (E*C, d) expert buffers to the model (expert) axis — the reshard between
+    them is the MoE all-to-all. Without these hints GSPMD resolved the
+    scatter/gather dispatch with full all-gathers of the token buffers
+    (~15 TB/chip/step at kimi-k2 train_4k)."""
+    from repro.distributed.sharding import shard_hint, _HINT_MESH
+    if _EXPERT_PARALLEL and _HINT_MESH is not None \
+            and cfg.moe.num_experts % _HINT_MESH.shape.get("model", 1) == 0:
+        return moe_apply_ep(p, cfg, x, _HINT_MESH)
+    e = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    xf = x.reshape(N, d)
+    xf = shard_hint(xf, (("pod", "data"), None))
+    E, k = e.num_experts, e.experts_per_token
+    capacity = max(int(N * k * e.capacity_factor / E), k)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])       # (N, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    slot, weight, keep, counts = route_topk(gates, k, capacity)
+
+    # scatter tokens into expert buffers: (E*C+PAD, d); drop bucket = row E*C
+    buf = jnp.zeros((E * capacity + PAD_ROWS, d), x.dtype)
+    tok_rep = jnp.repeat(jnp.arange(N), k)
+    buf = buf.at[slot.reshape(-1)].set(xf[tok_rep], mode="drop")
+    buf = shard_hint(buf, ("model", None))
+    expert_in = buf[: E * capacity].reshape(E, capacity, d)
+    expert_in = shard_hint(expert_in, ("model", None, None))
+
+    a = L.act_fn(cfg.activation)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["up"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["gate"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", a(g) * h, p["down"].astype(x.dtype))
+    out = shard_hint(out, ("model", None, None))
+
+    out_flat = jnp.concatenate([out.reshape(E * capacity, d),
+                                jnp.zeros((PAD_ROWS, d), x.dtype)], 0)
+    out_flat = shard_hint(out_flat, ("model", None))
+    gathered = out_flat[slot]                                   # (N, k, d)
+    gathered = shard_hint(gathered, (("pod", "data"), None, None))
+    w = (weight * keep).astype(x.dtype)
+    y = jnp.einsum("nk,nkd->nd", w, gathered)
+    y = shard_hint(y, (("pod", "data"), None))
+
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], xf, cfg.activation)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    f = counts.astype(jnp.float32) / (N * k)
+    pbar = jnp.mean(gates, axis=0)
+    aux = e.router_aux_coef * E * jnp.sum(f * pbar)
+    return y.reshape(B, T, d), aux
+
+
+# ===========================================================================
+# §Perf-2: explicit expert parallelism (shard_map)
+# ===========================================================================
+
+def moe_apply_ep(p, cfg, x, mesh):
+    """Expert-parallel MoE via shard_map — the TPU-native dispatch.
+
+    Motivation (EXPERIMENTS.md §Perf-2): GSPMD resolves the sort-based
+    scatter/gather dispatch by materializing the global (E*C, d) buffers on
+    every chip (~15 TB/chip all-gather at kimi train_4k); sharding hints
+    made it *worse* (replicated scatter compute). Here the data movement is
+    pinned explicitly:
+
+      - tokens stay sharded over the data axes; routing is computed
+        redundantly on each model shard (cheap: one (N_l, E) matmul);
+      - each model shard scatters ONLY the tokens routed to its local
+        E/M experts into a local (E_l*C, d) buffer (on-chip scatter);
+      - expert weights are FSDP over `data`; the fwd all-gathers them over
+        `data` (tiled) and autodiff turns that into the reduce-scatter of
+        weight grads — exactly the ZeRO-3 schedule;
+      - combine = psum over `model` of each shard's weighted outputs:
+        2 x (N_l x d) of ICI traffic per layer, the information-theoretic
+        floor for expert-parallel MoE (vs. gathering 150 GB buffers).
+
+    Capacity is per-(data-shard, expert): C = max(N_l*k*cf/E, k) — same
+    expected load as the global-capacity baseline, slightly different drop
+    boundary (documented).
+    """
+    from jax.sharding import PartitionSpec as P
+    e = cfg.moe
+    B, T, d = x.shape
+    M = mesh.shape.get("model", 1)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    E, k = e.num_experts, e.experts_per_token
+    E_l = E // M
+    a = L.act_fn(cfg.activation)
+
+    def local_fn(wr, up, gate, down, shared, xl):
+        # xl: (B_l, T, d); up/gate: (E_l, d, ff); down: (E_l, ff, d)
+        m_idx = jax.lax.axis_index("model")
+        B_l = xl.shape[0]
+        N_l = B_l * T
+        C = max(int(N_l * k * e.capacity_factor / E), k)
+        xf = xl.reshape(N_l, d)
+
+        # ZeRO-3: gather the d-sharded expert weights over data (bwd:
+        # reduce-scatter of the weight grads)
+        if dp:
+            up = jax.lax.all_gather(up, dp, axis=1, tiled=True)
+            gate = jax.lax.all_gather(gate, dp, axis=1, tiled=True)
+            down = jax.lax.all_gather(down, dp, axis=2, tiled=True)
+
+        logits = xf.astype(jnp.float32) @ wr                  # (N_l, E)
+        gates = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(gates, k)                  # (N_l, k)
+        topv = topv / (jnp.sum(topv, -1, keepdims=True) + 1e-9)
+
+        local_e = topi - m_idx * E_l                          # (N_l, k)
+        valid = (local_e >= 0) & (local_e < E_l)
+        flat_e = jnp.where(valid, local_e, E_l).T.reshape(-1)  # rank-major
+        order = jnp.argsort(flat_e, stable=True)
+        counts = jnp.bincount(flat_e, length=E_l + 1)
+        starts = jnp.cumsum(counts) - counts
+        pos_sorted = (jnp.arange(k * N_l, dtype=jnp.int32)
+                      - starts[flat_e[order]].astype(jnp.int32))
+        pos = jnp.zeros((k * N_l,), jnp.int32).at[order].set(pos_sorted)
+        pos = pos.reshape(k, N_l).T
+        keep = valid & (pos < C)
+        slot = jnp.where(keep, local_e * C + pos, E_l * C)
+
+        buf = jnp.zeros((E_l * C + PAD_ROWS, d), xl.dtype)
+        tok_rep = jnp.repeat(jnp.arange(N_l), k)
+        buf = buf.at[slot.reshape(-1)].set(xf[tok_rep], mode="drop")
+        expert_in = buf[: E_l * C].reshape(E_l, C, d)
+
+        h = jnp.einsum("ecd,edf->ecf", expert_in, up.astype(xl.dtype))
+        g = jnp.einsum("ecd,edf->ecf", expert_in, gate.astype(xl.dtype))
+        out = jnp.einsum("ecf,efd->ecd", a(g) * h, down.astype(xl.dtype))
+
+        out_flat = jnp.concatenate([out.reshape(E_l * C, d),
+                                    jnp.zeros((PAD_ROWS, d), xl.dtype)], 0)
+        gathered = out_flat[slot]                              # local gather
+        w = (topv * keep).astype(xl.dtype)
+        y = jnp.einsum("nk,nkd->nd", w, gathered)
+        y = jax.lax.psum(y, "model")                           # combine
+
+        if shared is not None:
+            sh_up, sh_gate, sh_down = shared
+            # shared expert: TP over model on the hidden dim
+            hs = xf @ sh_up.astype(xl.dtype)
+            gs = a(xf @ sh_gate.astype(xl.dtype))
+            ys = (gs * hs) @ sh_down.astype(xl.dtype)
+            y = y + jax.lax.psum(ys, "model")
+
+        # load-balance aux: local-expert load fraction x mean gate prob
+        f_local = counts[:E_l].astype(jnp.float32) / (N_l * k)
+        pbar = jnp.mean(gates, axis=0)                         # (E,) full
+        p_local = jax.lax.dynamic_slice_in_dim(pbar, m_idx * E_l, E_l)
+        aux = e.router_aux_coef * E * jnp.sum(f_local * p_local)
+        aux = jax.lax.psum(aux, "model")
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return y.reshape(B_l, T, d), aux
+
+    shared_in = None
+    shared_spec = None
+    if "shared" in p:
+        sh = p["shared"]
+        shared_in = (sh["up"]["w"], sh["gate"]["w"], sh["down"]["w"])
+        # hidden dim of the shared expert TP-sharded over model
+        shared_spec = (P(None, "model"), P(None, "model"), P("model", None))
+
+    _smap = jax.shard_map
+    fn = _smap(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P("model", dp if dp else None, None),
+                  P("model", dp if dp else None, None),
+                  P("model", None, dp if dp else None),
+                  shared_spec, P(dp if dp else None, None, None)),
+        out_specs=(P(dp if dp else None, None, None), P()),
+        check_vma=False)
+    return fn(p["router"]["w"], p["up"], p["gate"], p["down"], shared_in, x)

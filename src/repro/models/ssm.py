@@ -1,0 +1,232 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba-style S6.
+
+RWKV6 [arXiv:2404.05892] — data-dependent decay linear attention:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t        (per head, S: hs x hs)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with token-shift "ddlerp" mixing (low-rank data-dependent interpolation of
+x_t and x_{t-1} per projection target) and a LoRA'd decay w_t.
+
+Mamba/S6 (for hymba's parallel SSM heads):
+    h_t = exp(dt*A) h_{t-1} + dt * B_t x_t ;  y_t = C_t h_t + D x_t
+with a short causal conv in front and a silu gate.
+
+Both expose a train-time `lax.scan` over time and an O(1) single-step decode
+with explicit recurrent state — the reason these archs run `long_500k`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+RWKV_TARGETS = ("r", "k", "v", "w", "g")
+
+
+# ===========================================================================
+# RWKV6 time mix
+# ===========================================================================
+
+def init_rwkv_time_mix(rng, cfg, dtype):
+    d = cfg.d_model
+    hs = cfg.ssm.head_size
+    H = d // hs
+    r = cfg.ssm.lora_rank
+    ks = iter(jax.random.split(rng, 24))
+    p = {
+        "mu_x": jnp.zeros((d,), dtype),          # base mix for the lora input
+        "lora_a": L._normal(next(ks), (d, len(RWKV_TARGETS) * r), 0.01, dtype),
+        "lora_b": L._normal(next(ks), (len(RWKV_TARGETS), r, d), 0.01, dtype),
+        "mu": jnp.zeros((len(RWKV_TARGETS), d), dtype),
+        "w_base": jnp.broadcast_to(
+            jnp.linspace(-6.0, -0.5, d).astype(dtype), (d,)),  # per-channel decay bias
+        "u": L._normal(next(ks), (H, hs), 0.3, dtype),          # bonus ("first token")
+        "wr": L.dense_init(next(ks), d, d, dtype),
+        "wk": L.dense_init(next(ks), d, d, dtype),
+        "wv": L.dense_init(next(ks), d, d, dtype),
+        "wg": L.dense_init(next(ks), d, d, dtype),
+        "wo": L.dense_init(next(ks), d, d, dtype),
+        "ln_out": L.layernorm_init(hs, dtype),   # per-head groupnorm
+    }
+    return p
+
+
+def _rwkv_mix(p, x, x_prev):
+    """ddlerp: per-target data-dependent interpolation of x and x_prev.
+    x, x_prev: (B, T, d) -> dict target -> (B, T, d)."""
+    xx = x_prev - x
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    r = p["lora_a"].shape[1] // len(RWKV_TARGETS)
+    z = jnp.tanh(base @ p["lora_a"].astype(x.dtype))           # (B,T,5r)
+    z = z.reshape(*z.shape[:-1], len(RWKV_TARGETS), r)
+    dyn = jnp.einsum("btnr,nrd->btnd", z, p["lora_b"].astype(x.dtype))
+    mixed = {}
+    for i, t in enumerate(RWKV_TARGETS):
+        m = p["mu"][i].astype(x.dtype) + dyn[..., i, :]
+        mixed[t] = x + xx * m
+    return mixed
+
+
+def _rwkv_head_step(r_t, k_t, v_t, w_t, u, S):
+    """One step of the per-head recurrence.
+    r,k,v: (B,H,hs); w: (B,H,hs) decay in (0,1); u: (H,hs); S: (B,H,hs,hs)."""
+    kv = k_t[..., :, None] * v_t[..., None, :]                 # (B,H,hs,hs)
+    y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+    S = w_t[..., :, None] * S + kv
+    return y, S
+
+
+def rwkv_time_mix(p, cfg, x, x_prev_init, S_init):
+    """Full-sequence scan. x: (B, T, d). Returns (y, (x_last, S_last))."""
+    B, T, d = x.shape
+    hs = cfg.ssm.head_size
+    H = d // hs
+    x_prev = jnp.concatenate([x_prev_init[:, None], x[:, :-1]], axis=1)
+    m = _rwkv_mix(p, x, x_prev)
+    r = L.dense(p["wr"], m["r"]).reshape(B, T, H, hs)
+    k = L.dense(p["wk"], m["k"]).reshape(B, T, H, hs)
+    v = L.dense(p["wv"], m["v"]).reshape(B, T, H, hs)
+    g = jax.nn.silu(L.dense(p["wg"], m["g"]))
+    w = jnp.exp(-jnp.exp((p["w_base"].astype(jnp.float32)
+                          + m["w"].astype(jnp.float32)))).reshape(B, T, H, hs)
+
+    u = p["u"].astype(jnp.float32)
+
+    def body(S, xs):
+        r_t, k_t, v_t, w_t = xs
+        y, S = _rwkv_head_step(r_t.astype(jnp.float32), k_t.astype(jnp.float32),
+                               v_t.astype(jnp.float32), w_t, u, S)
+        return S, y
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    S_last, ys = jax.lax.scan(body, S_init.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3)                               # (B,T,H,hs)
+    y = L.layernorm(p["ln_out"], y.astype(x.dtype))
+    y = (y.reshape(B, T, d) * g)
+    return L.dense(p["wo"], y), (x[:, -1], S_last)
+
+
+def rwkv_time_mix_step(p, cfg, x, state):
+    """Single-token decode. x: (B, 1, d); state=(x_prev (B,d), S (B,H,hs,hs))."""
+    x_prev, S = state
+    y, (x_last, S2) = rwkv_time_mix(p, cfg, x, x_prev, S)
+    return y, (x_last, S2)
+
+
+def init_rwkv_state(cfg, batch, dtype):
+    d = cfg.d_model
+    hs = cfg.ssm.head_size
+    return (jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, d // hs, hs, hs), jnp.float32))
+
+
+# -- RWKV channel mix (its FFN, also token-shifted) ---------------------------
+
+def init_rwkv_channel_mix(rng, cfg, dtype):
+    ks = jax.random.split(rng, 2)
+    return {
+        "mu_k": jnp.zeros((cfg.d_model,), dtype),
+        "wk": L.dense_init(ks[0], cfg.d_model, cfg.d_ff, dtype),
+        "wv": L.dense_init(ks[1], cfg.d_ff, cfg.d_model, dtype),
+    }
+
+
+def rwkv_channel_mix(p, cfg, x, x_prev_init):
+    x_prev = jnp.concatenate([x_prev_init[:, None], x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(L.dense(p["wk"], xk)))
+    return L.dense(p["wv"], k), x[:, -1]
+
+
+# ===========================================================================
+# Mamba / S6 (hymba's SSM heads)
+# ===========================================================================
+
+def init_mamba(rng, cfg, dtype):
+    d = cfg.d_model
+    s = cfg.ssm
+    di = s.expand * d
+    N = s.state_size
+    dt_rank = s.dt_rank or max(1, -(-d // 16))
+    ks = iter(jax.random.split(rng, 8))
+    return {
+        "in_proj": L.dense_init(next(ks), d, 2 * di, dtype),
+        "conv_w": L._normal(next(ks), (s.conv_kernel, di), 0.5, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": L.dense_init(next(ks), di, dt_rank + 2 * N, dtype),
+        "dt_proj": L.dense_init(next(ks), dt_rank, di, dtype, bias=True),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": L.dense_init(next(ks), di, d, dtype),
+    }
+
+
+def _mamba_conv_full(p, x):
+    """Causal depthwise conv over (B, T, di) via explicit taps."""
+    K = p["conv_w"].shape[0]
+    w = p["conv_w"].astype(x.dtype)
+    y = x * w[K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        y = y + shifted * w[K - 1 - i]
+    return y + p["conv_b"].astype(x.dtype)
+
+
+def mamba_apply(p, cfg, x, state=None):
+    """x: (B, T, d). state=None for train; (conv_buf (B,K-1,di), h (B,di,N))
+    for decode (T==1). Returns (y, new_state)."""
+    B, T, d = x.shape
+    s = cfg.ssm
+    N = s.state_size
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    zx = L.dense(p["in_proj"], x)
+    z, xin = jnp.split(zx, 2, axis=-1)                         # (B,T,di) each
+    di = xin.shape[-1]
+    K = p["conv_w"].shape[0]
+
+    if state is None:
+        xc = _mamba_conv_full(p, xin)
+        conv_buf_out = xin[:, -(K - 1):] if T >= K - 1 else jnp.pad(
+            xin, ((0, 0), (K - 1 - T, 0), (0, 0)))
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    else:
+        conv_buf, h0 = state
+        window = jnp.concatenate([conv_buf, xin], axis=1)      # (B,K,di)
+        xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"].astype(x.dtype))[:, None]
+        xc = xc + p["conv_b"].astype(x.dtype)
+        conv_buf_out = window[:, 1:]
+    xc = jax.nn.silu(xc)
+
+    proj = L.dense(p["x_proj"], xc)
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(L.dense(p["dt_proj"], dt_in)).astype(jnp.float32)  # (B,T,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di,N)
+    # §Perf: dA/dBx are formed PER STEP inside the scan body — materializing
+    # the (B,T,di,N) tensors cost ~2x13.4 GiB/layer at prefill_32k and made
+    # hymba the worst memory-roofline pair (EXPERIMENTS.md §Perf-3).
+    dtx = dt * xc.astype(jnp.float32)                          # (B,T,di)
+
+    def body(h, xs):
+        dt_t, dtx_t, B_t, C_t = xs                             # (B,di),(B,di),(B,N),(B,N)
+        dA_t = jnp.exp(dt_t[..., None] * A)                    # (B,di,N)
+        h = dA_t * h + dtx_t[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (dt.transpose(1, 0, 2), dtx.transpose(1, 0, 2),
+          Bc.astype(jnp.float32).transpose(1, 0, 2),
+          Cc.astype(jnp.float32).transpose(1, 0, 2))
+    h_last, ys = jax.lax.scan(body, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)                  # (B,T,di)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return L.dense(p["out_proj"], y), (conv_buf_out, h_last)
+
+
+def init_mamba_state(cfg, batch, dtype):
+    di = cfg.ssm.expand * cfg.d_model
+    K = cfg.ssm.conv_kernel
+    return (jnp.zeros((batch, K - 1, di), dtype),
+            jnp.zeros((batch, di, cfg.ssm.state_size), jnp.float32))

@@ -1,0 +1,423 @@
+"""Transformer assembly for every assigned arch family.
+
+Layer stacks are `lax.scan` over params stacked on a leading "repeat" axis —
+compile-time/HLO-size critical for the 88–94-layer dry-runs. The repeat unit
+is `cfg.layer_pattern` (gemma2 scans ('local','global') pairs); kimi-k2's
+leading dense layer lives in a separate scanned prefix stack.
+
+Three entry points (the learner / InfServer steps of the TLeague mapping):
+  forward_train(params, cfg, batch)        -> (logits, values, aux)
+  prefill(params, cfg, batch, cache_len)   -> (logits_last, values_last, state)
+  decode_step(params, cfg, tokens, state)  -> (logits, values, state)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def _init_dense_unit(rng, cfg, dtype, with_moe: bool):
+    """One repeat unit for attention-bearing families."""
+    n = len(cfg.layer_pattern)
+    subs = []
+    for j in range(n):
+        ks = iter(jax.random.split(jax.random.fold_in(rng, j), 8))
+        sub = {
+            "attn_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "attn": A.init_attention(next(ks), cfg, dtype),
+            "mlp_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        }
+        if cfg.family == "hybrid":
+            sub["mamba"] = S.init_mamba(next(ks), cfg, dtype)
+            sub["attn_out_norm"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+            sub["ssm_out_norm"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+            sub["fuse_beta"] = jnp.ones((2,), dtype)
+        if with_moe:
+            sub["moe"] = M.init_moe(next(ks), cfg, dtype)
+        else:
+            sub["mlp"] = L.mlp_init(next(ks), cfg.d_model, cfg.d_ff, dtype,
+                                    gated=cfg.mlp_gated)
+        if cfg.post_block_norms:
+            sub["post_attn_norm"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+            sub["post_mlp_norm"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+        subs.append(sub)
+    return {f"sub{j}": s for j, s in enumerate(subs)}
+
+
+def _init_rwkv_unit(rng, cfg, dtype):
+    ks = jax.random.split(rng, 2)
+    return {"sub0": {
+        "tm_norm": L.layernorm_init(cfg.d_model, dtype),
+        "time_mix": S.init_rwkv_time_mix(ks[0], cfg, dtype),
+        "cm_norm": L.layernorm_init(cfg.d_model, dtype),
+        "channel_mix": S.init_rwkv_channel_mix(ks[1], cfg, dtype),
+    }}
+
+
+def _n_repeats(cfg):
+    n_unit = len(cfg.layer_pattern)
+    fkd = cfg.moe.first_k_dense if cfg.moe else 0
+    n = cfg.num_layers - fkd
+    assert n % n_unit == 0, (cfg.name, cfg.num_layers, cfg.layer_pattern)
+    return n // n_unit
+
+
+def init_params(rng, cfg) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = iter(jax.random.split(rng, 8))
+    p: Dict[str, Any] = {"embed": L.embed_init(next(ks), cfg.vocab_size, cfg.d_model, dtype)}
+
+    if cfg.family == "ssm":
+        unit_fn = lambda r: _init_rwkv_unit(r, cfg, dtype)
+    else:
+        unit_fn = lambda r: _init_dense_unit(r, cfg, dtype, with_moe=cfg.moe is not None)
+
+    reps = _n_repeats(cfg)
+    p["blocks"] = jax.vmap(unit_fn)(jax.random.split(next(ks), reps))
+    if cfg.moe and cfg.moe.first_k_dense:
+        dense_fn = lambda r: _init_dense_unit(r, cfg, dtype, with_moe=False)
+        p["dense_prefix"] = jax.vmap(dense_fn)(
+            jax.random.split(next(ks), cfg.moe.first_k_dense))
+
+    p["final_norm"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(next(ks), cfg.d_model, cfg.vocab_size, dtype)
+    p["value_head"] = {
+        "h": L.dense_init(next(ks), cfg.d_model, cfg.value_head_hidden, dtype, bias=True),
+        "out": L.dense_init(next(ks), cfg.value_head_hidden, 1, dtype, bias=True),
+    }
+    return p
+
+
+# ===========================================================================
+# sublayer application
+# ===========================================================================
+
+def _apply_unit_full(cfg, unit, x, positions, q_chunk=512, unroll=False):
+    """Full-sequence (train) pass of one repeat unit. Returns (x, aux)."""
+    aux = jnp.float32(0.0)
+    if cfg.family == "ssm":
+        sub = unit["sub0"]
+        B = x.shape[0]
+        zprev = jnp.zeros((B, cfg.d_model), x.dtype)
+        h = L.layernorm(sub["tm_norm"], x)
+        S0 = S.init_rwkv_state(cfg, B, x.dtype)[1]
+        y, _ = S.rwkv_time_mix(sub["time_mix"], cfg, h, zprev, S0)
+        x = x + y
+        h = L.layernorm(sub["cm_norm"], x)
+        y, _ = S.rwkv_channel_mix(sub["channel_mix"], cfg, h, zprev)
+        return x + y, aux
+
+    for j, lt in enumerate(cfg.layer_pattern):
+        sub = unit[f"sub{j}"]
+        h = L.norm_apply(cfg.norm, sub["attn_norm"], x)
+        attn_out = A.full_attention(sub["attn"], cfg, h, positions,
+                                    layer_type=lt, q_chunk=q_chunk,
+                                    unroll=unroll)
+        if cfg.family == "hybrid":
+            ssm_out, _ = S.mamba_apply(sub["mamba"], cfg, h)
+            beta = sub["fuse_beta"].astype(x.dtype)
+            attn_out = (0.5 * (
+                beta[0] * L.norm_apply(cfg.norm, sub["attn_out_norm"], attn_out)
+                + beta[1] * L.norm_apply(cfg.norm, sub["ssm_out_norm"], ssm_out))
+            ).astype(x.dtype)
+        if cfg.post_block_norms:
+            attn_out = L.norm_apply(cfg.norm, sub["post_attn_norm"], attn_out)
+        x = x + attn_out
+        h = L.norm_apply(cfg.norm, sub["mlp_norm"], x)
+        if "moe" in sub:
+            y, a = M.moe_apply(sub["moe"], cfg, h)
+            aux = aux + a
+        else:
+            y = L.mlp(sub["mlp"], h, cfg.activation)
+        if cfg.post_block_norms:
+            y = L.norm_apply(cfg.norm, sub["post_mlp_norm"], y)
+        x = x + y
+    return x, aux
+
+
+def _apply_unit_step(cfg, unit, x, cache, positions, window_override=0,
+                     uniform=False):
+    """Single-token decode pass of one repeat unit. Returns (x, new_cache)."""
+    if cfg.family == "ssm":
+        sub = unit["sub0"]
+        x_tm, Sst, x_cm = cache["tm_prev"], cache["tm_S"], cache["cm_prev"]
+        h = L.layernorm(sub["tm_norm"], x)
+        y, (x_tm2, S2) = S.rwkv_time_mix_step(sub["time_mix"], cfg, h, (x_tm, Sst))
+        x = x + y
+        h = L.layernorm(sub["cm_norm"], x)
+        y, x_cm2 = S.rwkv_channel_mix(sub["channel_mix"], cfg, h, x_cm)
+        x = x + y
+        return x, {"tm_prev": x_tm2, "tm_S": S2, "cm_prev": x_cm2}
+
+    new_cache = {}
+    for j, lt in enumerate(cfg.layer_pattern):
+        sub = unit[f"sub{j}"]
+        h = L.norm_apply(cfg.norm, sub["attn_norm"], x)
+        attn_out, kv2 = A.decode_attention(sub["attn"], cfg, h, cache[f"kv{j}"],
+                                           layer_type=lt,
+                                           window_override=window_override,
+                                           uniform=uniform)
+        new_cache[f"kv{j}"] = kv2
+        if cfg.family == "hybrid":
+            ssm_out, st2 = S.mamba_apply(sub["mamba"], cfg, h,
+                                         state=(cache[f"conv{j}"], cache[f"ssm{j}"]))
+            new_cache[f"conv{j}"], new_cache[f"ssm{j}"] = st2
+            beta = sub["fuse_beta"].astype(x.dtype)
+            attn_out = (0.5 * (
+                beta[0] * L.norm_apply(cfg.norm, sub["attn_out_norm"], attn_out)
+                + beta[1] * L.norm_apply(cfg.norm, sub["ssm_out_norm"], ssm_out))
+            ).astype(x.dtype)
+        if cfg.post_block_norms:
+            attn_out = L.norm_apply(cfg.norm, sub["post_attn_norm"], attn_out)
+        x = x + attn_out
+        h = L.norm_apply(cfg.norm, sub["mlp_norm"], x)
+        if "moe" in sub:
+            y, _ = M.moe_apply(sub["moe"], cfg, h)
+        else:
+            y = L.mlp(sub["mlp"], h, cfg.activation)
+        if cfg.post_block_norms:
+            y = L.norm_apply(cfg.norm, sub["post_mlp_norm"], y)
+        x = x + y
+    return x, new_cache
+
+
+# ===========================================================================
+# embedding / heads
+# ===========================================================================
+
+def embed_inputs(params, cfg, batch):
+    """batch: {'tokens': (B,T) int32} and/or modality embeddings per the
+    assignment carve-out: {'patch_embeds': (B,P,d)} (vlm) or
+    {'frame_embeds': (B,T,d)} (audio)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if "patch_embeds" in batch:
+        parts.append(batch["patch_embeds"].astype(cdt))
+    if "frame_embeds" in batch:
+        parts.append(batch["frame_embeds"].astype(cdt))
+    if "tokens" in batch and batch["tokens"] is not None:
+        parts.append(L.embed(params["embed"], batch["tokens"], cdt, cfg.embed_scale))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    B, T = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    return x, positions
+
+
+def heads(params, cfg, x):
+    h = L.norm_apply(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["table"].astype(h.dtype).T
+    else:
+        logits = L.dense(params["lm_head"], h)
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    vh = jax.nn.tanh(L.dense(params["value_head"]["h"], h))
+    values = L.dense(params["value_head"]["out"], vh)[..., 0].astype(jnp.float32)
+    return logits, values
+
+
+# ===========================================================================
+# entry points
+# ===========================================================================
+
+def _maybe_scan(fn, carry, xs, unroll: bool):
+    """lax.scan, or a traced python loop when `unroll` (used by the dry-run
+    to make XLA cost analysis see every repeat — while-loop bodies are
+    otherwise counted once, not x trip-count)."""
+    if not unroll:
+        return jax.lax.scan(fn, carry, xs)
+    R = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for r in range(R):
+        carry, y = fn(carry, jax.tree.map(lambda a: a[r], xs))
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def forward_train(params, cfg, batch, q_chunk=512, remat=False, unroll=False):
+    """Returns (logits (B,T,V) fp32, values (B,T) fp32, aux scalar).
+
+    remat=True checkpoints each scanned repeat unit (activation memory
+    O(sqrt-ish): one unit's activations live at a time in the backward)."""
+    x, positions = embed_inputs(params, cfg, batch)
+
+    def scan_fn(carry, unit):
+        x, aux = carry
+        x, a = _apply_unit_full(cfg, unit, x, positions, q_chunk=q_chunk,
+                                unroll=unroll)
+        return (x, aux + a), None
+
+    if remat:
+        scan_fn = jax.checkpoint(scan_fn)
+
+    aux = jnp.float32(0.0)
+    if "dense_prefix" in params:
+        (x, aux), _ = _maybe_scan(scan_fn, (x, aux), params["dense_prefix"], unroll)
+    (x, aux), _ = _maybe_scan(scan_fn, (x, aux), params["blocks"], unroll)
+    logits, values = heads(params, cfg, x)
+    return logits, values, aux
+
+
+def _init_unit_cache(cfg, batch, cache_len, dtype, prefilled=0):
+    if cfg.family == "ssm":
+        xp, Sst = S.init_rwkv_state(cfg, batch, dtype)
+        return {"tm_prev": xp, "tm_S": Sst, "cm_prev": xp}
+    c = {}
+    for j in range(len(cfg.layer_pattern)):
+        c[f"kv{j}"] = A.init_kv_cache(cfg, batch, cache_len, dtype, prefilled)
+        if cfg.family == "hybrid":
+            conv, h = S.init_mamba_state(cfg, batch, dtype)
+            c[f"conv{j}"], c[f"ssm{j}"] = conv, h
+    return c
+
+
+def init_decode_state(cfg, batch, seq_len, *, sliding=False, prefilled=None):
+    """State for `decode_step`. sliding=True uses the O(window) ring buffer
+    (the sub-quadratic long_500k variant)."""
+    assert not cfg.encoder_only, f"{cfg.name} is encoder-only: no decode step"
+    dtype = jnp.dtype(cfg.compute_dtype)
+    cache_len = min(seq_len, cfg.long_context_window) if sliding else seq_len
+    pref = seq_len if prefilled is None else prefilled
+    pref = min(pref, cache_len)
+    reps = _n_repeats(cfg)
+
+    def one(_):
+        return _init_unit_cache(cfg, batch, cache_len, dtype, prefilled=pref)
+
+    state = {"blocks": jax.vmap(one)(jnp.arange(reps))}
+    if cfg.moe and cfg.moe.first_k_dense:
+        state["dense_prefix"] = jax.vmap(one)(jnp.arange(cfg.moe.first_k_dense))
+    # ring-buffer semantics: `length` is the absolute next position even when
+    # the cache only holds the last `cache_len` entries.
+    state["length"] = jnp.full((batch,), seq_len, jnp.int32)
+    return state
+
+
+def decode_step(params, cfg, tokens, state, *, window=0, unroll=False,
+                uniform=False):
+    """tokens: (B, 1) int32 (or embeds dict). `window` (static) > 0 enables
+    sliding-window masking — pair with a ring-buffer cache of that size for
+    the sub-quadratic long_500k variant. Returns (logits, values, state)."""
+    batch = tokens if isinstance(tokens, dict) else {"tokens": tokens}
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if "tokens" in batch:
+        x = L.embed(params["embed"], batch["tokens"], cdt, cfg.embed_scale)
+    else:
+        x = batch["patch_embeds"].astype(cdt)
+
+    def scan_fn(x, xs):
+        unit, cache = xs
+        if isinstance(cache, dict):
+            cache = dict(cache)
+            for key, sub in cache.items():
+                if isinstance(sub, dict) and "length" in sub:
+                    sub = dict(sub)
+                    sub["length"] = state["length"]
+                    cache[key] = sub
+        x, new_cache = _apply_unit_step(cfg, unit, x, cache, None,
+                                        window_override=window,
+                                        uniform=uniform)
+        return x, new_cache
+
+    new_state = dict(state)
+    if "dense_prefix" in params:
+        x, nc = _maybe_scan(scan_fn, x, (params["dense_prefix"], state["dense_prefix"]),
+                            unroll)
+        new_state["dense_prefix"] = nc
+    x, nc = _maybe_scan(scan_fn, x, (params["blocks"], state["blocks"]), unroll)
+    new_state["blocks"] = nc
+    new_state["length"] = state["length"] + 1
+    logits, values = heads(params, cfg, x)
+    return logits, values, new_state
+
+
+def prefill(params, cfg, batch, *, sliding=False, q_chunk=512, unroll=False,
+            reserve=64):
+    """Full forward + build decode state from the computed K/V.
+
+    `reserve` extra cache slots keep subsequent decode_steps from ring-
+    overwriting the oldest prefilled keys (slot t % cache_len).
+    Returns (logits (B,T,V), values, decode_state)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    B, T = x.shape[0], x.shape[1]
+    dtype = jnp.dtype(cfg.compute_dtype)
+    cache_len = min(T, cfg.long_context_window) if sliding else T + reserve
+
+    def unit_prefill(x, unit):
+        cache = {}
+        if cfg.family == "ssm":
+            sub = unit["sub0"]
+            zprev = jnp.zeros((B, cfg.d_model), x.dtype)
+            h = L.layernorm(sub["tm_norm"], x)
+            S0 = S.init_rwkv_state(cfg, B, x.dtype)[1]
+            y, (xtm, Slast) = S.rwkv_time_mix(sub["time_mix"], cfg, h, zprev, S0)
+            x = x + y
+            h = L.layernorm(sub["cm_norm"], x)
+            y, xcm = S.rwkv_channel_mix(sub["channel_mix"], cfg, h, zprev)
+            x = x + y
+            return x, {"tm_prev": xtm, "tm_S": Slast, "cm_prev": xcm}
+        for j, lt in enumerate(cfg.layer_pattern):
+            sub = unit[f"sub{j}"]
+            h = L.norm_apply(cfg.norm, sub["attn_norm"], x)
+            q, k, v = A._project_qkv(sub["attn"], cfg, h, positions)
+            window = cfg.sliding_window if (lt == "local" and cfg.sliding_window) else 0
+            o = A.chunked_attend(q, k, v, positions, positions,
+                                 causal=not cfg.encoder_only, window=window,
+                                 cap=cfg.attn_logit_softcap,
+                                 scale=cfg.head_dim ** -0.5, q_chunk=q_chunk,
+                                 unroll=unroll)
+            attn_out = L.dense(sub["attn"]["wo"], o.reshape(B, T, cfg.q_dim))
+            kc = A.init_kv_cache(cfg, B, cache_len, dtype, prefilled=0)
+            tail = slice(T - cache_len, T)
+            slot = positions[:, tail] % cache_len
+            bi = jnp.arange(B)[:, None]
+            kc["k"] = kc["k"].at[bi, slot].set(k[:, tail])
+            kc["v"] = kc["v"].at[bi, slot].set(v[:, tail])
+            kc["pos"] = kc["pos"].at[bi, slot].set(positions[:, tail])
+            kc["length"] = jnp.full((B,), T, jnp.int32)
+            cache[f"kv{j}"] = kc
+            if cfg.family == "hybrid":
+                ssm_out, st = S.mamba_apply(sub["mamba"], cfg, h)
+                cache[f"conv{j}"], cache[f"ssm{j}"] = st
+                beta = sub["fuse_beta"].astype(x.dtype)
+                attn_out = (0.5 * (
+                    beta[0] * L.norm_apply(cfg.norm, sub["attn_out_norm"], attn_out)
+                    + beta[1] * L.norm_apply(cfg.norm, sub["ssm_out_norm"], ssm_out))
+                ).astype(x.dtype)
+            if cfg.post_block_norms:
+                attn_out = L.norm_apply(cfg.norm, sub["post_attn_norm"], attn_out)
+            x = x + attn_out
+            h = L.norm_apply(cfg.norm, sub["mlp_norm"], x)
+            if "moe" in sub:
+                y, _ = M.moe_apply(sub["moe"], cfg, h)
+            else:
+                y = L.mlp(sub["mlp"], h, cfg.activation)
+            if cfg.post_block_norms:
+                y = L.norm_apply(cfg.norm, sub["post_mlp_norm"], y)
+            x = x + y
+        return x, cache
+
+    state = {}
+    if "dense_prefix" in params:
+        x, nc = _maybe_scan(unit_prefill, x, params["dense_prefix"], unroll)
+        state["dense_prefix"] = nc
+    x, nc = _maybe_scan(unit_prefill, x, params["blocks"], unroll)
+    state["blocks"] = nc
+    state["length"] = jnp.full((B,), T, jnp.int32)
+    logits, values = heads(params, cfg, x)
+    return logits, values, state

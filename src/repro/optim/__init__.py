@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgd, clip_by_global_norm, Optimizer
+from repro.optim.schedules import constant, linear_warmup_cosine, linear

@@ -1,0 +1,98 @@
+"""Pure-pytree optimizers (no optax in env): AdamW, SGD, global-norm clip.
+
+`adamw(..., master_fp32=True)` keeps fp32 master params + moments inside the
+optimizer state while model params stay bf16 — the TPU dtype policy for the
+>=100B-param assigned archs (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_global_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (new_params, state, metrics)
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0, clip_norm: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params):
+        gnorm = tree_global_norm(grads)
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            upd = mu
+        else:
+            mu = None
+            upd = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), params, upd)
+        return new_params, {"step": step, "mu": mu}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          clip_norm: float = 0.0, master_fp32: bool = False):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros32, params),
+            "nu": jax.tree.map(zeros32, params),
+        }
+        if master_fp32:
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        gnorm = tree_global_norm(grads)
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["mu"], g32)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * jnp.square(g), state["nu"], g32)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        base = state.get("master", params)
+
+        def upd(p, m, n):
+            u = (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return p.astype(jnp.float32) - lr_t * u
+
+        new_base = jax.tree.map(upd, base, mu, nu)
+        new_state = {"step": step, "mu": mu, "nu": nu}
+        if master_fp32:
+            new_state["master"] = new_base
+        new_params = jax.tree.map(lambda b, p: b.astype(p.dtype), new_base, params)
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,25 @@
+"""Learning-rate schedules (step -> lr), jit-safe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.float32(lr)
+
+
+def linear(lr0, lr1, steps):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / steps, 0.0, 1.0)
+        return jnp.float32(lr0) * (1 - t) + jnp.float32(lr1) * t
+    return fn
+
+
+def linear_warmup_cosine(peak, warmup_steps, total_steps, floor=0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((s - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return fn

@@ -1,0 +1,5 @@
+from repro.rl.distributions import categorical_logp, categorical_entropy, categorical_sample, categorical_kl
+from repro.rl.returns import gae, lambda_return, discounted_return
+from repro.rl.vtrace import vtrace
+from repro.rl.ppo import ppo_loss, PPOConfig
+from repro.rl.vtrace_loss import vtrace_loss, VTraceConfig

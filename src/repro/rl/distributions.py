@@ -1,0 +1,32 @@
+"""Categorical policy distribution helpers (logits in fp32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def categorical_logp(logits, actions):
+    """logits: (..., A) fp32; actions: (...) int32 -> (...) fp32 log pi(a)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    la = jnp.take_along_axis(logits, actions[..., None], axis=-1)[..., 0]
+    return la - logz
+
+
+def categorical_entropy(logits):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    return -jnp.sum(p * logp, axis=-1)
+
+
+def categorical_kl(logits_p, logits_q):
+    """KL(p || q) — the teacher-KL penalty hook (paper §InfServer)."""
+    lp = jax.nn.log_softmax(logits_p, axis=-1)
+    lq = jax.nn.log_softmax(logits_q, axis=-1)
+    return jnp.sum(jnp.exp(lp) * (lp - lq), axis=-1)
+
+
+def categorical_sample(rng, logits, valid_actions: int | None = None):
+    if valid_actions is not None:
+        mask = jnp.arange(logits.shape[-1]) < valid_actions
+        logits = jnp.where(mask, logits, -jnp.inf)
+    return jax.random.categorical(rng, logits, axis=-1)

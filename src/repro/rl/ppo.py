@@ -1,0 +1,72 @@
+"""PPO-clip loss (the paper's primary proxy-RL; borrowed structure from
+openai/baselines' ppo2 as the paper did)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.distributions import categorical_entropy, categorical_kl, categorical_logp
+from repro.rl.returns import gae
+
+
+@dataclass(frozen=True)
+class PPOConfig:
+    clip_eps: float = 0.2
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip_value: bool = True
+    normalize_adv: bool = True
+    teacher_kl_coef: float = 0.0   # KL(pi || teacher) — paper §InfServer hook
+
+
+def ppo_loss(logits, values, traj, hp: PPOConfig, teacher_logits=None):
+    """logits: (B,T,A) fp32; values: (B,T) fp32.
+
+    traj fields (B,T): actions, behavior_logp, behavior_values, rewards,
+    discounts; bootstrap_value (B,); mask (B,T) valid steps.
+    Returns (loss, metrics).
+    """
+    actions = traj["actions"]
+    mask = traj.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(traj["rewards"])
+    msum = jnp.maximum(jnp.sum(mask), 1.0)
+
+    logp = categorical_logp(logits, actions)
+    ratio = jnp.exp(logp - traj["behavior_logp"])
+
+    adv, v_targ = gae(traj["rewards"], traj["behavior_values"], traj["discounts"],
+                      traj["bootstrap_value"], lam=hp.lam)
+    adv = jax.lax.stop_gradient(adv)
+    v_targ = jax.lax.stop_gradient(v_targ)
+    if hp.normalize_adv:
+        mean = jnp.sum(adv * mask) / msum
+        var = jnp.sum(jnp.square(adv - mean) * mask) / msum
+        adv = (adv - mean) * jax.lax.rsqrt(var + 1e-8)
+
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - hp.clip_eps, 1.0 + hp.clip_eps) * adv
+    pg_loss = -jnp.sum(jnp.minimum(unclipped, clipped) * mask) / msum
+
+    v_err = jnp.square(values - v_targ)
+    if hp.clip_value:
+        v_clip = traj["behavior_values"] + jnp.clip(
+            values - traj["behavior_values"], -hp.clip_eps, hp.clip_eps)
+        v_err = jnp.maximum(v_err, jnp.square(v_clip - v_targ))
+    v_loss = 0.5 * jnp.sum(v_err * mask) / msum
+
+    ent = jnp.sum(categorical_entropy(logits) * mask) / msum
+    loss = pg_loss + hp.value_coef * v_loss - hp.entropy_coef * ent
+
+    metrics = {"pg_loss": pg_loss, "v_loss": v_loss, "entropy": ent,
+               "ratio_mean": jnp.sum(ratio * mask) / msum,
+               "clip_frac": jnp.sum((jnp.abs(ratio - 1.0) > hp.clip_eps) * mask) / msum}
+    if teacher_logits is not None and hp.teacher_kl_coef:
+        kl = jnp.sum(categorical_kl(logits, teacher_logits) * mask) / msum
+        loss = loss + hp.teacher_kl_coef * kl
+        metrics["teacher_kl"] = kl
+    return loss, metrics

@@ -1,0 +1,36 @@
+"""V-trace (IMPALA) off-policy corrected targets [Espeholt et al. 2018],
+the paper's second supported proxy-RL algorithm (tleague.learners.VtraceLearner).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vtrace(behavior_logp, target_logp, rewards, values, discounts, bootstrap,
+           *, lam=1.0, clip_rho=1.0, clip_c=1.0):
+    """All per-step arrays (B, T); bootstrap (B,).
+
+    Returns (vs, pg_advantages):
+      rho_t = min(clip_rho, pi/mu);  c_t = lam * min(clip_c, pi/mu)
+      delta_t = rho_t (r_t + gamma_t v_{t+1} - v_t)
+      vs_t = v_t + delta_t + gamma_t c_t (vs_{t+1} - v_{t+1})
+      adv_t = rho_t (r_t + gamma_t vs_{t+1} - v_t)
+    """
+    rho = jnp.exp(target_logp - behavior_logp)
+    rho_c = jnp.minimum(clip_rho, rho)
+    c = lam * jnp.minimum(clip_c, rho)
+    v_tp1 = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
+    deltas = rho_c * (rewards + discounts * v_tp1 - values)
+
+    def body(acc, xs):
+        delta_t, disc_t, c_t = xs
+        acc = delta_t + disc_t * c_t * acc
+        return acc, acc
+
+    xs = (deltas.T, discounts.T, c.T)
+    _, acc_t = jax.lax.scan(body, jnp.zeros_like(bootstrap), xs, reverse=True)
+    vs = values + acc_t.T
+    vs_tp1 = jnp.concatenate([vs[:, 1:], bootstrap[:, None]], axis=1)
+    pg_adv = rho_c * (rewards + discounts * vs_tp1 - values)
+    return jax.lax.stop_gradient(vs), jax.lax.stop_gradient(pg_adv)

@@ -1,0 +1,40 @@
+"""V-trace actor-critic loss (IMPALA learner; tleague.learners.VtraceLearner
+equivalent, loss structure borrowed from deepmind/trfl as the paper did)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl.distributions import categorical_entropy, categorical_logp
+from repro.rl.vtrace import vtrace
+
+
+@dataclass(frozen=True)
+class VTraceConfig:
+    value_coef: float = 0.5
+    entropy_coef: float = 0.01
+    gamma: float = 0.99
+    lam: float = 1.0
+    clip_rho: float = 1.0
+    clip_c: float = 1.0
+
+
+def vtrace_loss(logits, values, traj, hp: VTraceConfig):
+    actions = traj["actions"]
+    mask = traj.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(traj["rewards"])
+    msum = jnp.maximum(jnp.sum(mask), 1.0)
+
+    logp = categorical_logp(logits, actions)
+    vs, pg_adv = vtrace(traj["behavior_logp"], jax.lax.stop_gradient(logp),
+                        traj["rewards"], values, traj["discounts"],
+                        traj["bootstrap_value"], lam=hp.lam,
+                        clip_rho=hp.clip_rho, clip_c=hp.clip_c)
+    pg_loss = -jnp.sum(logp * pg_adv * mask) / msum
+    v_loss = 0.5 * jnp.sum(jnp.square(values - vs) * mask) / msum
+    ent = jnp.sum(categorical_entropy(logits) * mask) / msum
+    loss = pg_loss + hp.value_coef * v_loss - hp.entropy_coef * ent
+    return loss, {"pg_loss": pg_loss, "v_loss": v_loss, "entropy": ent}

@@ -1,0 +1,11 @@
+from repro.utils.pytree import (
+    tree_count_params,
+    tree_bytes,
+    tree_zeros_like,
+    tree_cast,
+    tree_global_norm,
+    tree_add,
+    tree_scale,
+    tree_lerp,
+)
+from repro.utils.registry import Registry

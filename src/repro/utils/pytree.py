@@ -1,0 +1,39 @@
+"""Small pytree helpers used across the framework (no flax/optax in env)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_lerp(a, b, t):
+    """a + t * (b - a), used for polyak-style parameter mixing."""
+    return jax.tree.map(lambda x, y: x + t * (y - x), a, b)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the real (1-device) CPU platform; only
+# dryrun.py forces 512 host devices (and only in its own process).
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,30 @@
+"""Checkpoint roundtrip: params pytree + league state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_league, load_pytree, save_league, save_pytree
+from repro.configs import get_arch
+from repro.core import LeagueMgr
+from repro.models import init_params
+
+
+def test_pytree_roundtrip(tmp_path):
+    cfg = get_arch("tleague-policy-s")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "p.npz")
+    save_pytree(path, params)
+    loaded = load_pytree(path, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_league_state_roundtrip(tmp_path):
+    lg = LeagueMgr()
+    lg.add_learning_agent("main", {"w": jnp.ones(3)})
+    lg.end_learning_period("main", {"w": jnp.ones(3) * 2})
+    path = str(tmp_path / "league.json")
+    save_league(path, lg.league_state())
+    state = load_league(path)
+    assert state["frozen_pool"] == ["main:0000"]
+    assert state["agents"]["main"] == "main:0001"

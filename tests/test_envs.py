@@ -1,0 +1,114 @@
+"""Environment invariants: token ranges, zero-sum structure, jit/vmap
+compatibility, bomb/blast mechanics, duel frag accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import make_env
+
+KEY = jax.random.PRNGKey(11)
+
+
+@pytest.mark.parametrize("name", ["rps", "rps_biased", "pommerman_lite", "duel"])
+def test_env_protocol(name):
+    env = make_env(name)
+    spec = env.spec
+    state, obs = env.reset(KEY)
+    assert obs.shape == (spec.num_agents, spec.obs_len)
+    assert obs.dtype == jnp.int32
+    assert bool((obs >= 0).all()) and bool((obs < spec.obs_vocab).all())
+    acts = jnp.zeros((spec.num_agents,), jnp.int32)
+    state, obs, rew, done, info = env.step(state, acts, KEY)
+    assert obs.shape == (spec.num_agents, spec.obs_len)
+    assert rew.shape == (spec.num_agents,)
+    assert done.dtype == jnp.bool_
+
+
+@pytest.mark.parametrize("name", ["rps", "pommerman_lite"])
+def test_env_jit_vmap(name):
+    env = make_env(name)
+    n = 4
+    states, obs = jax.jit(jax.vmap(env.reset))(jax.random.split(KEY, n))
+    acts = jnp.zeros((n, env.spec.num_agents), jnp.int32)
+    step = jax.jit(jax.vmap(env.step))
+    states, obs, rew, done, info = step(states, acts, jax.random.split(KEY, n))
+    assert rew.shape == (n, env.spec.num_agents)
+
+
+def test_rps_zero_sum_and_payoff():
+    env = make_env("rps")
+    state, _ = env.reset(KEY)
+    # paper beats rock
+    state, _, rew, _, _ = env.step(state, jnp.array([1, 0]), KEY)
+    assert float(rew[0]) == 1.0 and float(rew[1]) == -1.0
+    # same action ties
+    state, _, rew, _, _ = env.step(state, jnp.array([2, 2]), KEY)
+    assert float(rew[0]) == 0.0 and float(rew[1]) == 0.0
+    # obs exposes opponent's last move
+    _, obs, *_ = env.reset(KEY), None
+    state2, obs2 = env.reset(KEY)
+    state2, obs2, _, _, _ = env.step(state2, jnp.array([1, 2]), KEY)
+    assert int(obs2[0, 0]) == 2 and int(obs2[1, 0]) == 1
+
+
+def test_rps_episode_ends():
+    env = make_env("rps", episode_len=3)
+    state, _ = env.reset(KEY)
+    for t in range(3):
+        state, _, _, done, _ = env.step(state, jnp.array([0, 0]), KEY)
+    assert bool(done)
+
+
+def test_pommerman_bomb_kills_and_team_reward():
+    env = make_env("pommerman_lite", wood_prob=0.0, shaping=0.0)
+    state, obs = env.reset(KEY)
+    # agent 0 drops a bomb at its corner and stays: it should die and team B win
+    idle = jnp.zeros((4,), jnp.int32)
+    state, obs, rew, done, info = env.step(state, idle.at[0].set(5), KEY)
+    assert int(state["ammo"][0]) == 0
+    for _ in range(5):
+        if bool(done):
+            break
+        state, obs, rew, done, info = env.step(state, idle, KEY)
+    assert not bool(state["alive"][0])          # suicided
+    if bool(done):
+        # team A lost both? only agent 0 dead; game continues unless...
+        pass
+    # run to the end with idle actions; eventually tie or a winner
+    t = 0
+    while not bool(done) and t < 120:
+        state, obs, rew, done, info = env.step(state, idle, KEY)
+        t += 1
+    assert bool(done)
+    r = np.asarray(rew)
+    assert abs(r[:2].sum() + 0) == abs(r[:2].sum())  # finite
+    # zero-sum team terminal reward
+    assert abs(r.sum()) < 1e-6
+
+
+def test_pommerman_movement_blocked_by_rigid():
+    env = make_env("pommerman_lite", wood_prob=0.0)
+    state, _ = env.reset(KEY)
+    # agent 0 at (0,0); rigid walls at odd,odd — (1,1) is rigid. Moving
+    # down then right twice should be legal along the corridor.
+    a = jnp.zeros((4,), jnp.int32)
+    state, *_ = env.step(state, a.at[0].set(2), KEY)   # down -> (1,0)
+    assert tuple(np.asarray(state["pos"][0])) == (1, 0)
+    state, *_ = env.step(state, a.at[0].set(4), KEY)   # right -> (1,1) rigid!
+    assert tuple(np.asarray(state["pos"][0])) == (1, 0)
+
+
+def test_duel_fire_and_frag():
+    env = make_env("duel")
+    state, _ = env.reset(KEY)
+    # place agent 0 facing east with agent 1 in line
+    state["pos"] = jnp.array([[4, 0], [4, 3], [0, 8], [8, 8]])
+    state["facing"] = jnp.array([1, 3, 2, 0])    # 0 faces E toward 1
+    state, obs, rew, done, info = env.step(
+        state, jnp.array([4, 0, 0, 0]), KEY)
+    assert int(info["frags"][0]) == 1
+    assert float(rew[0]) > 0 and float(rew[1]) < 0
+    # victim respawned at a corner
+    corners = {(0, 0), (0, 8), (8, 0), (8, 8)}
+    assert tuple(np.asarray(state["pos"][1])) in corners

@@ -1,0 +1,134 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.vtrace_scan.ref import reverse_discounted_scan_ref
+from repro.rl.returns import gae
+from repro.rl.vtrace import vtrace
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,Tq,Tk,d", [
+    (1, 4, 2, 128, 128, 64),
+    (2, 8, 8, 64, 64, 32),      # MHA (KV == H)
+    (1, 4, 1, 256, 256, 64),    # MQA
+    (2, 6, 2, 96, 160, 64),     # ragged: padding path, cross lengths
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, H, KV, Tq, Tk, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Tq, d), dtype)
+    k = jax.random.normal(ks[1], (B, KV, Tk, d), dtype)
+    v = jax.random.normal(ks[2], (B, KV, Tk, d), dtype)
+    causal = Tq == Tk
+    o = flash_attention(q, k, v, d ** -0.5, causal, 0, 0.0, 64, 64, True)
+    r = attention_ref(q, k, v, scale=d ** -0.5, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (32, 0.0), (0, 50.0),
+                                        (64, 30.0)])
+def test_flash_attention_window_softcap(window, cap):
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, T, d = 2, 4, 2, 128, 64
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    o = flash_attention(q, k, v, d ** -0.5, True, window, cap, 64, 64, True)
+    r = attention_ref(q, k, v, scale=d ** -0.5, causal=True, window=window,
+                      cap=cap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_flash_attention_grad():
+    """custom_vjp backward (recompute through ref) matches ref autodiff."""
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, T, d = 1, 2, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+
+    f_k = lambda q, k, v: jnp.sum(jnp.square(
+        flash_attention(q, k, v, d ** -0.5, True, 0, 0.0, 32, 32, True)))
+    f_r = lambda q, k, v: jnp.sum(jnp.square(
+        attention_ref(q, k, v, scale=d ** -0.5, causal=True)))
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+@pytest.mark.parametrize("B,T", [(1, 7), (8, 64), (13, 100), (32, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_reverse_scan_shapes(B, T, dtype):
+    ks = jax.random.split(KEY, 3)
+    deltas = jax.random.normal(ks[0], (B, T), dtype)
+    decays = (jax.random.uniform(ks[1], (B, T)) * 0.99).astype(dtype)
+    init = jax.random.normal(ks[2], (B,))
+    y = reverse_discounted_scan(deltas, decays, init, interpret=True)
+    r = reverse_discounted_scan_ref(deltas, decays, init)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_scan_kernel_equals_gae():
+    """The kernel primitive computes GAE exactly: adv = scan(deltas, g*lam)."""
+    ks = jax.random.split(KEY, 4)
+    B, T = 4, 37
+    rewards = jax.random.normal(ks[0], (B, T))
+    values = jax.random.normal(ks[1], (B, T))
+    discounts = (jax.random.bernoulli(ks[2], 0.95, (B, T)) * 0.99).astype(jnp.float32)
+    boot = jax.random.normal(ks[3], (B,))
+    adv, _ = gae(rewards, values, discounts, boot, lam=0.9)
+    v_tp1 = jnp.concatenate([values[:, 1:], boot[:, None]], axis=1)
+    deltas = rewards + discounts * v_tp1 - values
+    y = reverse_discounted_scan(deltas, discounts * 0.9, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(adv), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_scan_kernel_equals_vtrace():
+    """vs - v == scan(rho*delta, gamma*c) — the V-trace recursion."""
+    ks = jax.random.split(KEY, 6)
+    B, T = 3, 21
+    b_logp = -jnp.abs(jax.random.normal(ks[0], (B, T)))
+    t_logp = -jnp.abs(jax.random.normal(ks[1], (B, T)))
+    rewards = jax.random.normal(ks[2], (B, T))
+    values = jax.random.normal(ks[3], (B, T))
+    discounts = 0.99 * jnp.ones((B, T))
+    boot = jax.random.normal(ks[4], (B,))
+    vs, _ = vtrace(b_logp, t_logp, rewards, values, discounts, boot)
+    rho = jnp.minimum(1.0, jnp.exp(t_logp - b_logp))
+    c = jnp.minimum(1.0, jnp.exp(t_logp - b_logp))
+    v_tp1 = jnp.concatenate([values[:, 1:], boot[:, None]], axis=1)
+    deltas = rho * (rewards + discounts * v_tp1 - values)
+    acc = reverse_discounted_scan(deltas, discounts * c, interpret=True)
+    np.testing.assert_allclose(np.asarray(values + acc), np.asarray(vs),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 3, 256), (1, 7, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_shapes(shape, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], shape, dtype)
+    w = jax.random.normal(ks[1], (shape[-1],), jnp.float32)
+    y = rmsnorm(x, w, interpret=True)
+    r = rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))

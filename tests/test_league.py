@@ -1,0 +1,151 @@
+"""League machinery: payoff/Elo, opponent samplers, ModelPool semantics,
+HyperMgr PBT, LeagueMgr lifecycle — the paper's §3.2 contracts."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import (EloMatchGameMgr, ExploiterGameMgr, Hyperparam,
+                        HyperMgr, LeagueMgr, MatchResult, ModelKey, ModelPool,
+                        PayoffMatrix, PFSPGameMgr, SelfPlayPFSPGameMgr,
+                        UniformGameMgr)
+
+
+def mk(v, agent="main"):
+    return ModelKey(agent, v)
+
+
+def res(a, b, outcome):
+    return MatchResult(learner_key=a, opponent_keys=(b,), outcome=outcome)
+
+
+def test_payoff_counts_and_winrate():
+    p = PayoffMatrix()
+    a, b = mk(0), mk(1)
+    p.add_model(a), p.add_model(b)
+    for _ in range(8):
+        p.record(res(a, b, +1))
+    for _ in range(2):
+        p.record(res(a, b, -1))
+    assert p.games(a, b) == 10
+    # 8 wins / 10 with prior(0.5, 2 games) => (8+1)/12
+    assert abs(p.winrate(a, b) - 9 / 12) < 1e-9
+    assert abs(p.winrate(a, b) + p.winrate(b, a) - 1.0) < 1e-9
+
+
+def test_elo_winner_gains():
+    p = PayoffMatrix()
+    a, b = mk(0), mk(1)
+    p.add_model(a), p.add_model(b)
+    p.record(res(a, b, +1))
+    assert p.elo[a] > 1200.0 > p.elo[b]
+    # zero-sum rating update
+    assert abs((p.elo[a] - 1200.0) + (p.elo[b] - 1200.0)) < 1e-9
+
+
+def test_pfsp_prefers_hard_opponents():
+    p = PayoffMatrix()
+    me, easy, hard = mk(9), mk(0), mk(1)
+    for m in (me, easy, hard):
+        p.add_model(m)
+    for _ in range(20):
+        p.record(res(me, easy, +1))   # beat easy always
+        p.record(res(me, hard, -1))   # lose to hard always
+    gm = PFSPGameMgr(weighting="squared", payoff=p, seed=0)
+    picks = collections.Counter(
+        gm.get_player(me, [easy, hard]) for _ in range(300))
+    assert picks[hard] > 250, picks   # (1-p)^2 heavily favors the hard one
+
+
+def test_uniform_recent_window():
+    gm = UniformGameMgr(recent_n=2, seed=0)
+    cands = [mk(i) for i in range(10)]
+    for c in cands:
+        gm.add_player(c)
+    picks = {gm.get_player(mk(99), cands) for _ in range(100)}
+    assert picks <= set(cands[-2:])
+
+
+def test_sp_pfsp_mixture_fraction():
+    gm = SelfPlayPFSPGameMgr(self_play_frac=0.35, payoff=PayoffMatrix(), seed=1)
+    me = mk(5)
+    cands = [mk(i) for i in range(3)]
+    for c in cands + [me]:
+        gm.add_player(c)
+    n = 2000
+    self_picks = sum(gm.get_opponent(me, cands) == me for _ in range(n))
+    assert 0.28 < self_picks / n < 0.42   # ~35%
+
+
+def test_exploiter_targets_latest_main():
+    gm = ExploiterGameMgr(target_agent_id="main", payoff=PayoffMatrix())
+    cands = [mk(0, "main"), mk(1, "main"), mk(0, "exploiter:0")]
+    for c in cands:
+        gm.add_player(c)
+    assert gm.get_opponent(mk(0, "exploiter:0"), cands) == mk(1, "main")
+
+
+def test_elo_match_prefers_similar_rating():
+    p = PayoffMatrix()
+    me, near, far = mk(9), mk(0), mk(1)
+    for m in (me, near, far):
+        p.add_model(m)
+    p.elo[me], p.elo[near], p.elo[far] = 1200.0, 1210.0, 2400.0
+    gm = EloMatchGameMgr(sigma=100.0, payoff=p, seed=0)
+    picks = collections.Counter(gm.get_player(me, [near, far])
+                                for _ in range(200))
+    assert picks[near] > 190
+
+
+def test_model_pool_freeze_semantics():
+    pool = ModelPool(num_replicas=3)
+    k = mk(0)
+    pool.push(k, {"w": 1})
+    assert pool.pull(k) == {"w": 1}
+    pool.freeze(k)
+    with pytest.raises(ValueError):
+        pool.push(k, {"w": 2})
+    assert pool.pull_attr(k)["frozen"]
+    # replica reads got load-balanced
+    pool2 = ModelPool(num_replicas=4, seed=1)
+    pool2.push(k, {})
+    for _ in range(200):
+        pool2.pull(k)
+    assert min(pool2.read_counts) > 10
+
+
+def test_hyper_mgr_pbt_perturbs_multiplicatively():
+    hm = HyperMgr(seed=0, perturb_factor=1.2)
+    k = mk(0)
+    h0 = hm.register(k)
+    h1 = hm.explore(k)
+    for f in ("learning_rate", "entropy_coef", "clip_eps"):
+        r = getattr(h1, f) / getattr(Hyperparam(), f)
+        assert abs(r - 1.2) < 1e-9 or abs(r - 1 / 1.2) < 1e-9
+    # exploit copies then perturbs
+    strong = mk(1)
+    hm.register(strong, Hyperparam(learning_rate=1e-2))
+    h2 = hm.exploit_explore(k, strong)
+    assert abs(h2.learning_rate - 1e-2 * 1.2) < 1e-12 or \
+        abs(h2.learning_rate - 1e-2 / 1.2) < 1e-12
+
+
+def test_league_lifecycle():
+    lg = LeagueMgr()
+    k0 = lg.add_learning_agent("main", {"w": 0})
+    assert k0 == mk(0)
+    t = lg.request_task("main")
+    assert t.learner_key == k0
+    assert t.opponent_keys[0] in (k0,)       # only the seed exists
+    lg.report_result(res(k0, k0, 0))
+    k1 = lg.end_learning_period("main", {"w": 1})
+    assert k1 == mk(1)
+    assert lg.model_pool.pull_attr(k0)["frozen"]
+    assert k0 in lg.frozen_pool
+    # the new model warm-started from theta
+    assert lg.model_pool.pull(k1) == {"w": 1}
+    # multi-agent: exploiter joins, payoff shared
+    lg.add_learning_agent("exploiter:0", {"w": 9},
+                          game_mgr=ExploiterGameMgr(payoff=lg.payoff))
+    t2 = lg.request_task("exploiter:0")
+    assert t2.opponent_keys[0].agent_id == "main"

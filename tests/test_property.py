@@ -1,0 +1,97 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MatchResult, ModelKey, PayoffMatrix
+from repro.kernels import reverse_discounted_scan
+from repro.kernels.vtrace_scan.ref import reverse_discounted_scan_ref
+from repro.models import moe as M
+from repro.rl.returns import gae, lambda_return
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 6), st.integers(1, 24), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_reverse_scan_matches_ref(B, T, seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    deltas = jax.random.normal(k1, (B, T))
+    decays = jax.random.uniform(k2, (B, T))
+    init = jax.random.normal(k3, (B,))
+    y = reverse_discounted_scan(deltas, decays, init, interpret=True)
+    r = reverse_discounted_scan_ref(deltas, decays, init)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 4), st.integers(2, 16), st.integers(0, 2 ** 31 - 1),
+       st.floats(0.0, 1.0))
+@settings(**SET)
+def test_gae_telescopes_to_lambda_return(B, T, seed, lam):
+    """advantage + value == lambda-return targets (algebraic identity)."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    r = jax.random.normal(ks[0], (B, T))
+    v = jax.random.normal(ks[1], (B, T))
+    g = jax.random.uniform(ks[2], (B, T)) * 0.99
+    boot = jax.random.normal(ks[3], (B,))
+    adv, targ = gae(r, v, g, boot, lam=lam)
+    ref = lambda_return(r, v, g, boot, lam=lam)
+    np.testing.assert_allclose(np.asarray(targ), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.lists(st.sampled_from([+1, -1, 0]), min_size=1, max_size=60))
+@settings(**SET)
+def test_payoff_invariants(outcomes):
+    """winrate(a,b)+winrate(b,a)==1, Elo total conserved, counts add up."""
+    p = PayoffMatrix()
+    a, b = ModelKey("m", 0), ModelKey("m", 1)
+    p.add_model(a), p.add_model(b)
+    for o in outcomes:
+        p.record(MatchResult(learner_key=a, opponent_keys=(b,), outcome=o))
+    assert abs(p.winrate(a, b) + p.winrate(b, a) - 1.0) < 1e-9
+    assert 0.0 <= p.winrate(a, b) <= 1.0
+    assert abs((p.elo[a] - 1200) + (p.elo[b] - 1200)) < 1e-6
+    assert p.games(a, b) == len(outcomes)
+
+
+@given(st.integers(4, 64), st.integers(2, 16), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_moe_routing_invariants(N, E, k, seed):
+    """Every kept slot is unique; weights renormalize to 1; per-expert load
+    never exceeds capacity."""
+    k = min(k, E)
+    C = max(2, int(N * k * 1.25 / E))
+    gates = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(seed), (N, E)))
+    slot, weight, keep, counts = M.route_topk(gates, k, C)
+    slot_np, keep_np = np.asarray(slot), np.asarray(keep)
+    kept = slot_np[keep_np]
+    assert len(np.unique(kept)) == len(kept)          # no slot collisions
+    assert kept.max(initial=-1) < E * C
+    w = np.asarray(weight)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-4, atol=1e-4)
+    # per-expert kept load <= capacity
+    experts = kept // C
+    _, load = np.unique(experts, return_counts=True)
+    assert (load <= C).all()
+    assert int(np.asarray(counts).sum()) == N * k
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_moe_apply_capacity_drop_keeps_finite(seed):
+    from repro.configs import get_arch
+    cfg = get_arch("qwen3-moe-235b-a22b").smoke()
+    import dataclasses
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.5))  # force drops
+    params = M.init_moe(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 16, cfg.d_model))
+    y, aux = M.moe_apply(params, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(aux))

@@ -1,0 +1,89 @@
+"""Sharding rules: every emitted PartitionSpec divides its dim; the spec
+tables cover all assigned archs; a tiny pjit train step lowers on a local
+mesh (the 512-device production lowering is exercised by dryrun.py)."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.distributed.sharding import (batch_shardings, param_shardings,
+                                        state_shardings)
+from repro.launch.dryrun import ASSIGNED
+from repro.launch.specs import input_specs
+from repro.models import init_params
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    """AbstractMesh: lets us build NamedShardings without 256 devices."""
+    return jax.sharding.AbstractMesh(shape, axes)
+
+
+def _check_divisible(shapes, shardings, mesh):
+    flat_s, _ = jax.tree_util.tree_flatten(shapes)
+    flat_h, _ = jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+    assert len(flat_s) == len(flat_h)
+    for leaf, ns in zip(flat_s, flat_h):
+        for dim, ax in zip(leaf.shape, ns.spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (leaf.shape, ns.spec)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("mesh_shape", [((16, 16), ("data", "model")),
+                                        ((2, 16, 16), ("pod", "data", "model"))])
+def test_param_shardings_divisible(arch, mesh_shape):
+    cfg = get_arch(arch)
+    mesh = fake_mesh(*mesh_shape)
+    shapes = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                            jax.random.PRNGKey(0))
+    shardings = param_shardings(shapes, cfg, mesh)
+    _check_divisible(shapes, shardings, mesh)
+    # something is actually model-sharded (TP is on)
+    specs = [ns.spec for ns in jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))]
+    assert any("model" in str(s) for s in specs), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k", "long_500k"])
+def test_input_shardings_divisible(arch, shape_name):
+    cfg = get_arch(arch)
+    mesh = fake_mesh()
+    kind, sp = input_specs(cfg, shape_name)
+    if kind == "skip":
+        pytest.skip("encoder-only: no decode step")
+    if kind == "decode":
+        _check_divisible(sp["tokens"], batch_shardings(sp["tokens"], mesh), mesh)
+        _check_divisible(sp["state"], state_shardings(sp["state"], cfg, mesh), mesh)
+    else:
+        _check_divisible(sp, batch_shardings(sp, mesh), mesh)
+
+
+def test_local_mesh_train_step_lowers():
+    """A tiny seq train step lowers+compiles under jit with shardings on the
+    1-device local mesh (structure check; scale is dryrun's job)."""
+    import jax.numpy as jnp
+    from repro.launch.steps import make_dryrun_step
+    from repro.launch.mesh import make_local_mesh
+    import dataclasses
+    cfg = dataclasses.replace(get_arch("tleague-policy-m"), max_position=1 << 20)
+    mesh = make_local_mesh()
+    with mesh:
+        # reuse the factory at a tiny shape by monkeypatching the shape table
+        from repro.configs.base import INPUT_SHAPES, InputShape
+        INPUT_SHAPES["tiny_train"] = InputShape("tiny_train", 64, 4, "train")
+        try:
+            built = make_dryrun_step(cfg, "tiny_train", mesh)
+            compiled = jax.jit(built["fn"], in_shardings=built["in_shardings"],
+                               out_shardings=built["out_shardings"]
+                               ).lower(*built["args"]).compile()
+            assert compiled.cost_analysis() is not None
+        finally:
+            INPUT_SHAPES.pop("tiny_train")

@@ -1,0 +1,129 @@
+"""Per-assigned-architecture smoke tests (deliverable f).
+
+Each instantiates the REDUCED same-family variant (<=2 layers, d_model<=256,
+<=4 experts) and runs one forward/train step on CPU asserting output shapes
+and no NaNs; decode-capable archs also check prefill->decode consistency
+against the full forward (the InfServer path equals the Learner path).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.launch.dryrun import ASSIGNED
+from repro.models import (decode_step, forward_train, init_params, prefill)
+from repro.optim import adamw
+from repro.learners.steps import build_seq_train_step, build_mlm_train_step
+
+B, S = 2, 32
+
+
+def make_batch(cfg, rng):
+    if cfg.frontend == "audio":
+        return {"frame_embeds": jax.random.normal(rng, (B, S, cfg.d_model)),
+                "tokens": None}
+    if cfg.frontend == "vision":
+        return {"patch_embeds": jax.random.normal(rng, (B, 8, cfg.d_model)),
+                "tokens": jax.random.randint(rng, (B, S - 8), 0, cfg.vocab_size)}
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(42)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward(arch, key):
+    cfg = get_arch(arch).smoke()
+    assert cfg.num_layers <= 2 and cfg.d_model <= 256
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key)
+    logits, values, aux = forward_train(params, cfg, batch)
+    T = S if cfg.frontend != "vision" else S  # patches + tokens = S total
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert values.shape == (B, T)
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert bool(jnp.isfinite(values).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch, key):
+    cfg = get_arch(arch).smoke()
+    params = init_params(key, cfg)
+    opt = adamw(1e-3, clip_norm=1.0,
+                master_fp32=(cfg.param_dtype == "bfloat16"))
+    opt_state = opt.init(params)
+    if cfg.encoder_only:
+        step = build_mlm_train_step(cfg, opt)
+        batch = {"frame_embeds": jax.random.normal(key, (B, S, cfg.d_model)),
+                 "units": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                 "mask": jax.random.bernoulli(key, 0.3, (B, S))}
+    else:
+        step = build_seq_train_step(cfg, opt, remat=True)
+        batch = make_batch(cfg, key)
+        s_act = batch["tokens"].shape[1]
+        batch.update({
+            "actions": jax.random.randint(key, (B, s_act), 0, cfg.vocab_size),
+            "behavior_logp": -jnp.ones((B, s_act)) * 2.0,
+            "behavior_values": jnp.zeros((B, s_act)),
+            "rewards": jax.random.normal(key, (B, s_act)) * 0.1,
+            "discounts": 0.99 * jnp.ones((B, s_act)),
+            "bootstrap_value": jnp.zeros((B,)),
+        })
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), (arch, metrics)
+    # params actually changed
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                                        - b.astype(jnp.float32)))),
+                     params, p2)
+    assert max(jax.tree.leaves(d)) > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if not get_arch(a).encoder_only])
+def test_prefill_decode_consistency(arch, key):
+    """decode(t+1 | prefill(0..t)) == forward_train(0..t+1) at last position.
+    fp32 compute so the comparison is exact (bf16 is a dtype policy, not an
+    algorithm difference)."""
+    cfg = dataclasses.replace(get_arch(arch).smoke(), compute_dtype="float32")
+    params = init_params(key, cfg)
+    T = 16
+    toks = jax.random.randint(key, (B, T + 1), 0, cfg.vocab_size)
+    full_logits, full_values, _ = forward_train(params, cfg,
+                                                {"tokens": toks})
+    pre_logits, pre_values, state = prefill(params, cfg,
+                                            {"tokens": toks[:, :T]})
+    np.testing.assert_allclose(np.asarray(pre_logits[:, -1]),
+                               np.asarray(full_logits[:, T - 1]),
+                               rtol=1e-4, atol=1e-4)
+    logits1, values1, state = decode_step(params, cfg, toks[:, T:T + 1], state)
+    np.testing.assert_allclose(np.asarray(logits1[:, 0]),
+                               np.asarray(full_logits[:, T]),
+                               rtol=1e-4, atol=1e-4)
+    # a second decode step still matches nothing-dropped semantics
+    assert int(state["length"][0]) == T + 1
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED
+                                  if not get_arch(a).encoder_only])
+def test_sliding_decode_runs(arch, key):
+    """Ring-buffer (sub-quadratic long-context) decode: shapes + finiteness."""
+    from repro.models import init_decode_state
+    cfg = get_arch(arch).smoke()
+    seq = 256   # pretend long context, window=cfg.long_context_window=128
+    state = init_decode_state(cfg, B, seq, sliding=True)
+    window = cfg.long_context_window if cfg.family != "ssm" else 0
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    logits, values, state2 = decode_step(params=init_params(key, cfg),
+                                         cfg=cfg, tokens=tok, state=state,
+                                         window=window)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(state2["length"][0]) == seq + 1

@@ -1,0 +1,46 @@
+"""Tournament/ranking tooling: transitive pools rank correctly; cyclic
+pools (rock-paper-scissors models) get uniform Nash weight — the
+game-theoretic sanity the league analysis relies on."""
+import numpy as np
+
+from repro.core import PayoffMatrix, ModelKey
+from repro.core.tournament import league_report, replicator_ranking, round_robin
+
+
+def mk(i):
+    return ModelKey("m", i)
+
+
+def test_transitive_ranking():
+    # model i beats model j iff i > j (deterministic)
+    models = [mk(i) for i in range(4)]
+    payoff = round_robin(PayoffMatrix(), models,
+                         play=lambda a, b, ep: 1 if a.version > b.version else -1,
+                         episodes_per_pair=6)
+    rep = league_report(payoff)
+    assert rep["best_by_elo"] == str(mk(3))
+    assert rep["best_by_nash"] == str(mk(3))
+    wr = [rep["mean_winrate"][str(m)] for m in models]
+    assert wr == sorted(wr), wr   # monotone in strength
+
+
+def test_cyclic_pool_nash_is_uniform():
+    # rock < paper < scissors < rock
+    beats = {(0, 2), (1, 0), (2, 1)}
+    models = [mk(i) for i in range(3)]
+
+    def play(a, b, ep):
+        return 1 if (a.version, b.version) in beats else -1
+
+    payoff = round_robin(PayoffMatrix(), models, play, episodes_per_pair=10)
+    nash = replicator_ranking(payoff)
+    w = np.array(list(nash.values()))
+    np.testing.assert_allclose(w, 1 / 3, atol=0.05)
+
+
+def test_report_handles_small_pools():
+    assert replicator_ranking(PayoffMatrix()) == {}
+    p = PayoffMatrix()
+    p.add_model(mk(0))
+    rep = league_report(p)
+    assert rep["best_by_elo"] == str(mk(0))
