@@ -4,6 +4,10 @@ Prints ``name,us_per_call,derived`` CSV.
   table3_throughput   — rfps / cfps / repeat ratio per env (paper Table 3)
   table3_scaleup      — rfps vs actor (env) count: the scale-up claim
   seed_infserver      — batched InfServer vs local batch-1 forwards (§3.2)
+  infserver_throughput— central batched inference vs per-actor forwards at
+                        64 simulated actors; writes BENCH_infserver.json
+                        (the paper's Table-3-style serving claim as a
+                        tracked number)
   table12_league_eval — league-trained agent vs scripted bots (Tables 1-2)
   fig4_winrate        — win-rate vs training iterations (Fig. 4), short run
   kernels             — Pallas kernel microbenches (interpret-mode on CPU:
@@ -12,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import sys
 import time
 
 import jax
@@ -125,6 +132,67 @@ def seed_infserver():
           f"per_request;speedup_x={us_local/us_batch:.1f}")
 
 
+def infserver_throughput(num_actors: int = 64, out_path: str | None = None):
+    """Central batched inference vs per-actor batch-1 forwards with
+    `num_actors` simulated clients (§3.2 / Table 3 serving claim). Writes
+    the result to BENCH_infserver.json so the >=2x speedup is tracked."""
+    from repro.actors.policy import make_obs_policy
+    from repro.configs import get_arch
+    from repro.infserver import InfServer
+    from repro.models import init_params
+
+    cfg = get_arch("tleague-policy-s")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    num_actions, obs_len = 6, 26
+    obs1 = np.zeros((1, obs_len), np.int32)
+
+    # baseline: every simulated actor runs its own batch-1 forward
+    policy = make_obs_policy(cfg, num_actions)
+    local_act = jax.jit(policy.act)
+    rng = jax.random.PRNGKey(1)
+    jax.block_until_ready(local_act(params, rng, jnp.asarray(obs1)))
+
+    def per_actor_round():
+        for i in range(num_actors):
+            a, _, _ = local_act(params, jax.random.fold_in(rng, i),
+                                jnp.asarray(obs1))
+        jax.block_until_ready(a)
+
+    us_local = _time(per_actor_round, iters=4) / num_actors
+
+    # central: the same num_actors requests ride one continuous batch
+    server = InfServer(cfg, num_actions, params, max_batch=num_actors)
+
+    def central_round():
+        tickets = [server.submit(obs1) for _ in range(num_actors)]
+        for t in tickets:
+            server.get(t)
+
+    central_round()  # compile the batched path
+    us_central = _time(central_round, iters=4) / num_actors
+
+    speedup = us_local / us_central
+    stats = server.stats()
+    record = {
+        "num_actors": num_actors,
+        "per_actor_us_per_request": round(us_local, 2),
+        "central_batched_us_per_request": round(us_central, 2),
+        "speedup_x": round(speedup, 2),
+        "server_occupancy": round(stats["occupancy"], 4),
+        "server_mean_batch_rows": stats["mean_batch_rows"],
+        "server_mean_batch_latency_ms": round(
+            stats["mean_batch_latency_ms"], 3),
+        "arch": "tleague-policy-s",
+    }
+    path = pathlib.Path(out_path) if out_path else \
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_infserver.json"
+    path.write_text(json.dumps(record, indent=2) + "\n")
+    _emit(f"infserver/per_actor{num_actors}", us_local, "per_request")
+    _emit(f"infserver/central{num_actors}", us_central,
+          f"per_request;speedup_x={speedup:.1f};wrote={path.name}")
+    return record
+
+
 def table12_league_eval(train_iters=16):
     """Tables 1-2: CSP-trained agent vs scripted bots in the FFA duel;
     FRAG reported (kills; no rocket splash => no suicides)."""
@@ -197,14 +265,21 @@ def kernels():
     _emit("kernels/rmsnorm_512x256", us, "interpret_mode")
 
 
+BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
+           "infserver_throughput", "kernels", "fig4_winrate",
+           "table12_league_eval")
+
+
 def main() -> None:
+    """`python benchmarks/run.py [bench ...]` — no args runs everything."""
+    chosen = sys.argv[1:] or list(BENCHES)
+    unknown = [n for n in chosen if n not in BENCHES]
+    assert not unknown, f"unknown benches {unknown}; pick from {BENCHES}"
     print("name,us_per_call,derived", flush=True)
-    table3_throughput()
-    table3_scaleup()
-    seed_infserver()
-    kernels()
-    fig4_winrate()
-    table12_league_eval()
+    for name in chosen:
+        globals()[name]()
+    if sys.argv[1:]:
+        return
     # roofline table (from dry-run artifacts, if present)
     try:
         from benchmarks import roofline

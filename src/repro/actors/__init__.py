@@ -1,3 +1,3 @@
 from repro.actors.policy import make_obs_policy
-from repro.actors.rollout import build_rollout
+from repro.actors.rollout import build_rollout, build_served_rollout
 from repro.actors.actor import Actor

@@ -5,6 +5,14 @@ LeagueMgr (learning policy theta + opponent phi), pull both parameter sets
 from ModelPool, run the Env-Agt interaction, ship the trajectory segment to
 the Learner (here: a DataServer queue), and report game outcomes back to
 LeagueMgr at episode endings.
+
+Two inference modes:
+  * local (default): θ and φ forwards run inside the jitted rollout scan —
+    the TPU-native "Anakin" layout.
+  * served: pass `inf_server=` and every policy forward is routed through
+    the central continuous-batching InfServer (SEED-style), with θ and φ
+    hosted as separate routes of one grouped forward. The Actor keeps the
+    server's routes fresh from the ModelPool before each segment.
 """
 from __future__ import annotations
 
@@ -13,7 +21,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-from repro.actors.rollout import build_rollout
+from repro.actors.rollout import build_rollout, build_served_rollout
 from repro.core import LeagueMgr, MatchResult
 from repro.envs.base import MultiAgentEnv
 
@@ -21,14 +29,21 @@ from repro.envs.base import MultiAgentEnv
 class Actor:
     def __init__(self, env: MultiAgentEnv, cfg, league: LeagueMgr, *,
                  agent_id: str = "main", num_envs: int = 16, unroll_len: int = 16,
-                 learner_slots=None, seed: int = 0):
+                 learner_slots=None, seed: int = 0, inf_server=None):
         self.env, self.cfg, self.league = env, cfg, league
         self.agent_id = agent_id
-        self.rollout, self.init_carry = build_rollout(
-            env, cfg, num_envs=num_envs, unroll_len=unroll_len,
-            learner_slots=learner_slots)
+        self.inf_server = inf_server
+        if inf_server is None:
+            self.rollout, self.init_carry = build_rollout(
+                env, cfg, num_envs=num_envs, unroll_len=unroll_len,
+                learner_slots=learner_slots)
+        else:
+            self.rollout, self.init_carry = build_served_rollout(
+                env, num_envs=num_envs, unroll_len=unroll_len,
+                learner_slots=learner_slots)
         self.rng = jax.random.PRNGKey(seed)
         self.carry = None
+        self._served_theta_key = None
         self.num_envs, self.unroll_len = num_envs, unroll_len
         self.frames_produced = 0   # rfps numerator (paper Table 3)
 
@@ -43,8 +58,23 @@ class Actor:
         phi = self.league.model_pool.pull(task.opponent_keys[0])
         if self.carry is None:
             self.carry = self.init_carry(self._next_rng())
-        self.carry, traj, episodes = self.rollout(theta, phi, self.carry,
-                                                  self._next_rng())
+        if self.inf_server is None:
+            self.carry, traj, episodes = self.rollout(theta, phi, self.carry,
+                                                      self._next_rng())
+        else:
+            # refresh the server's routes from the pool: θ hot-swaps every
+            # segment (the Learner keeps pushing), frozen φ registers once;
+            # evict the previous lineage route when θ's key advances so the
+            # registry doesn't grow by one model per learning period
+            prev = self._served_theta_key
+            if prev is not None and prev != task.learner_key:
+                self.inf_server.evict_model(prev)
+            self._served_theta_key = task.learner_key
+            self.inf_server.update_params(theta, key=task.learner_key)
+            self.inf_server.ensure_model(task.opponent_keys[0], phi)
+            self.carry, traj, episodes = self.rollout(
+                self.inf_server, task.learner_key, task.opponent_keys[0],
+                self.carry, self._next_rng())
         self._report(task, episodes)
         self.frames_produced += self.num_envs * self.unroll_len
         return traj, task

@@ -1,1 +1,1 @@
-from repro.infserver.server import InfServer
+from repro.infserver.server import InfServer, Ticket

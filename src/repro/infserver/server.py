@@ -1,17 +1,36 @@
-"""InfServer: batched inference service (§3.2, optional module).
+"""InfServer: continuous-batching inference service (§3.2).
 
-Collects observations from many Actor clients, runs ONE batched forward on
+Collects observations from many Actor clients, runs ONE grouped forward on
 the accelerator, scatters actions back — SEED-style central inference. On
 TPU this is `serve_step` on the model shards; here the module preserves the
 submit/flush protocol and is what the throughput benchmark compares against
 local (batch-1) forward passes, reproducing the paper's claim that batched
 server inference beats per-actor forwards.
 
+Design (this repo's data-plane rebuild):
+
+* **Ticket futures** — `submit` returns a `Ticket` with `done()`/`result()`;
+  the integer id keeps the legacy `get(ticket)` protocol working.
+* **Bounded request queue** — pending rows are capped; hitting `max_batch`
+  queued rows triggers a flush (the in-process form of backpressure).
+* **Multi-model routing** — one server hosts the learner θ plus several
+  frozen opponents φ. A flush groups tickets by model, pads each model's
+  sub-batch to a shared power-of-two bucket, stacks them to (M, S, L) and
+  runs a single `vmap`-over-models jitted forward: one XLA dispatch per
+  flush, one jit cache entry per (model-set size, bucket) — not per
+  request shape.
+* **Param hot-swap** — `update_params`/`ensure_model` replace a model's
+  pytree in place; params are traced arguments, so new weights never
+  recompile (only the stacked-params cache entry is invalidated).
+* **Telemetry** — per-batch latency and occupancy (real rows / padded
+  rows) feed `stats()`, the Table-3-style serving numbers.
+
 Also hosts the teacher-policy forward for KL penalties (paper §3.2).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,54 +38,228 @@ import numpy as np
 
 from repro.actors.policy import make_obs_policy
 
+_DEFAULT = "__default__"
+
+
+def _bucket(n: int) -> int:
+    """Next power of two >= n: bounds the number of jit cache entries."""
+    return 1 << max(0, (n - 1).bit_length())
+
+
+class Ticket:
+    """Future handle for a submitted observation batch."""
+    __slots__ = ("tid", "model", "rows", "_server")
+
+    def __init__(self, tid: int, model: Hashable, rows: int, server: "InfServer"):
+        self.tid, self.model, self.rows, self._server = tid, model, rows, server
+
+    def done(self) -> bool:
+        return self.tid in self._server._results
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self._server.get(self)
+
+    def __int__(self) -> int:
+        return self.tid
+
+    def __repr__(self):
+        return f"Ticket({self.tid}, model={self.model!r}, rows={self.rows})"
+
 
 class InfServer:
-    def __init__(self, cfg, num_actions: int, params, *, max_batch: int = 256,
+    def __init__(self, cfg, num_actions: int, params=None, *, max_batch: int = 256,
                  seed: int = 0):
         self.cfg = cfg
         self.policy = make_obs_policy(cfg, num_actions)
-        self.params = params
         self.max_batch = max_batch
-        self._pending: List[Tuple[int, np.ndarray]] = []
+        self.rng = jax.random.PRNGKey(seed)
+        # model registry: key -> params, with a version counter so the
+        # stacked-params cache knows when a hot-swap invalidated it
+        self._models: Dict[Hashable, Any] = {}
+        self._versions: Dict[Hashable, int] = {}
+        self._default_key: Optional[Hashable] = None
+        self._stack_cache: Dict[tuple, Any] = {}
+        if params is not None:
+            self.register_model(_DEFAULT, params)
+        # request queue
+        self._pending: List[Tuple[int, Hashable, np.ndarray]] = []
+        self._pending_rows = 0
         self._results: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
         self._next_id = 0
-        self.rng = jax.random.PRNGKey(seed)
+        # forwards: single-model fast path + vmap-over-models grouped path
+        self._act = jax.jit(self.policy.act)
+        self._grouped_act = jax.jit(jax.vmap(self.policy.act))
+        # telemetry
         self.requests_served = 0
         self.batches_run = 0
-        self._act = jax.jit(self.policy.act)
+        self.rows_served = 0
+        self.rows_padded = 0
+        self._latency_sum = 0.0
+        self.last_batch_latency_s = 0.0
+        self.last_batch_models = 0
 
-    def update_params(self, params):
-        """Learner pushed new theta to the ModelPool -> refresh."""
-        self.params = params
+    # -- model registry ------------------------------------------------------
+    @property
+    def params(self):
+        """Legacy accessor: the default model's current params."""
+        return self._models.get(self._default_key)
+
+    def register_model(self, key: Hashable, params) -> None:
+        """Host (or refresh) a model. The first registered model becomes the
+        default route for `submit(obs)` without an explicit model."""
+        if self._default_key is None:
+            self._default_key = key
+        self._versions[key] = self._versions.get(key, -1) + 1
+        self._models[key] = params
+        # entries containing this key can never match again (version bumped)
+        # — drop them now so stale stacked copies don't pin device memory;
+        # entries for other model sets stay warm
+        self._stack_cache = {ck: v for ck, v in self._stack_cache.items()
+                             if all(k != key for k, _ in ck)}
+
+    def ensure_model(self, key: Hashable, params) -> None:
+        """Register if absent — the Actor-facing idempotent route setup."""
+        if key not in self._models:
+            self.register_model(key, params)
+
+    def update_params(self, params, key: Hashable = None) -> None:
+        """Learner pushed new theta to the ModelPool -> hot-swap. Params are
+        traced jit arguments, so no recompilation happens."""
+        if key is None:
+            # a paramless server gets a real default route, not key None
+            key = self._default_key if self._default_key is not None else _DEFAULT
+        self.register_model(key, params)
+
+    def evict_model(self, key: Hashable) -> None:
+        assert not any(k == key for _, k, _ in self._pending), \
+            f"evicting {key!r} with pending requests"
+        self._models.pop(key, None)
+        self._versions.pop(key, None)
+        self._stack_cache.clear()
+        if key == self._default_key:
+            self._default_key = next(iter(self._models), None)
 
     # -- client protocol -----------------------------------------------------
-    def submit(self, obs: np.ndarray) -> int:
-        """Queue a (k, L) observation batch; returns a ticket."""
-        ticket = self._next_id
+    def submit(self, obs: np.ndarray, model: Hashable = None) -> Ticket:
+        """Queue a (k, L) observation batch for `model` (default: θ); returns
+        a ticket future. A full queue (>= max_batch rows) flushes."""
+        key = self._default_key if model is None else model
+        assert key in self._models, f"unknown model route {key!r}"
+        obs = np.asarray(obs)
+        ticket = Ticket(self._next_id, key, obs.shape[0], self)
         self._next_id += 1
-        self._pending.append((ticket, np.asarray(obs)))
-        if sum(o.shape[0] for _, o in self._pending) >= self.max_batch:
+        self._pending.append((ticket.tid, key, obs))
+        self._pending_rows += obs.shape[0]
+        if self._pending_rows >= self.max_batch:
             self.flush()
         return ticket
 
+    @property
+    def queue_depth(self) -> int:
+        return self._pending_rows
+
     def flush(self) -> None:
+        """Run the grouped forward over everything pending and resolve
+        tickets. One XLA dispatch regardless of how many models are routed."""
         if not self._pending:
             return
-        tickets, obs_list = zip(*self._pending)
-        sizes = [o.shape[0] for o in obs_list]
-        big = jnp.concatenate([jnp.asarray(o) for o in obs_list], axis=0)
-        self.rng, k = jax.random.split(self.rng)
-        a, logp, v = self._act(self.params, k, big)
+        t0 = time.perf_counter()
+        pending, self._pending, self._pending_rows = self._pending, [], 0
+
+        groups: Dict[Hashable, List[Tuple[int, np.ndarray]]] = {}
+        for tid, key, obs in pending:
+            groups.setdefault(key, []).append((tid, obs))
+
+        if len(groups) == 1:
+            (key, items), = groups.items()
+            self._flush_single(key, items)
+        else:
+            self._flush_grouped(groups)
+
+        self.requests_served += len(pending)
+        self.batches_run += 1
+        self.last_batch_models = len(groups)
+        self.last_batch_latency_s = time.perf_counter() - t0
+        self._latency_sum += self.last_batch_latency_s
+
+    def _next_rng(self, n: int = 1):
+        self.rng, *ks = jax.random.split(self.rng, n + 1)
+        return ks[0] if n == 1 else jnp.stack(ks)
+
+    def _flush_single(self, key, items) -> None:
+        tickets = [t for t, _ in items]
+        sizes = [o.shape[0] for _, o in items]
+        rows = sum(sizes)
+        big = np.concatenate([o for _, o in items], axis=0)
+        pad = _bucket(rows) - rows
+        if pad:
+            big = np.concatenate([big, np.zeros((pad,) + big.shape[1:],
+                                                big.dtype)], axis=0)
+        a, logp, v = self._act(self._models[key], self._next_rng(), jnp.asarray(big))
+        self._scatter(tickets, sizes, np.asarray(a), np.asarray(logp),
+                      np.asarray(v))
+        self.rows_served += rows
+        self.rows_padded += rows + pad
+
+    def _flush_grouped(self, groups) -> None:
+        keys = sorted(groups, key=repr)
+        per_model = [np.concatenate([o for _, o in groups[k]], axis=0)
+                     for k in keys]
+        rows = [m.shape[0] for m in per_model]
+        S = _bucket(max(rows))
+        obs_mat = np.zeros((len(keys), S) + per_model[0].shape[1:],
+                           per_model[0].dtype)
+        for m, sub in enumerate(per_model):
+            obs_mat[m, :sub.shape[0]] = sub
+        stacked = self._stacked_params(keys)
+        rngs = self._next_rng(len(keys))
+        a, logp, v = self._grouped_act(stacked, rngs, jnp.asarray(obs_mat))
         a, logp, v = np.asarray(a), np.asarray(logp), np.asarray(v)
+        for m, k in enumerate(keys):
+            tickets = [t for t, _ in groups[k]]
+            sizes = [o.shape[0] for _, o in groups[k]]
+            self._scatter(tickets, sizes, a[m], logp[m], v[m])
+        self.rows_served += sum(rows)
+        self.rows_padded += len(keys) * S
+
+    def _stacked_params(self, keys) -> Any:
+        """(M, ...) stacked pytree for the model set, cached until any
+        member hot-swaps (version bump clears the cache)."""
+        cache_key = tuple((k, self._versions[k]) for k in keys)
+        hit = self._stack_cache.get(cache_key)
+        if hit is None:
+            hit = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *(self._models[k] for k in keys))
+            while len(self._stack_cache) >= 8:     # bound without thrashing
+                self._stack_cache.pop(next(iter(self._stack_cache)))
+            self._stack_cache[cache_key] = hit
+        return hit
+
+    def _scatter(self, tickets, sizes, a, logp, v) -> None:
         ofs = 0
         for t, n in zip(tickets, sizes):
-            self._results[t] = (a[ofs:ofs + n], logp[ofs:ofs + n], v[ofs:ofs + n])
+            self._results[t] = (a[ofs:ofs + n], logp[ofs:ofs + n],
+                                v[ofs:ofs + n])
             ofs += n
-        self.requests_served += len(tickets)
-        self.batches_run += 1
-        self._pending.clear()
 
-    def get(self, ticket: int):
-        if ticket not in self._results:
+    def get(self, ticket) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        tid = ticket.tid if isinstance(ticket, Ticket) else int(ticket)
+        if tid not in self._results:
             self.flush()
-        return self._results.pop(ticket)
+        return self._results.pop(tid)
+
+    # -- telemetry ------------------------------------------------------------
+    def stats(self) -> dict:
+        batches = max(self.batches_run, 1)
+        return {
+            "requests_served": self.requests_served,
+            "batches_run": self.batches_run,
+            "rows_served": self.rows_served,
+            "mean_batch_rows": self.rows_served / batches,
+            "occupancy": self.rows_served / max(self.rows_padded, 1),
+            "mean_batch_latency_ms": 1e3 * self._latency_sum / batches,
+            "last_batch_latency_ms": 1e3 * self.last_batch_latency_s,
+            "last_batch_models": self.last_batch_models,
+            "models_hosted": len(self._models),
+            "queue_depth": self.queue_depth,
+        }

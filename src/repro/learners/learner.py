@@ -11,9 +11,17 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import LeagueMgr
 from repro.learners.replay import DataServer
+
+
+def _snapshot(params):
+    """Deep-copy a param pytree before handing it to the ModelPool: the
+    train step donates its param buffers (donate_argnums), so sharing the
+    live object with the pool would leave Actors pulling deleted buffers."""
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), params)
 
 
 class Learner:
@@ -24,8 +32,10 @@ class Learner:
         self.agent_id = agent_id
         self.train_step = train_step
         self.optimizer = optimizer
-        self.params = init_params
-        self.opt_state = optimizer.init(init_params)
+        # private working copy: the caller's init_params object is typically
+        # also the ModelPool's seed entry, and train_step donates its inputs
+        self.params = _snapshot(init_params)
+        self.opt_state = optimizer.init(self.params)
         self.data_server = data_server or DataServer()
         self.publish_every = publish_every
         self.step_count = 0
@@ -46,13 +56,15 @@ class Learner:
                 self.params, self.opt_state, traj)
             self.step_count += 1
             if self.step_count % self.publish_every == 0:
-                self.league.model_pool.push(self.current_key, self.params,
+                self.league.model_pool.push(self.current_key,
+                                            _snapshot(self.params),
                                             step=self.step_count)
         return last_metrics
 
     def end_learning_period(self):
         """Freeze theta into M, warm-start theta_{v+1} (paper lifecycle)."""
-        new_key = self.league.end_learning_period(self.agent_id, self.params)
+        new_key = self.league.end_learning_period(self.agent_id,
+                                                  _snapshot(self.params))
         self.opt_state = self.optimizer.init(self.params)   # fresh moments
         self.task = self.league.request_learner_task(self.agent_id)
         return new_key

@@ -1,54 +1,134 @@
-"""DataServer + ReplayMem: the Learner's embedded data path (§3.2).
+"""DataServer + ring-buffer replay: the Learner's embedded data path (§3.2).
 
-Receives trajectory segments from Actors, stores them in a bounded replay,
-serves minibatches to the train step, and tracks the paper's throughput
-telemetry: rfps (frames received / sec) and cfps (frames consumed / sec);
-cfps/rfps is the average learn-repeat ratio, and a `blocking` mode makes
-cfps track rfps for on-policy PPO (§4.4).
+Receives trajectory segments from Actors, stores them in a preallocated
+NumPy ring buffer keyed by the trajectory structure, serves minibatches to
+the train step, and tracks the paper's throughput telemetry: rfps (frames
+received / sec) and cfps (frames consumed / sec); cfps/rfps is the average
+learn-repeat ratio, and a `blocking` mode makes cfps track rfps for
+on-policy PPO (§4.4).
+
+Storage layout: every trajectory leaf shares a leading "row" axis (one row
+= one unroll of `unroll_len` frames), so the buffer is one fixed array per
+leaf of shape (row_slots,) + leaf.shape[1:], allocated once from the first
+segment's structure. `put` writes rows into fixed slots with at most two
+contiguous copies (no per-put allocation), `sample` is a single vectorized
+fancy-index gather per leaf, and capacity is expressed in frames, not
+segments, so differently-shaped runs get comparable memory budgets.
 """
 from __future__ import annotations
 
-import collections
 import time
-from typing import Any, Deque, Optional
+from typing import List, Optional
 
 import jax
 import numpy as np
 
 
 class DataServer:
-    def __init__(self, capacity_segments: int = 64, seed: int = 0,
-                 blocking: bool = True):
-        self.buf: Deque[Any] = collections.deque(maxlen=capacity_segments)
+    def __init__(self, *, capacity_frames: Optional[int] = None, seed: int = 0,
+                 blocking: bool = True, capacity_segments: int = 64):
+        """`capacity_frames` bounds the buffer in frames (rows * unroll_len).
+        When omitted, the legacy `capacity_segments` bound is translated to
+        frames at first `put` (segments * frames-per-segment). Keyword-only:
+        the first positional used to mean capacity_segments, and silently
+        reinterpreting old callers as a frames bound would shrink their
+        replay by orders of magnitude."""
+        self.capacity_frames = capacity_frames
+        self.capacity_segments = capacity_segments
         self.rng = np.random.default_rng(seed)
         self.blocking = blocking
         self.frames_received = 0
         self.frames_consumed = 0
         self._t0 = time.monotonic()
         self._unconsumed = 0
+        # ring state, allocated lazily from the first segment's structure
+        self._treedef = None
+        self._buffers: List[np.ndarray] = []
+        self._row_shapes: List[tuple] = []
+        self._row_slots = 0
+        self._frames_per_row = 0
+        self._head = 0          # next slot to write
+        self._size = 0          # live rows
+        self._last_rows: Optional[np.ndarray] = None  # slots of the newest segment
+
+    # -- allocation --------------------------------------------------------------
+    def _leaves(self, traj):
+        leaves, treedef = jax.tree_util.tree_flatten(traj)
+        leaves = [np.asarray(x) for x in leaves]
+        if self._treedef is None:
+            self._treedef = treedef
+            # frames-per-row (unroll length T) comes from the (rows, T)
+            # actions leaf when present; row-only payloads count 1 frame/row
+            t_len = 1
+            if isinstance(traj, dict) and "actions" in traj:
+                t_len = int(np.asarray(traj["actions"]).shape[1])
+            self._allocate_with_t(leaves, leaves[0].shape[0], t_len)
+        else:
+            assert treedef == self._treedef, (
+                "trajectory structure changed mid-run: "
+                f"{treedef} != {self._treedef}")
+        return leaves
+
+    def _allocate_with_t(self, leaves, rows: int, t_len: int) -> None:
+        self._frames_per_row = max(1, t_len)
+        cap_frames = self.capacity_frames
+        if cap_frames is None:
+            cap_frames = self.capacity_segments * rows * self._frames_per_row
+        self._row_slots = max(rows, cap_frames // self._frames_per_row)
+        self._row_shapes = [leaf.shape[1:] for leaf in leaves]
+        self._buffers = [np.zeros((self._row_slots,) + s, dtype=leaf.dtype)
+                         for s, leaf in zip(self._row_shapes, leaves)]
 
     # -- actor side --------------------------------------------------------------
     def put(self, traj) -> None:
-        frames = int(np.prod(np.asarray(traj["actions"]).shape[:2]))
+        leaves = self._leaves(traj)
+        rows = leaves[0].shape[0]
+        frames = rows * self._frames_per_row
+        cap = self._row_slots
+        assert rows <= cap, (
+            f"segment of {rows} rows exceeds the {cap}-row ring "
+            f"(capacity_frames={self.capacity_frames})")
+        start = self._head
+        first = min(rows, cap - start)
+        for buf, leaf in zip(self._buffers, leaves):
+            np.copyto(buf[start:start + first], leaf[:first])
+            if first < rows:                       # wraparound: second copy
+                np.copyto(buf[:rows - first], leaf[first:])
+        self._last_rows = (start + np.arange(rows)) % cap
+        self._head = (start + rows) % cap
+        self._size = min(self._size + rows, cap)
         self.frames_received += frames
         self._unconsumed += frames
-        self.buf.append(traj)
 
     # -- learner side -----------------------------------------------------------
     def ready(self) -> bool:
-        return len(self.buf) > 0 and (not self.blocking or self._unconsumed > 0)
+        return self._size > 0 and (not self.blocking or self._unconsumed > 0)
 
-    def sample(self):
-        """Most-recent-first when blocking (on-policy); uniform otherwise."""
-        assert self.buf, "DataServer empty"
-        if self.blocking:
-            traj = self.buf[-1]
+    def sample(self, batch_rows: Optional[int] = None):
+        """Most-recent segment when blocking (on-policy); a uniform
+        vectorized row gather otherwise."""
+        assert self._size > 0, "DataServer empty"
+        if self.blocking and batch_rows is None:
+            idx = self._last_rows
         else:
-            traj = self.buf[self.rng.integers(len(self.buf))]
-        frames = int(np.prod(np.asarray(traj["actions"]).shape[:2]))
+            k = batch_rows if batch_rows is not None else len(self._last_rows)
+            idx = self.rng.integers(self._size, size=k)
+            # map logical (oldest..newest) onto ring slots
+            idx = (self._head - self._size + idx) % self._row_slots
+        out_leaves = [buf[idx] for buf in self._buffers]
+        frames = len(idx) * self._frames_per_row
         self.frames_consumed += frames
         self._unconsumed = max(0, self._unconsumed - frames)
-        return traj
+        return jax.tree_util.tree_unflatten(self._treedef, out_leaves)
+
+    # -- introspection ------------------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self._size
+
+    @property
+    def size_frames(self) -> int:
+        return self._size * self._frames_per_row
 
     # -- telemetry (paper Table 3) ----------------------------------------------
     def throughput(self) -> dict:

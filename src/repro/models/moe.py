@@ -220,14 +220,18 @@ def moe_apply_ep(p, cfg, x, mesh):
             ys = (gs * hs) @ sh_down.astype(xl.dtype)
             y = y + jax.lax.psum(ys, "model")
 
-        # load-balance aux: local-expert load fraction x mean gate prob
+        # load-balance aux: GLOBAL load fraction x GLOBAL mean gate prob —
+        # average f and pbar over data BEFORE the product, else the aux
+        # picks up the cross-shard covariance and diverges from the
+        # baseline's sum_e f_e * p_e
         f_local = counts[:E_l].astype(jnp.float32) / (N_l * k)
         pbar = jnp.mean(gates, axis=0)                         # (E,) full
         p_local = jax.lax.dynamic_slice_in_dim(pbar, m_idx * E_l, E_l)
+        if dp:
+            f_local = jax.lax.pmean(f_local, dp)
+            p_local = jax.lax.pmean(p_local, dp)
         aux = e.router_aux_coef * E * jnp.sum(f_local * p_local)
         aux = jax.lax.psum(aux, "model")
-        if dp:
-            aux = jax.lax.pmean(aux, dp)
         return y.reshape(B_l, T, d), aux
 
     shared_in = None
@@ -238,7 +242,13 @@ def moe_apply_ep(p, cfg, x, mesh):
         # hidden dim of the shared expert TP-sharded over model
         shared_spec = (P(None, "model"), P(None, "model"), P("model", None))
 
-    _smap = jax.shard_map
+    # version-tolerant: jax.shard_map (check_vma) landed after 0.4.x, where
+    # the API lives in jax.experimental.shard_map (check_rep)
+    if hasattr(jax, "shard_map"):
+        _smap, _no_check = jax.shard_map, {"check_vma": False}
+    else:
+        from jax.experimental.shard_map import shard_map as _smap
+        _no_check = {"check_rep": False}
     fn = _smap(
         local_fn, mesh=mesh,
         in_specs=(P(), P("model", dp if dp else None, None),
@@ -246,5 +256,5 @@ def moe_apply_ep(p, cfg, x, mesh):
                   P("model", None, dp if dp else None),
                   shared_spec, P(dp if dp else None, None, None)),
         out_specs=(P(dp if dp else None, None, None), P()),
-        check_vma=False)
+        **_no_check)
     return fn(p["router"]["w"], p["up"], p["gate"], p["down"], shared_in, x)

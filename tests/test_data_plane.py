@@ -1,0 +1,287 @@
+"""The rebuilt league data plane (§3.2 hot paths): continuous-batching
+InfServer multi-model routing, ring-buffer DataServer wraparound accounting,
+and the vectorized PayoffMatrix vs a straight reimplementation of the seed
+per-pair-loop semantics."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import MatchResult, ModelKey, PayoffMatrix
+from repro.infserver import InfServer, Ticket
+from repro.learners import DataServer
+from repro.models import init_params
+
+
+# ---------------------------------------------------------------------------
+# InfServer: multi-model routing
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_arch("tleague-policy-s")
+    theta = init_params(jax.random.PRNGKey(0), cfg)
+    phi = init_params(jax.random.PRNGKey(1), cfg)      # distinct weights
+    return cfg, theta, phi
+
+
+def test_multi_model_routing_returns_correct_params(served):
+    from repro.actors.policy import make_obs_policy
+    cfg, theta, phi = served
+    num_actions, obs_len = 6, 26
+    server = InfServer(cfg, num_actions, max_batch=64)
+    k_t, k_p = ModelKey("main", 3), ModelKey("main", 0)
+    server.register_model(k_t, theta)
+    server.register_model(k_p, phi)
+
+    rng = np.random.default_rng(0)
+    obs_a = rng.integers(0, 16, (3, obs_len)).astype(np.int32)
+    obs_b = rng.integers(0, 16, (5, obs_len)).astype(np.int32)
+    t1 = server.submit(obs_a, model=k_t)
+    t2 = server.submit(obs_b, model=k_p)
+    t3 = server.submit(obs_a, model=k_p)
+    assert isinstance(t1, Ticket) and not t1.done()
+    server.flush()                                     # one grouped forward
+    assert server.batches_run == 1 and server.last_batch_models == 2
+
+    # values are rng-free, so they pin which params served each ticket
+    policy = make_obs_policy(cfg, num_actions)
+    v_theta = np.asarray(policy.logits_values(theta, obs_a)[1])
+    v_phi_b = np.asarray(policy.logits_values(phi, obs_b)[1])
+    v_phi_a = np.asarray(policy.logits_values(phi, obs_a)[1])
+    np.testing.assert_allclose(t1.result()[2], v_theta, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(t2.result()[2], v_phi_b, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(t3.result()[2], v_phi_a, rtol=1e-4, atol=1e-5)
+    assert not np.allclose(v_theta, v_phi_a)           # routes are distinct
+    st = server.stats()
+    assert 0 < st["occupancy"] <= 1.0 and st["models_hosted"] == 2
+
+
+def test_hot_swap_changes_route_without_new_model(served):
+    cfg, theta, phi = served
+    server = InfServer(cfg, 6, theta, max_batch=16)
+    obs = np.zeros((2, 26), np.int32)
+    v_before = server.get(server.submit(obs))[2]
+    server.update_params(phi)                          # hot-swap default θ
+    v_after = server.get(server.submit(obs))[2]
+    assert not np.allclose(v_before, v_after)
+    assert server.stats()["models_hosted"] == 1
+
+
+def test_full_queue_triggers_flush(served):
+    cfg, theta, _ = served
+    server = InfServer(cfg, 6, theta, max_batch=4)
+    obs = np.zeros((2, 26), np.int32)
+    t1 = server.submit(obs)
+    assert server.queue_depth == 2 and not t1.done()
+    t2 = server.submit(obs)                            # 4 rows -> auto-flush
+    assert server.queue_depth == 0 and t1.done() and t2.done()
+
+
+# ---------------------------------------------------------------------------
+# DataServer: ring-buffer wraparound + rfps/cfps accounting
+# ---------------------------------------------------------------------------
+def _traj(seed, rows=4, t=8, obs_len=3):
+    rng = np.random.default_rng(seed)
+    return {
+        "obs": rng.integers(0, 9, (rows, t, obs_len)).astype(np.int32),
+        "actions": rng.integers(0, 6, (rows, t)).astype(np.int32),
+        "behavior_logp": rng.normal(size=(rows, t)).astype(np.float32),
+        "behavior_values": rng.normal(size=(rows, t)).astype(np.float32),
+        "rewards": rng.normal(size=(rows, t)).astype(np.float32),
+        "done": rng.integers(0, 2, (rows, t)).astype(bool),
+        "bootstrap_value": rng.normal(size=(rows,)).astype(np.float32),
+    }
+
+
+def test_ring_wraparound_preserves_accounting_and_content():
+    ds = DataServer(capacity_frames=6 * 8, blocking=True)   # 6 row slots
+    n_puts = 5
+    for i in range(n_puts):
+        ds.put(_traj(i))
+        got = ds.sample()                 # blocking: the segment just put
+        want = _traj(i)
+        for k in want:
+            np.testing.assert_array_equal(np.asarray(got[k]), want[k], err_msg=k)
+    # 5 puts x 4 rows into 6 slots: wrapped, live size capped at capacity
+    assert ds.num_rows == 6 and ds.size_frames == 48
+    assert ds.frames_received == n_puts * 4 * 8
+    assert ds.frames_consumed == n_puts * 4 * 8
+    tp = ds.throughput()
+    assert abs(tp["repeat_ratio"] - 1.0) < 1e-9
+    assert tp["rfps"] > 0 and tp["cfps"] > 0
+
+
+def test_blocking_semantics_and_uniform_gather():
+    ds = DataServer(capacity_frames=64 * 8, blocking=True)
+    ds.put(_traj(0))
+    assert ds.ready()
+    ds.sample()
+    assert not ds.ready()                 # on-policy: wait for fresh frames
+    ds.put(_traj(1))
+    assert ds.ready()
+
+    ds2 = DataServer(capacity_frames=64 * 8, blocking=False, seed=3)
+    for i in range(4):
+        ds2.put(_traj(i))
+    mb = ds2.sample(batch_rows=10)        # vectorized gather across segments
+    assert np.asarray(mb["actions"]).shape == (10, 8)
+    assert np.asarray(mb["obs"]).shape == (10, 8, 3)
+    assert ds2.frames_consumed == 10 * 8
+
+
+def test_structure_change_is_rejected():
+    ds = DataServer(capacity_frames=64)
+    ds.put(_traj(0))
+    with pytest.raises(AssertionError):
+        bad = _traj(1)
+        del bad["rewards"]
+        ds.put(bad)
+
+
+# ---------------------------------------------------------------------------
+# PayoffMatrix: vectorized == seed per-pair-loop implementation
+# ---------------------------------------------------------------------------
+class _SeedPayoff:
+    """The seed implementation's exact semantics (dict-of-dicts loops),
+    kept here as the oracle for the vectorized rewrite."""
+
+    def __init__(self, elo_k=16.0, init_elo=1200.0):
+        self.models, self._index = [], {}
+        self._wins = np.zeros((0, 0)); self._ties = np.zeros((0, 0))
+        self._losses = np.zeros((0, 0))
+        self.elo, self.elo_k, self.init_elo = {}, elo_k, init_elo
+
+    def add_model(self, key):
+        if key in self._index:
+            return
+        self._index[key] = len(self.models)
+        self.models.append(key)
+        n = len(self.models)
+        for name in ("_wins", "_ties", "_losses"):
+            m = getattr(self, name)
+            g = np.zeros((n, n)); g[:m.shape[0], :m.shape[1]] = m
+            setattr(self, name, g)
+        self.elo[key] = self.init_elo
+
+    def record(self, r):
+        i = self._index[r.learner_key]
+        for opp in r.opponent_keys:
+            j = self._index[opp]
+            if r.outcome > 0:
+                self._wins[i, j] += 1; self._losses[j, i] += 1
+            elif r.outcome < 0:
+                self._losses[i, j] += 1; self._wins[j, i] += 1
+            else:
+                self._ties[i, j] += 1; self._ties[j, i] += 1
+            ra, rb = self.elo[r.learner_key], self.elo[opp]
+            ea = 1.0 / (1.0 + 10 ** ((rb - ra) / 400.0))
+            sa = 0.5 + 0.5 * r.outcome
+            self.elo[r.learner_key] = ra + self.elo_k * (sa - ea)
+            self.elo[opp] = rb + self.elo_k * ((1.0 - sa) - (1.0 - ea))
+
+    def games(self, a, b):
+        i, j = self._index[a], self._index[b]
+        return self._wins[i, j] + self._ties[i, j] + self._losses[i, j]
+
+    def winrate(self, a, b, prior=0.5, prior_games=2.0):
+        i, j = self._index[a], self._index[b]
+        w = self._wins[i, j] + 0.5 * self._ties[i, j] + prior * prior_games
+        return float(w / (self.games(a, b) + prior_games))
+
+    def matrix(self):
+        n = len(self.models)
+        out = np.full((n, n), 0.5)
+        for i, a in enumerate(self.models):
+            for j, b in enumerate(self.models):
+                if i != j and self.games(a, b) > 0:
+                    out[i, j] = self.winrate(a, b)
+        return out
+
+
+def _match_log(n_models=50, n_matches=5000, seed=7):
+    rng = np.random.default_rng(seed)
+    keys = [ModelKey("m", v) for v in range(n_models)]
+    log = []
+    for _ in range(n_matches):
+        i, j = rng.choice(n_models, 2, replace=False)
+        log.append(MatchResult(learner_key=keys[i], opponent_keys=(keys[j],),
+                               outcome=int(rng.choice([-1, 0, 1]))))
+    return keys, log
+
+
+def test_vectorized_payoff_matches_seed_on_replay():
+    """Acceptance: numerically identical on a 50-model, 5k-match replay."""
+    keys, log = _match_log()
+    ref, vec = _SeedPayoff(), PayoffMatrix()
+    for k in keys:
+        ref.add_model(k)
+        vec.add_model(k)
+    for r in log:
+        ref.record(r)
+    vec.record_many(log)                  # batched flood ingest
+
+    np.testing.assert_array_equal(vec.wins, ref._wins)
+    np.testing.assert_array_equal(vec.ties, ref._ties)
+    np.testing.assert_array_equal(vec.losses, ref._losses)
+    np.testing.assert_allclose(vec.matrix(), ref.matrix(), rtol=0, atol=1e-12)
+    for k in keys:
+        assert abs(vec.elo[k] - ref.elo[k]) < 1e-9
+    a = keys[0]
+    np.testing.assert_allclose(
+        vec.winrates_vs(a, keys[1:]),
+        np.array([ref.winrate(a, o) for o in keys[1:]]), atol=1e-12)
+    assert vec.games(keys[0], keys[1]) == ref.games(keys[0], keys[1])
+
+
+def test_record_one_by_one_equals_record_many():
+    keys, log = _match_log(n_models=8, n_matches=300, seed=11)
+    p1, p2 = PayoffMatrix(), PayoffMatrix()
+    for k in keys:
+        p1.add_model(k)
+        p2.add_model(k)
+    for r in log:
+        p1.record(r)
+    p2.record_many(log)
+    np.testing.assert_array_equal(p1.wins, p2.wins)
+    np.testing.assert_allclose(p1.matrix(), p2.matrix(), atol=0)
+    for k in keys:
+        assert p1.elo[k] == p2.elo[k]
+
+
+def test_geometric_growth_preserves_counts():
+    p = PayoffMatrix()
+    keys = [ModelKey("g", v) for v in range(65)]       # forces several growths
+    p.add_model(keys[0]); p.add_model(keys[1])
+    p.record(MatchResult(learner_key=keys[0], opponent_keys=(keys[1],),
+                         outcome=+1))
+    for k in keys[2:]:
+        p.add_model(k)
+    assert p._cap >= 65 and len(p) == 65
+    assert p.games(keys[0], keys[1]) == 1
+    assert p.winrate(keys[0], keys[1]) == (1 + 1) / 3  # (1 + 0.5*2)/(1+2)
+    m = p.matrix()
+    assert m.shape == (65, 65) and m[0, 1] == (1 + 1) / 3 and m[2, 3] == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Served actor path: InfServer-backed rollout equals the local-mode contract
+# ---------------------------------------------------------------------------
+def test_served_actor_matches_local_structure(served):
+    from repro.actors import Actor
+    from repro.core import LeagueMgr
+    from repro.envs import make_env
+    cfg, theta, _ = served
+    env = make_env("rps")
+    league = LeagueMgr()
+    league.add_learning_agent("main", theta)
+    server = InfServer(cfg, env.spec.num_actions, max_batch=64)
+    actor = Actor(env, cfg, league, num_envs=4, unroll_len=8, seed=1,
+                  inf_server=server)
+    local = Actor(env, cfg, league, num_envs=4, unroll_len=8, seed=1)
+    traj_s, _ = actor.run_segment()
+    traj_l, _ = local.run_segment()
+    assert set(traj_s) == set(traj_l)
+    for k in traj_l:
+        assert np.asarray(traj_s[k]).shape == np.asarray(traj_l[k]).shape, k
+    assert server.requests_served > 0 and server.batches_run > 0
+    assert np.isfinite(np.asarray(traj_s["behavior_logp"])).all()

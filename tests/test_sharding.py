@@ -16,8 +16,15 @@ from repro.models import init_params
 
 
 def fake_mesh(shape=(16, 16), axes=("data", "model")):
-    """AbstractMesh: lets us build NamedShardings without 256 devices."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    """AbstractMesh: lets us build NamedShardings without 256 devices.
+
+    Version-tolerant: newer JAX takes ((name, size), ...) pairs, older JAX
+    takes (shape, axis_names).
+    """
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(shape, axes)
 
 
 def _check_divisible(shapes, shardings, mesh):
