@@ -13,11 +13,21 @@ Prints ``name,us_per_call,derived`` CSV.
   kernels             — Pallas kernel microbenches (interpret-mode on CPU:
                         correctness-path timing; TPU-target timing comes
                         from the roofline, see benchmarks/roofline.py)
+  learner_throughput  — fused (dispatch) vs reference train steps and
+                        host vs pipelined device feeding; asserts
+                        kernel<->reference parity and writes
+                        BENCH_learner.json
+
+BENCH_*.json records are stamped with the git sha + UTC timestamp and
+written atomically (tmp file + rename), so the bench trajectory files stay
+comparable — and uncorrupted — across PRs.
 """
 from __future__ import annotations
 
+import datetime
 import json
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -25,9 +35,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
 
 def _emit(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _write_bench(path: pathlib.Path, record: dict) -> None:
+    """Stamp and atomically write a BENCH_*.json trajectory record."""
+    record = dict(record)
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_REPO,
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip()
+    except Exception:
+        sha = ""
+    record["git_sha"] = sha or "unknown"
+    record["timestamp"] = datetime.datetime.now(
+        datetime.timezone.utc).isoformat(timespec="seconds")
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(record, indent=2) + "\n")
+    tmp.replace(path)
 
 
 def _time(fn, iters=3, warmup=1):
@@ -184,9 +213,8 @@ def infserver_throughput(num_actors: int = 64, out_path: str | None = None):
             stats["mean_batch_latency_ms"], 3),
         "arch": "tleague-policy-s",
     }
-    path = pathlib.Path(out_path) if out_path else \
-        pathlib.Path(__file__).resolve().parent.parent / "BENCH_infserver.json"
-    path.write_text(json.dumps(record, indent=2) + "\n")
+    path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_infserver.json"
+    _write_bench(path, record)
     _emit(f"infserver/per_actor{num_actors}", us_local, "per_request")
     _emit(f"infserver/central{num_actors}", us_central,
           f"per_request;speedup_x={speedup:.1f};wrote={path.name}")
@@ -245,6 +273,132 @@ def fig4_winrate(train_iters=12):
     _emit("fig4/pommerman_vs_simple", us, f"winrate={wr:.2f}")
 
 
+def learner_throughput(out_path: str | None = None, iters: int = 8):
+    """Learner hot-path benchmark (ISSUE 2 acceptance): fused (dispatch)
+    vs jnp-reference train steps, and host-sample vs pipelined
+    `sample_to_device` feeding. Asserts kernel<->reference parity to 1e-4
+    across all three kernel families, then writes BENCH_learner.json.
+
+    On CPU the dispatch layer's `auto` mode routes to the XLA-fused
+    references (interpret-mode Pallas is a correctness tool, not a perf
+    path), so fused == reference step time here; on TPU/GPU the same
+    harness times the compiled Pallas kernels.
+    """
+    from repro.configs import get_arch
+    from repro.kernels import dispatch
+    from repro.learners import DataServer, build_env_train_step
+    from repro.models import init_params
+    from repro.optim import adamw
+    from repro.rl.returns import gae, lambda_return
+    from repro.rl.vtrace import vtrace
+
+    cfg = get_arch("tleague-policy-s")
+    num_actions, obs_len = 6, 26
+    B, T = 32, 16
+    rng = np.random.default_rng(0)
+
+    def synth_traj():
+        return {
+            "obs": rng.integers(0, 16, (B, T, obs_len)).astype(np.int32),
+            "actions": rng.integers(0, num_actions, (B, T)).astype(np.int32),
+            "behavior_logp": (-np.abs(rng.normal(size=(B, T)))
+                              ).astype(np.float32),
+            "behavior_values": rng.normal(size=(B, T)).astype(np.float32),
+            "rewards": rng.normal(size=(B, T)).astype(np.float32),
+            "done": rng.random((B, T)) < 0.05,
+            "bootstrap_value": rng.normal(size=(B,)).astype(np.float32),
+        }
+
+    # -- parity: every kernel family, dispatch(interpret) vs reference ------
+    tr = synth_traj()
+    args = (jnp.asarray(tr["rewards"]), jnp.asarray(tr["behavior_values"]),
+            0.99 * (1.0 - jnp.asarray(tr["done"], jnp.float32)),
+            jnp.asarray(tr["bootstrap_value"]))
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (2, 4, 64, 32))
+    kv = jax.random.normal(jax.random.fold_in(k, 1), (2, 2, 64, 32))
+    xw = jax.random.normal(jax.random.fold_in(k, 2), (64, 128)), jnp.ones((128,))
+    outs = {}
+    for m in ("reference", "interpret"):
+        with dispatch.force(m):
+            outs[m] = [gae(*args)[0], lambda_return(*args),
+                       vtrace(jnp.asarray(tr["behavior_logp"]),
+                              jnp.asarray(tr["behavior_logp"]) * 0.9,
+                              *args)[0],
+                       dispatch.attention(q, kv, kv, scale=0.18, causal=True,
+                                          window=16, cap=30.0),
+                       dispatch.rmsnorm(*xw)]
+    parity = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(outs["reference"], outs["interpret"]))
+    assert parity <= 1e-4, f"kernel/reference parity {parity} > 1e-4"
+
+    # -- train-step timing: reference vs fused dispatch ---------------------
+    opt = adamw(3e-4)
+    step_us = {}
+    for mode_name in ("reference", "auto"):
+        with dispatch.force(mode_name):
+            step = build_env_train_step(cfg, num_actions, opt)
+            params = init_params(jax.random.PRNGKey(0), cfg)
+            opt_state = opt.init(params)
+            trajs = [synth_traj() for _ in range(iters)]
+            params, opt_state, m = step(params, opt_state, trajs[0])  # compile
+            jax.block_until_ready(m["loss"])
+            t0 = time.perf_counter()
+            for tr_i in trajs:
+                params, opt_state, m = step(params, opt_state, tr_i)
+            jax.block_until_ready(m["loss"])
+            step_us[mode_name] = (time.perf_counter() - t0) / iters * 1e6
+    speedup = step_us["reference"] / step_us["auto"]
+    _emit("learner/step_reference", step_us["reference"], "us_per_step")
+    _emit("learner/step_fused", step_us["auto"],
+          f"us_per_step;speedup_x={speedup:.2f}")
+
+    # -- feeding: host sample vs double-buffered sample_to_device -----------
+    opt2 = adamw(3e-4)
+    step = build_env_train_step(cfg, num_actions, opt2)
+    feed_fps = {}
+    for name, use_device in (("host", False), ("prefetch", True)):
+        ds = DataServer(capacity_frames=4 * B * T, prefetch=use_device)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt2.init(params)
+        ds.put(synth_traj())
+        batch = ds.sample_to_device() if use_device else ds.sample()
+        params, opt_state, m = step(params, opt_state, batch)  # compile
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            ds.put(synth_traj())
+            batch = ds.sample_to_device() if use_device else ds.sample()
+            params, opt_state, m = step(params, opt_state, batch)
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+        feed_fps[name] = iters * B * T / dt
+        extra = ""
+        if use_device:
+            tp = ds.throughput()
+            extra = (f";prefetch_hits={tp['prefetch_hits']}"
+                     f";prefetch_misses={tp['prefetch_misses']}")
+        _emit(f"learner/feed_{name}", dt / iters * 1e6,
+              f"frames_per_s={feed_fps[name]:.0f}{extra}")
+
+    record = {
+        "backend": jax.default_backend(),
+        "batch_rows": B,
+        "unroll_len": T,
+        "arch": "tleague-policy-s",
+        "parity_max_abs_err": parity,
+        "reference_us_per_step": round(step_us["reference"], 2),
+        "fused_us_per_step": round(step_us["auto"], 2),
+        "fused_speedup_x": round(speedup, 3),
+        "host_feed_frames_per_s": round(feed_fps["host"], 1),
+        "prefetch_feed_frames_per_s": round(feed_fps["prefetch"], 1),
+    }
+    path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_learner.json"
+    _write_bench(path, record)
+    _emit("learner/bench_written", 0.0, f"wrote={path.name}")
+    return record
+
+
 def kernels():
     from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
     k = jax.random.PRNGKey(0)
@@ -266,8 +420,8 @@ def kernels():
 
 
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
-           "infserver_throughput", "kernels", "fig4_winrate",
-           "table12_league_eval")
+           "infserver_throughput", "learner_throughput", "kernels",
+           "fig4_winrate", "table12_league_eval")
 
 
 def main() -> None:

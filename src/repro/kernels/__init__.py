@@ -6,7 +6,13 @@ mode on CPU; see each subpackage's ref.py for the pure-jnp oracle):
   vtrace_scan     — the learner's reverse-time discounted recursion
                     (one primitive covers GAE, TD(lambda) and V-trace).
   rmsnorm         — fused RMS normalization.
+
+`repro.kernels.dispatch` is the production entry point: it routes each op
+to the compiled kernel (TPU/GPU), the Pallas interpreter (parity tests),
+or the jnp reference (CPU fast path) from one mode switch, and picks
+block sizes per shape. models/ and rl/ call through it.
 """
+from repro.kernels import dispatch
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.vtrace_scan.ops import reverse_discounted_scan
 from repro.kernels.rmsnorm.ops import rmsnorm

@@ -1,0 +1,192 @@
+"""Kernel dispatch: route the learner hot ops to their Pallas kernels.
+
+One chokepoint decides, per call, whether an op runs as
+
+  * ``compiled``  — the Pallas kernel lowered for the accelerator
+                    (TPU/GPU backends),
+  * ``interpret`` — the same kernel body executed by the Pallas
+                    interpreter on CPU (bit-accurate wiring check; slow),
+  * ``reference`` — the pure-jnp oracle (XLA-fused; the CPU fast path).
+
+The decision is made at *trace time* from static information only (mode
+string, default backend, shapes, dtypes), so every dispatch function is
+jit-transparent: no traced value ever influences routing, and a jitted
+train step caches one executable per (mode, shape) like any other static
+argument.
+
+Mode selection (checked in order):
+
+  1. ``force(mode)`` context manager / ``set_mode(mode)`` — explicit
+     override, used by tests and benchmarks.
+  2. ``REPRO_KERNELS`` environment variable.
+  3. default ``auto``.
+
+Modes:
+
+  ``auto``       Pallas on TPU/GPU, reference on CPU. The production
+                 setting: tier-1 CPU tests and CPU benchmarks run the
+                 XLA-fused references, accelerators get the fused kernels.
+  ``pallas``     Pallas everywhere (interpret mode on CPU). For soak
+                 testing the kernel path.
+  ``interpret``  Pallas interpreter everywhere, even on accelerators.
+                 For parity tests.
+  ``reference``  jnp references everywhere, even on accelerators. The
+                 escape hatch if a kernel misbehaves in production.
+
+Block sizes are selected per shape from a small VMEM budget model (see
+``_pick_block``): the largest power of two that fits both the dimension
+and the per-block byte budget, floored at the dtype's sublane tile.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention as _flash_attention
+from repro.kernels.flash_attention.ref import attention_ref as _attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm as _rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref as _rmsnorm_ref
+from repro.kernels.vtrace_scan.ops import reverse_discounted_scan as _scan_pallas
+from repro.kernels.vtrace_scan.ref import reverse_discounted_scan_ref as _scan_ref
+
+MODES = ("auto", "pallas", "interpret", "reference")
+
+# process-wide so the production escape hatch (set_mode('reference'))
+# applies on every thread that dispatches ops, not just the caller's
+_forced = None
+
+
+def mode() -> str:
+    """The active dispatch mode (forced > env > 'auto')."""
+    if _forced is not None:
+        return _forced
+    m = os.environ.get("REPRO_KERNELS", "auto")
+    return m if m in MODES else "auto"
+
+
+def set_mode(m) -> None:
+    """Force a mode process-wide (None restores env/auto resolution)."""
+    global _forced
+    assert m is None or m in MODES, f"mode {m!r} not in {MODES}"
+    _forced = m
+
+
+@contextmanager
+def force(m):
+    """Scoped mode override: ``with dispatch.force('interpret'): ...``.
+
+    Mutates the process-wide mode for the duration of the block (nesting
+    restores); not intended for concurrent use from multiple threads —
+    tests and benchmarks drive it single-threaded.
+    """
+    prev = _forced
+    set_mode(m)
+    try:
+        yield
+    finally:
+        set_mode(prev)
+
+
+def resolve() -> str:
+    """'compiled' | 'interpret' | 'reference' for the current call site."""
+    m = mode()
+    if m in ("reference", "interpret"):
+        return m
+    on_accel = jax.default_backend() in ("tpu", "gpu")
+    if m == "pallas":
+        return "compiled" if on_accel else "interpret"
+    return "compiled" if on_accel else "reference"      # auto
+
+
+def use_pallas() -> bool:
+    """True when ops route to the kernel path (compiled or interpret)."""
+    return resolve() != "reference"
+
+
+# -- per-shape block selection -------------------------------------------------
+
+def _sublane_floor(dtype) -> int:
+    """Minimum second-to-last tile dim for the dtype (TPU tiling table)."""
+    return {jnp.bfloat16: 16, jnp.int8: 32}.get(jnp.dtype(dtype).type, 8)
+
+
+def _pick_block(n: int, row_bytes: int, *, floor: int = 8, cap: int = 128,
+                budget: int = 1 << 21) -> int:
+    """Largest power-of-two block <= cap whose rows fit the VMEM budget.
+
+    `n` is the dimension being tiled, `row_bytes` the bytes one row of the
+    block occupies in fp32 working precision. Never exceeds the smallest
+    power of two covering `n` (a block bigger than the padded input is
+    pure padding waste), never goes below `floor`.
+    """
+    b = floor
+    limit = min(cap, max(budget // max(row_bytes, 1), floor))
+    while b * 2 <= limit and b < n:
+        b *= 2
+    return b
+
+
+def rmsnorm_block(R: int, d: int) -> int:
+    return _pick_block(R, d * 4, cap=512)
+
+
+def attention_blocks(Tq: int, Tk: int, d: int, dtype) -> tuple:
+    floor = _sublane_floor(dtype)
+    # the fp32 accumulator (block_q, d) plus the (block_q, block_k) score
+    # tile dominate VMEM; budget each at ~2 MiB
+    bq = _pick_block(Tq, d * 4, floor=floor)
+    bk = _pick_block(Tk, max(bq, d) * 4, floor=floor)
+    return bq, bk
+
+
+def scan_block(B: int, T: int) -> int:
+    return _pick_block(B, T * 4)
+
+
+# -- dispatched ops ------------------------------------------------------------
+
+def rmsnorm(x, w, *, eps: float = 1e-6):
+    """Fused RMSNorm over the last axis. x: (..., d); w: (d,)."""
+    impl = resolve()
+    if impl == "reference":
+        return _rmsnorm_ref(x, w, eps)
+    R = max(1, x.size // x.shape[-1])
+    return _rmsnorm_pallas(x, w, eps=eps,
+                           block_r=rmsnorm_block(R, x.shape[-1]),
+                           interpret=impl == "interpret")
+
+
+def attention(q, k, v, *, scale, causal=True, window=0, cap=0.0):
+    """Fused attention, kernel layout: q (B, H, Tq, d); k, v (B, KV, Tk, d).
+
+    Callers with the model layout (B, T, H, d) transpose at the call site
+    (see models/attention.chunked_attend). Backward runs through the
+    memory-safe chunked reference (custom_vjp recompute).
+    """
+    impl = resolve()
+    if impl == "reference":
+        return _attention_ref(q, k, v, scale=scale, causal=causal,
+                              window=window, cap=cap)
+    bq, bk = attention_blocks(q.shape[2], k.shape[2], q.shape[3], q.dtype)
+    return _flash_attention(q, k, v, scale, causal, window, cap, bq, bk,
+                            impl == "interpret")
+
+
+def reverse_scan(deltas, decays, init=None):
+    """y_t = delta_t + decay_t * y_{t+1}, y_T = init. (B, T) -> (B, T) fp32.
+
+    The one primitive behind GAE, TD(lambda), discounted returns and the
+    V-trace correction sum (fused over the whole (B, T) minibatch instead
+    of a lax.scan over T).
+    """
+    impl = resolve()
+    if init is None:
+        init = jnp.zeros((deltas.shape[0],), jnp.float32)
+    if impl == "reference":
+        return _scan_ref(deltas, decays, init)
+    B, T = deltas.shape
+    return _scan_pallas(deltas, decays, init, block_b=scan_block(B, T),
+                        interpret=impl == "interpret")

@@ -1,13 +1,22 @@
-"""Jit wrapper: flatten leading dims, pad rows to the block multiple."""
+"""Jit wrapper: flatten leading dims, pad rows to the block multiple.
+
+Differentiable: the forward runs the Pallas kernel, the backward
+recomputes through the pure-jnp reference (custom_vjp), so the kernel can
+sit inside a jitted train step's grad path.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.rmsnorm.kernel import rmsnorm_p
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
 
-def rmsnorm(x, w, *, eps=1e-6, block_r=128, interpret=False):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _rmsnorm(x, w, eps, block_r, interpret):
     shape = x.shape
     d = shape[-1]
     x2 = x.reshape(-1, d)
@@ -18,3 +27,20 @@ def rmsnorm(x, w, *, eps=1e-6, block_r=128, interpret=False):
         x2 = jnp.pad(x2, ((0, pad), (0, 0)))
     y = rmsnorm_p(x2, w, eps=eps, block_r=br, interpret=interpret)
     return y[:R].reshape(shape)
+
+
+def _fwd(x, w, eps, block_r, interpret):
+    return _rmsnorm(x, w, eps, block_r, interpret), (x, w)
+
+
+def _bwd(eps, block_r, interpret, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x, w: rmsnorm_ref(x, w, eps), x, w)
+    return vjp(g)
+
+
+_rmsnorm.defvjp(_fwd, _bwd)
+
+
+def rmsnorm(x, w, *, eps=1e-6, block_r=128, interpret=False):
+    return _rmsnorm(x, w, eps, block_r, interpret)

@@ -1,17 +1,23 @@
-"""Jit wrapper: batch padding + dtype promotion for the reverse scan."""
+"""Jit wrapper: batch padding + dtype promotion for the reverse scan.
+
+Differentiable: forward runs the Pallas kernel, backward recomputes
+through the lax.scan reference (custom_vjp) — the recursion's transpose
+is itself a scan, so the reference VJP is exact and cheap.
+"""
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.vtrace_scan.kernel import reverse_discounted_scan_p
+from repro.kernels.vtrace_scan.ref import reverse_discounted_scan_ref
 
 
-def reverse_discounted_scan(deltas, decays, init=None, *, block_b=8,
-                            interpret=False):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _reverse_scan(deltas, decays, init, block_b, interpret):
     B, T = deltas.shape
-    if init is None:
-        init = jnp.zeros((B,), jnp.float32)
     bb = min(block_b, B)
     pad = (-B) % bb
     if pad:
@@ -21,3 +27,24 @@ def reverse_discounted_scan(deltas, decays, init=None, *, block_b=8,
     y = reverse_discounted_scan_p(deltas, decays, init, block_b=bb,
                                   interpret=interpret)
     return y[:B]
+
+
+def _fwd(deltas, decays, init, block_b, interpret):
+    return (_reverse_scan(deltas, decays, init, block_b, interpret),
+            (deltas, decays, init))
+
+
+def _bwd(block_b, interpret, res, g):
+    deltas, decays, init = res
+    _, vjp = jax.vjp(reverse_discounted_scan_ref, deltas, decays, init)
+    return vjp(g)
+
+
+_reverse_scan.defvjp(_fwd, _bwd)
+
+
+def reverse_discounted_scan(deltas, decays, init=None, *, block_b=8,
+                            interpret=False):
+    if init is None:
+        init = jnp.zeros((deltas.shape[0],), jnp.float32)
+    return _reverse_scan(deltas, decays, init, block_b, interpret)

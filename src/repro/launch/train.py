@@ -21,6 +21,7 @@ from repro.configs import get_arch
 from repro.core import GAME_MGRS, Hyperparam, LeagueMgr
 from repro.core.game_mgr import GameMgr
 from repro.envs import make_env
+from repro.infserver import InfServer
 from repro.learners import DataServer, Learner, build_env_train_step
 from repro.models import init_params
 from repro.optim import adamw
@@ -33,12 +34,23 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
                         unroll_len=16, periods=2, steps_per_period=16,
                         num_actors=1, num_exploiters=0, pbt=False,
                         lr=3e-4, seed=0, log_every=8, checkpoint_dir=None,
-                        verbose=True):
+                        served=False, verbose=True):
+    """`served=True` runs the SEED-style actor mode (ROADMAP next step):
+    every Actor routes its policy forwards through ONE shared
+    continuous-batching InfServer instead of per-actor jitted forwards —
+    θ and each lineage's φ ride the same grouped batch as server routes."""
     env = make_env(env_name)
     cfg = get_arch(arch)
     rng = jax.random.PRNGKey(seed)
     league = LeagueMgr(pbt=pbt, seed=seed)
     opt = adamw(lr, clip_norm=1.0)
+    inf_server = None
+    if served:
+        # each rollout step submits one row per env-slot per actor; cap the
+        # queue so a full actor sweep rides one grouped flush
+        inf_server = InfServer(
+            cfg, env.spec.num_actions, seed=seed + 7919,
+            max_batch=max(64, num_envs * env.spec.num_agents * num_actors))
 
     agents = {}
     ids = ["main"] + [f"exploiter:{i}" for i in range(num_exploiters)]
@@ -48,7 +60,8 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
         gm = GAME_MGRS[gm_name](payoff=league.payoff, seed=seed + i)
         league.add_learning_agent(aid, params, game_mgr=gm)
         actors = [Actor(env, cfg, league, agent_id=aid, num_envs=num_envs,
-                        unroll_len=unroll_len, seed=seed * 1000 + i * 100 + a)
+                        unroll_len=unroll_len, seed=seed * 1000 + i * 100 + a,
+                        inf_server=inf_server)
                   for a in range(num_actors)]
         step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
         learner = Learner(league, step, opt, params, agent_id=aid,
@@ -70,8 +83,14 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
                           f"loss={float(m['loss']):.3f} "
                           f"ent={float(m['entropy']):.3f} "
                           f"rfps={tp['rfps']:.0f} cfps={tp['cfps']:.0f}")
-                history.append({"period": period, "it": it, "agent": aid,
-                                "loss": float(m.get("loss", float("nan")))})
+                row = {"period": period, "it": it, "agent": aid}
+                if "loss" in m:
+                    row["loss"] = float(m["loss"])
+                else:
+                    # learn() ran zero steps (DataServer not ready yet):
+                    # mark the row instead of recording a bogus loss=nan
+                    row["skipped"] = True
+                history.append(row)
         for aid, (_, learner) in agents.items():
             new_key = learner.end_learning_period()
             if verbose:
@@ -100,6 +119,9 @@ def main():
     ap.add_argument("--actors", type=int, default=1)
     ap.add_argument("--exploiters", type=int, default=0)
     ap.add_argument("--pbt", action="store_true")
+    ap.add_argument("--served", action="store_true",
+                    help="route all actor inference through one shared "
+                         "continuous-batching InfServer (SEED-style)")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
@@ -109,7 +131,8 @@ def main():
         loss=args.loss, num_envs=args.num_envs, unroll_len=args.unroll_len,
         periods=args.periods, steps_per_period=args.steps,
         num_actors=args.actors, num_exploiters=args.exploiters, pbt=args.pbt,
-        lr=args.lr, seed=args.seed, checkpoint_dir=args.checkpoint_dir)
+        lr=args.lr, seed=args.seed, checkpoint_dir=args.checkpoint_dir,
+        served=args.served)
     print(json.dumps(league.league_state(), indent=1))
 
 

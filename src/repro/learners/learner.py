@@ -27,11 +27,17 @@ def _snapshot(params):
 class Learner:
     def __init__(self, league: LeagueMgr, train_step: Callable, optimizer,
                  init_params, *, agent_id: str = "main",
-                 publish_every: int = 1, data_server: Optional[DataServer] = None):
+                 publish_every: int = 1, data_server: Optional[DataServer] = None,
+                 device_feed: bool = True):
+        """`device_feed` routes minibatches through the DataServer's
+        double-buffered `sample_to_device` path (host->device copies overlap
+        the train step); falls back to host `sample` for data servers
+        without that path."""
         self.league = league
         self.agent_id = agent_id
         self.train_step = train_step
         self.optimizer = optimizer
+        self.device_feed = device_feed
         # private working copy: the caller's init_params object is typically
         # also the ModelPool's seed entry, and train_step donates its inputs
         self.params = _snapshot(init_params)
@@ -51,7 +57,10 @@ class Learner:
         for _ in range(num_steps):
             if not self.data_server.ready():
                 break
-            traj = self.data_server.sample()
+            if self.device_feed and hasattr(self.data_server, "sample_to_device"):
+                traj = self.data_server.sample_to_device()
+            else:
+                traj = self.data_server.sample()
             self.params, self.opt_state, last_metrics = self.train_step(
                 self.params, self.opt_state, traj)
             self.step_count += 1

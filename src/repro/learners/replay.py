@@ -14,6 +14,17 @@ segment's structure. `put` writes rows into fixed slots with at most two
 contiguous copies (no per-put allocation), `sample` is a single vectorized
 fancy-index gather per leaf, and capacity is expressed in frames, not
 segments, so differently-shaped runs get comparable memory budgets.
+
+Device feeding: `sample_to_device` returns the minibatch as device arrays
+and overlaps the host->device copy with the learner's compute via a
+double-buffered prefetch — `jax.device_put` is asynchronous on
+accelerators, so staging the *next* minibatch right when it becomes
+known (at `put` in blocking/on-policy mode, right after the current
+sample in uniform mode) means the transfer rides under the current train
+step instead of serializing in front of the next one. Staged batches are
+freshly allocated device buffers each time, so a train step that donates
+its batch argument (`build_*_train_step(donate_batch=True)`) never
+aliases the next staged transfer.
 """
 from __future__ import annotations
 
@@ -26,17 +37,27 @@ import numpy as np
 
 class DataServer:
     def __init__(self, *, capacity_frames: Optional[int] = None, seed: int = 0,
-                 blocking: bool = True, capacity_segments: int = 64):
+                 blocking: bool = True, capacity_segments: int = 64,
+                 prefetch: bool = True, device=None):
         """`capacity_frames` bounds the buffer in frames (rows * unroll_len).
         When omitted, the legacy `capacity_segments` bound is translated to
         frames at first `put` (segments * frames-per-segment). Keyword-only:
         the first positional used to mean capacity_segments, and silently
         reinterpreting old callers as a frames bound would shrink their
-        replay by orders of magnitude."""
+        replay by orders of magnitude.
+
+        `prefetch` enables the double-buffered `sample_to_device` staging;
+        `device` pins transfers to a specific jax device (default: the
+        backend's first device)."""
         self.capacity_frames = capacity_frames
         self.capacity_segments = capacity_segments
         self.rng = np.random.default_rng(seed)
         self.blocking = blocking
+        self.prefetch = prefetch
+        self.device = device
+        self._staged = None      # (state_token, row_idx, device_leaves)
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
         self.frames_received = 0
         self.frames_consumed = 0
         self._t0 = time.monotonic()
@@ -99,27 +120,75 @@ class DataServer:
         self._size = min(self._size + rows, cap)
         self.frames_received += frames
         self._unconsumed += frames
+        if self.prefetch and self.blocking:
+            # on-policy: the next sample IS this segment — start its
+            # host->device copy now so it overlaps the in-flight train step
+            self._stage(self._last_rows, None)
 
     # -- learner side -----------------------------------------------------------
     def ready(self) -> bool:
         return self._size > 0 and (not self.blocking or self._unconsumed > 0)
 
-    def sample(self, batch_rows: Optional[int] = None):
-        """Most-recent segment when blocking (on-policy); a uniform
-        vectorized row gather otherwise."""
-        assert self._size > 0, "DataServer empty"
+    def _sample_idx(self, batch_rows: Optional[int]) -> np.ndarray:
         if self.blocking and batch_rows is None:
-            idx = self._last_rows
-        else:
-            k = batch_rows if batch_rows is not None else len(self._last_rows)
-            idx = self.rng.integers(self._size, size=k)
-            # map logical (oldest..newest) onto ring slots
-            idx = (self._head - self._size + idx) % self._row_slots
-        out_leaves = [buf[idx] for buf in self._buffers]
-        frames = len(idx) * self._frames_per_row
+            return self._last_rows
+        k = batch_rows if batch_rows is not None else len(self._last_rows)
+        idx = self.rng.integers(self._size, size=k)
+        # map logical (oldest..newest) onto ring slots
+        return (self._head - self._size + idx) % self._row_slots
+
+    def _consume(self, num_rows: int) -> None:
+        frames = num_rows * self._frames_per_row
         self.frames_consumed += frames
         self._unconsumed = max(0, self._unconsumed - frames)
+
+    def sample(self, batch_rows: Optional[int] = None):
+        """Most-recent segment when blocking (on-policy); a uniform
+        vectorized row gather otherwise. Host (NumPy) arrays."""
+        assert self._size > 0, "DataServer empty"
+        idx = self._sample_idx(batch_rows)
+        out_leaves = [buf[idx] for buf in self._buffers]
+        self._consume(len(idx))
         return jax.tree_util.tree_unflatten(self._treedef, out_leaves)
+
+    # -- pipelined device feeding -------------------------------------------------
+    def _state_token(self) -> tuple:
+        """Identity of the buffer state a staged batch was drawn from: any
+        `put` advances frames_received, so a stale staged batch (rows since
+        overwritten, or no longer the newest segment) can never be served."""
+        return (self._head, self._size, self.frames_received)
+
+    def _stage(self, idx: np.ndarray, for_batch_rows: Optional[int]) -> None:
+        """`for_batch_rows` records which request shape the staged batch
+        answers: a batch staged for the on-policy newest-segment request
+        (None) must never satisfy an explicit uniform `batch_rows` request —
+        the row *distributions* differ, not just the sizes."""
+        leaves = [jax.device_put(buf[idx], self.device)
+                  for buf in self._buffers]
+        self._staged = (self._state_token(), for_batch_rows, idx, leaves)
+
+    def sample_to_device(self, batch_rows: Optional[int] = None):
+        """`sample`, but the minibatch lands as device arrays and the next
+        minibatch's transfer is prefetched (double-buffered: the batch being
+        consumed and the one being staged are distinct freshly-allocated
+        device buffers, so donating the consumed batch is safe)."""
+        assert self._size > 0, "DataServer empty"
+        staged, self._staged = self._staged, None
+        if (staged is not None and staged[0] == self._state_token()
+                and staged[1] == batch_rows):
+            idx, leaves = staged[2], staged[3]
+            self.prefetch_hits += 1
+        else:
+            idx = self._sample_idx(batch_rows)
+            leaves = [jax.device_put(buf[idx], self.device)
+                      for buf in self._buffers]
+            self.prefetch_misses += 1
+        self._consume(len(idx))
+        if self.prefetch and not self.blocking:
+            # off-policy: the next uniform gather is known now — stage it
+            # (blocking mode stages at `put`, when the next segment exists)
+            self._stage(self._sample_idx(batch_rows), batch_rows)
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
 
     # -- introspection ------------------------------------------------------------
     @property
@@ -137,4 +206,6 @@ class DataServer:
             "rfps": self.frames_received / dt,
             "cfps": self.frames_consumed / dt,
             "repeat_ratio": self.frames_consumed / max(self.frames_received, 1),
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_misses": self.prefetch_misses,
         }

@@ -31,8 +31,20 @@ def _loss_for(kind):
     return {"ppo": (ppo_loss, PPOConfig), "vtrace": (vtrace_loss, VTraceConfig)}[kind]
 
 
+def _jit(train_step, jit: bool, donate_batch: bool):
+    """donate_argnums always covers (params, opt_state); `donate_batch`
+    additionally donates the trajectory argument — safe when batches arrive
+    as fresh device buffers (DataServer.sample_to_device), and it lets XLA
+    reuse the batch's device memory for activations."""
+    if not jit:
+        return train_step
+    donate = (0, 1, 2) if donate_batch else (0, 1)
+    return jax.jit(train_step, donate_argnums=donate)
+
+
 def build_env_train_step(cfg, num_actions: int, optimizer, hp=None,
-                         loss: str = "ppo", jit: bool = True):
+                         loss: str = "ppo", jit: bool = True,
+                         donate_batch: bool = False):
     loss_fn_impl, hp_cls = _loss_for(loss)
     hp = hp or hp_cls()
     policy = make_obs_policy(cfg, num_actions)
@@ -60,12 +72,13 @@ def build_env_train_step(cfg, num_actions: int, optimizer, hp=None,
         metrics = {**metrics, **om, "loss": lv}
         return params, opt_state, metrics
 
-    return jax.jit(train_step, donate_argnums=(0, 1)) if jit else train_step
+    return _jit(train_step, jit, donate_batch)
 
 
 def build_seq_train_step(cfg, optimizer, hp=None, loss: str = "ppo",
                          q_chunk: int = 512, remat: bool = True,
-                         unroll: bool = False, jit: bool = False):
+                         unroll: bool = False, jit: bool = False,
+                         donate_batch: bool = False):
     """Sequence-model PPO/V-trace: actions are tokens; logits from the LM
     head over the whole unroll. The big-arch learner step (`train_4k`)."""
     loss_fn_impl, hp_cls = _loss_for(loss)
@@ -98,11 +111,11 @@ def build_seq_train_step(cfg, optimizer, hp=None, loss: str = "ppo",
         params, opt_state, om = optimizer.update(grads, opt_state, params)
         return params, opt_state, {**metrics, **om, "loss": lv}
 
-    return jax.jit(train_step, donate_argnums=(0, 1)) if jit else train_step
+    return _jit(train_step, jit, donate_batch)
 
 
 def build_mlm_train_step(cfg, optimizer, remat: bool = True, unroll: bool = False,
-                         jit: bool = False):
+                         jit: bool = False, donate_batch: bool = False):
     """HuBERT-style masked-unit prediction (encoder-only audio)."""
     assert cfg.encoder_only
 
@@ -124,4 +137,4 @@ def build_mlm_train_step(cfg, optimizer, remat: bool = True, unroll: bool = Fals
         params, opt_state, om = optimizer.update(grads, opt_state, params)
         return params, opt_state, {**metrics, **om, "loss": lv}
 
-    return jax.jit(train_step, donate_argnums=(0, 1)) if jit else train_step
+    return _jit(train_step, jit, donate_batch)

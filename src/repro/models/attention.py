@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models import layers as L
 
 NEG_INF = -2.0 ** 30  # large-negative that survives bf16/softcap fine
@@ -80,8 +81,21 @@ def chunked_attend(q, k, v, q_pos, k_pos, *, causal, window, cap, scale,
     each query chunk only attends to a dynamic slice of q_chunk+window keys
     instead of all T — the masked-out key blocks were pure waste (this cut
     hymba prefill_32k attention work ~T/(q_chunk+window) = 21x; see
-    EXPERIMENTS.md §Perf-3)."""
+    EXPERIMENTS.md §Perf-3).
+
+    When the kernel dispatch layer routes to Pallas (TPU/GPU, or forced
+    interpret/pallas mode), the whole call lowers to the flash-attention
+    kernel instead: online softmax over KV tiles in VMEM, GQA via the
+    BlockSpec index maps. Callers here pass per-row contiguous positions
+    (arange + offset) for both q_pos and k_pos, which is exactly the
+    index-based masking the kernel applies."""
     B, T, H, hd = q.shape
+    if dispatch.use_pallas():
+        o = dispatch.attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), scale=scale, causal=causal,
+            window=window, cap=cap)
+        return o.transpose(0, 2, 1, 3)
     if T <= q_chunk or T % q_chunk:
         return _attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
                        cap=cap, scale=scale)

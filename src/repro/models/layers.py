@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+
 
 def _normal(rng, shape, scale, dtype):
     return (scale * jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
@@ -36,10 +38,7 @@ def rmsnorm_init(d, dtype):
 
 
 def rmsnorm(p, x, eps=1e-6):
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
-    return y.astype(x.dtype)
+    return dispatch.rmsnorm(x, p["scale"], eps=eps)
 
 
 def layernorm_init(d, dtype):

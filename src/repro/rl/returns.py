@@ -1,8 +1,14 @@
 """Return/advantage estimators: GAE, lambda-returns — the "algorithm-specific
 terms" the paper's DataServer computes before learning (§3.2 Learner).
 
-Pure-jnp reverse scans over time; the Pallas `vtrace_scan` kernel implements
-the same recursions tiled for VMEM and is tested against these.
+Every estimator here is one instance of the reverse discounted recursion
+
+    y_t = delta_t + decay_t * y_{t+1}
+
+and routes through `repro.kernels.dispatch.reverse_scan`: a fused Pallas
+kernel over the whole (B, T) minibatch on accelerators (batch-tiled in
+VMEM), the pure lax.scan-over-T reference on CPU. Both paths produce
+identical targets (tests/test_kernels.py asserts parity).
 
 Conventions: arrays are (B, T); `discounts` is gamma * (1 - done_t) — zero at
 episode boundaries; `bootstrap` is V(s_T) (B,).
@@ -12,47 +18,32 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-
-def _reverse_scan(f, init, xs_tmajor):
-    carry, ys = jax.lax.scan(f, init, xs_tmajor, reverse=True)
-    return carry, ys
+from repro.kernels import dispatch
 
 
 def gae(rewards, values, discounts, bootstrap, lam=0.95):
-    """Generalized Advantage Estimation. Returns (advantages, value_targets)."""
+    """Generalized Advantage Estimation. Returns (advantages, value_targets).
+
+    adv_t = delta_t + (gamma_t * lam) adv_{t+1},
+    delta_t = r_t + gamma_t V_{t+1} - V_t.
+    """
     v_tp1 = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
     deltas = rewards + discounts * v_tp1 - values
-
-    def body(adv, xs):
-        delta_t, disc_t = xs
-        adv = delta_t + disc_t * lam * adv
-        return adv, adv
-
-    xs = (deltas.T, discounts.T)
-    _, adv_t = _reverse_scan(body, jnp.zeros_like(bootstrap), xs)
-    advantages = adv_t.T
+    advantages = dispatch.reverse_scan(deltas, discounts * lam)
     return advantages, advantages + values
 
 
 def lambda_return(rewards, values, discounts, bootstrap, lam=0.95):
-    """TD(lambda) targets: G_t = r_t + gamma [ (1-lam) V_{t+1} + lam G_{t+1} ]."""
+    """TD(lambda) targets: G_t = r_t + gamma [ (1-lam) V_{t+1} + lam G_{t+1} ].
+
+    Same recursion with delta_t = r_t + gamma_t (1-lam) V_{t+1},
+    decay_t = gamma_t * lam, seeded at G_T = bootstrap.
+    """
     v_tp1 = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
-
-    def body(g, xs):
-        r_t, v_t, d_t = xs
-        g = r_t + d_t * ((1.0 - lam) * v_t + lam * g)
-        return g, g
-
-    xs = (rewards.T, v_tp1.T, discounts.T)
-    _, g_t = _reverse_scan(body, bootstrap, xs)
-    return g_t.T
+    deltas = rewards + discounts * (1.0 - lam) * v_tp1
+    return dispatch.reverse_scan(deltas, discounts * lam, bootstrap)
 
 
 def discounted_return(rewards, discounts, bootstrap):
-    def body(g, xs):
-        r_t, d_t = xs
-        g = r_t + d_t * g
-        return g, g
-
-    _, g_t = _reverse_scan(body, bootstrap, (rewards.T, discounts.T))
-    return g_t.T
+    """Plain discounted Monte-Carlo return, seeded at the bootstrap value."""
+    return dispatch.reverse_scan(rewards, discounts, bootstrap)

@@ -6,6 +6,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+
 
 def vtrace(behavior_logp, target_logp, rewards, values, discounts, bootstrap,
            *, lam=1.0, clip_rho=1.0, clip_c=1.0):
@@ -16,21 +18,17 @@ def vtrace(behavior_logp, target_logp, rewards, values, discounts, bootstrap,
       delta_t = rho_t (r_t + gamma_t v_{t+1} - v_t)
       vs_t = v_t + delta_t + gamma_t c_t (vs_{t+1} - v_{t+1})
       adv_t = rho_t (r_t + gamma_t vs_{t+1} - v_t)
+
+    The correction sum acc_t = vs_t - v_t satisfies the reverse discounted
+    recursion acc_t = delta_t + (gamma_t c_t) acc_{t+1}, so it runs through
+    the dispatch layer's fused (B, T) scan like GAE does.
     """
     rho = jnp.exp(target_logp - behavior_logp)
     rho_c = jnp.minimum(clip_rho, rho)
     c = lam * jnp.minimum(clip_c, rho)
     v_tp1 = jnp.concatenate([values[:, 1:], bootstrap[:, None]], axis=1)
     deltas = rho_c * (rewards + discounts * v_tp1 - values)
-
-    def body(acc, xs):
-        delta_t, disc_t, c_t = xs
-        acc = delta_t + disc_t * c_t * acc
-        return acc, acc
-
-    xs = (deltas.T, discounts.T, c.T)
-    _, acc_t = jax.lax.scan(body, jnp.zeros_like(bootstrap), xs, reverse=True)
-    vs = values + acc_t.T
+    vs = values + dispatch.reverse_scan(deltas, discounts * c)
     vs_tp1 = jnp.concatenate([vs[:, 1:], bootstrap[:, None]], axis=1)
     pg_adv = rho_c * (rewards + discounts * vs_tp1 - values)
     return jax.lax.stop_gradient(vs), jax.lax.stop_gradient(pg_adv)

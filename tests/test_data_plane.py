@@ -129,6 +129,86 @@ def test_blocking_semantics_and_uniform_gather():
     assert ds2.frames_consumed == 10 * 8
 
 
+def test_sample_to_device_matches_host_sample_and_prefetches():
+    """The pipelined device feed returns the same minibatch the host path
+    would, as device arrays, and the blocking-mode prefetch staged at `put`
+    is actually used."""
+    ds = DataServer(capacity_frames=64 * 8, blocking=True, prefetch=True)
+    for i in range(3):
+        ds.put(_traj(i))
+        got = ds.sample_to_device()           # staged by the put above
+        want = _traj(i)
+        for k in want:
+            leaf = got[k]
+            assert isinstance(leaf, jax.Array), k
+            np.testing.assert_array_equal(np.asarray(leaf), want[k], err_msg=k)
+    assert ds.prefetch_hits == 3 and ds.prefetch_misses == 0
+    assert ds.frames_consumed == 3 * 4 * 8    # accounting identical to sample()
+    assert not ds.ready()                     # on-policy semantics preserved
+
+
+def test_sample_to_device_staleness_and_uniform_prefetch():
+    # blocking: two puts before a sample -> the first staged batch is stale
+    ds = DataServer(capacity_frames=64 * 8, blocking=True, prefetch=True)
+    ds.put(_traj(0))
+    ds.put(_traj(1))
+    got = ds.sample_to_device()               # must be the NEWEST segment
+    np.testing.assert_array_equal(np.asarray(got["actions"]),
+                                  _traj(1)["actions"])
+
+    # uniform mode: staging happens after a sample; a put in between
+    # invalidates it (rows may have been overwritten)
+    ds2 = DataServer(capacity_frames=64 * 8, blocking=False, seed=5,
+                     prefetch=True)
+    for i in range(3):
+        ds2.put(_traj(i))
+    a = ds2.sample_to_device(batch_rows=6)    # miss (nothing staged yet)
+    b = ds2.sample_to_device(batch_rows=6)    # hit (staged after a)
+    ds2.put(_traj(9))
+    c = ds2.sample_to_device(batch_rows=6)    # stale -> miss, fresh gather
+    assert ds2.prefetch_hits == 1 and ds2.prefetch_misses == 2
+    for mb in (a, b, c):
+        assert np.asarray(mb["actions"]).shape == (6, 8)
+
+    # host sample() on a prefetch server stays numpy and unaffected
+    ds3 = DataServer(capacity_frames=64 * 8, blocking=True, prefetch=True)
+    ds3.put(_traj(0))
+    assert isinstance(ds3.sample()["actions"], np.ndarray)
+
+
+def test_explicit_batch_rows_never_served_from_onpolicy_stage():
+    """A batch staged for the on-policy newest-segment request (put in
+    blocking mode) must not answer an explicit uniform batch_rows request
+    of the same size — the row distributions differ."""
+    ds = DataServer(capacity_frames=64 * 8, blocking=True, prefetch=True,
+                    seed=11)
+    for i in range(8):
+        ds.put(_traj(i))                       # stages newest segment (4 rows)
+    got = ds.sample_to_device(batch_rows=4)    # uniform request, same size
+    assert ds.prefetch_hits == 0 and ds.prefetch_misses == 1
+    # must follow the same rng stream as the host sample() path would
+    ref = DataServer(capacity_frames=64 * 8, blocking=True, prefetch=False,
+                     seed=11)
+    for i in range(8):
+        ref.put(_traj(i))
+    want = ref.sample(batch_rows=4)
+    np.testing.assert_array_equal(np.asarray(got["actions"]),
+                                  np.asarray(want["actions"]))
+
+
+def test_served_flag_league_training_smoke():
+    """launch/train.py --served: all actors share one InfServer and the
+    run produces loss rows (and never loss=nan placeholder rows)."""
+    from repro.launch.train import run_league_training
+    league, agents, history = run_league_training(
+        env_name="rps", periods=1, steps_per_period=2, num_envs=4,
+        unroll_len=8, served=True, verbose=False)
+    assert len(league.league_state()["frozen_pool"]) >= 1
+    assert all(("loss" in r) != ("skipped" in r) for r in history)
+    losses = [r["loss"] for r in history if "loss" in r]
+    assert losses and all(np.isfinite(losses))
+
+
 def test_structure_change_is_rejected():
     ds = DataServer(capacity_frames=64)
     ds.put(_traj(0))

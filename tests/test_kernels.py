@@ -1,15 +1,17 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret=True executes the kernel body on CPU)."""
+(interpret=True executes the kernel body on CPU), plus the dispatch layer
+that routes models/ and rl/ through them."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
+from repro.kernels import (dispatch, flash_attention, reverse_discounted_scan,
+                           rmsnorm)
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.vtrace_scan.ref import reverse_discounted_scan_ref
-from repro.rl.returns import gae
+from repro.rl.returns import discounted_return, gae, lambda_return
 from repro.rl.vtrace import vtrace
 
 KEY = jax.random.PRNGKey(7)
@@ -132,3 +134,147 @@ def test_rmsnorm_shapes(shape, dtype):
     r = rmsnorm_ref(x, w)
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(r, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch layer: the routing models/ and rl/ actually use
+# ---------------------------------------------------------------------------
+def test_dispatch_mode_resolution():
+    assert dispatch.resolve() in ("compiled", "interpret", "reference")
+    with dispatch.force("reference"):
+        assert dispatch.resolve() == "reference" and not dispatch.use_pallas()
+        with dispatch.force("interpret"):
+            assert dispatch.resolve() == "interpret" and dispatch.use_pallas()
+        assert dispatch.resolve() == "reference"   # nesting restores
+    with dispatch.force("auto"):
+        on_accel = jax.default_backend() in ("tpu", "gpu")
+        assert dispatch.resolve() == ("compiled" if on_accel else "reference")
+
+
+def test_dispatch_block_selection_is_shape_aware():
+    assert dispatch.rmsnorm_block(4096, 128) > dispatch.rmsnorm_block(16, 128)
+    assert dispatch.rmsnorm_block(16, 128) >= 8
+    bq, bk = dispatch.attention_blocks(1, 1, 64, jnp.float32)
+    assert bq == 8 and bk == 8                      # T=1 floors, not 128
+    bq16, _ = dispatch.attention_blocks(256, 256, 64, jnp.bfloat16)
+    assert bq16 >= 16                               # bf16 sublane floor
+    assert dispatch.scan_block(8192, 16) > dispatch.scan_block(8, 16)
+
+
+@pytest.mark.parametrize("B,T", [(13, 100), (1, 1), (5, 1), (32, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dispatch_scan_odd_shapes(B, T, dtype):
+    """B not divisible by the block, T=1 degenerate unrolls."""
+    ks = jax.random.split(KEY, 3)
+    deltas = jax.random.normal(ks[0], (B, T), dtype)
+    decays = (jax.random.uniform(ks[1], (B, T)) * 0.99).astype(dtype)
+    init = jax.random.normal(ks[2], (B,))
+    with dispatch.force("interpret"):
+        y = dispatch.reverse_scan(deltas, decays, init)
+    with dispatch.force("reference"):
+        r = dispatch.reverse_scan(deltas, decays, init)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,d", [(13, 64, 384), (3, 1, 128), (1, 5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dispatch_rmsnorm_odd_shapes(B, T, d, dtype):
+    ks = jax.random.split(KEY, 2)
+    x = jax.random.normal(ks[0], (B, T, d), dtype)
+    w = jax.random.normal(ks[1], (d,), jnp.float32)
+    with dispatch.force("interpret"):
+        y = dispatch.rmsnorm(x, w)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(rmsnorm_ref(x, w), np.float32),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("Tq,Tk,window,cap", [
+    (1, 96, 0, 0.0),        # single-query (decode-like) row
+    (96, 96, 32, 0.0),      # sliding window
+    (96, 96, 0, 30.0),      # gemma2 softcap
+    (100, 100, 24, 50.0),   # both, T not a block multiple
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dispatch_attention_variants(Tq, Tk, window, cap, dtype):
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, d = 2, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, H, Tq, d), dtype)
+    k = jax.random.normal(ks[1], (B, KV, Tk, d), dtype)
+    v = jax.random.normal(ks[2], (B, KV, Tk, d), dtype)
+    causal = Tq == Tk
+    with dispatch.force("interpret"):
+        o = dispatch.attention(q, k, v, scale=d ** -0.5, causal=causal,
+                               window=window, cap=cap)
+    r = attention_ref(q, k, v, scale=d ** -0.5, causal=causal, window=window,
+                      cap=cap)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+def test_returns_identical_through_either_path():
+    """gae / lambda_return / discounted_return / V-trace produce the same
+    targets whether routed to the fused kernel or the lax.scan reference
+    (ISSUE 2 acceptance)."""
+    ks = jax.random.split(KEY, 6)
+    B, T = 13, 21                       # B not divisible by the scan block
+    r = jax.random.normal(ks[0], (B, T))
+    v = jax.random.normal(ks[1], (B, T))
+    g = (jax.random.bernoulli(ks[2], 0.93, (B, T)) * 0.99).astype(jnp.float32)
+    boot = jax.random.normal(ks[3], (B,))
+    blp = -jnp.abs(jax.random.normal(ks[4], (B, T)))
+    tlp = -jnp.abs(jax.random.normal(ks[5], (B, T)))
+    outs = {}
+    for m in ("reference", "interpret"):
+        with dispatch.force(m):
+            adv, targ = gae(r, v, g, boot, lam=0.9)
+            vs, pg = vtrace(blp, tlp, r, v, g, boot, lam=0.95, clip_rho=2.0)
+            outs[m] = (adv, targ, lambda_return(r, v, g, boot, lam=0.7),
+                       discounted_return(r, g, boot), vs, pg)
+    for a, b in zip(outs["reference"], outs["interpret"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_grad_flows_through_kernel_path():
+    """rmsnorm + fused attention sit in the train step's grad path: the
+    custom_vjp recompute-backward must match reference autodiff."""
+    from repro.models import layers as L
+    from repro.models.attention import chunked_attend
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (3, 5, 64))
+    p = {"scale": 1.0 + 0.1 * jax.random.normal(ks[1], (64,))}
+    f = lambda x: jnp.sum(jnp.square(L.rmsnorm(p, x)))
+    with dispatch.force("interpret"):
+        gk = jax.grad(f)(x)
+    with dispatch.force("reference"):
+        gr = jax.grad(f)(x)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               rtol=1e-5, atol=1e-5)
+
+    B, T, H, KV, hd = 2, 32, 4, 2, 16
+    q = jax.random.normal(ks[2], (B, T, H, hd))
+    kv = jax.random.normal(ks[3], (B, T, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    fa = lambda q: jnp.sum(jnp.square(chunked_attend(
+        q, kv, kv, pos, pos, causal=True, window=8, cap=20.0, scale=0.25)))
+    with dispatch.force("interpret"):
+        gk = jax.grad(fa)(q)
+    with dispatch.force("reference"):
+        gr = jax.grad(fa)(q)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_inside_jit_is_mode_stable():
+    """Dispatch decisions are trace-time static: a jitted function captures
+    the mode active when traced, and re-tracing under another mode agrees."""
+    x = jax.random.normal(KEY, (4, 3, 128))
+    w = jnp.ones((128,))
+    with dispatch.force("interpret"):
+        y_i = jax.jit(lambda x: dispatch.rmsnorm(x, w))(x)
+    with dispatch.force("reference"):
+        y_r = jax.jit(lambda x: dispatch.rmsnorm(x, w))(x)
+    np.testing.assert_allclose(np.asarray(y_i), np.asarray(y_r),
+                               rtol=1e-6, atol=1e-6)
