@@ -399,6 +399,112 @@ def learner_throughput(out_path: str | None = None, iters: int = 8):
     return record
 
 
+def league_throughput(out_path: str | None = None, seconds: float = 10.0):
+    """ISSUE 3 acceptance: the event-driven league runtime vs the legacy
+    lockstep loop at matched counts (2 roles x 2 actors = 4 actors, 2
+    learners) on one host, plus async freeze latency and a seeded --sync
+    bit-determinism check. Writes BENCH_league.json.
+
+    Both schedules drive IDENTICAL prewarmed components (same build_runtime
+    wiring, jits compiled before the clock starts): the sync baseline runs
+    the nested actor->learner loop on the main thread, the async side runs
+    the same workers on their own threads — the measured delta is purely
+    the schedule."""
+    from repro.core import FreezeGate
+    from repro.league import LeagueSpec, RoleSpec, build_runtime
+    from repro.launch.train import run_league_training
+
+    # the paper's Pommerman setting (§4.3): env stepping heavy enough that
+    # the schedule, not a single fused op, decides throughput
+    env_name, num_envs, unroll = "pommerman_lite", 8, 16
+    actors_per_role, n_freeze_steps = 2, 2
+
+    def mk_spec():
+        return LeagueSpec(roles=(
+            RoleSpec(name="main", role="main", num_actors=actors_per_role,
+                     gate=FreezeGate(step_gate=n_freeze_steps)),
+            RoleSpec(name="exploiter:0", role="minimax_exploiter",
+                     target="main", num_actors=actors_per_role,
+                     gate=FreezeGate(step_gate=n_freeze_steps)),
+        ))
+
+    def build_prewarmed():
+        rt = build_runtime(mk_spec(), env_name=env_name, num_envs=num_envs,
+                           unroll_len=unroll, seed=0)
+        for role in rt.roles:            # compile every jit off the clock
+            for w in role.actors:
+                traj, _ = w.actor.run_segment()
+                role.data_server.put(traj)
+            role.learner.learner.learn(num_steps=1)
+        return rt
+
+    def frames(rt):
+        return sum(w.actor.frames_produced
+                   for role in rt.roles for w in role.actors)
+
+    # -- sync baseline: the lockstep nested loop, main thread ----------------
+    rt_sync = build_prewarmed()
+    f0, t0 = frames(rt_sync), time.perf_counter()
+    while time.perf_counter() - t0 < seconds:
+        for role in rt_sync.roles:
+            for w in role.actors:
+                traj, _ = w.actor.run_segment()
+                role.data_server.put(traj)
+            role.learner.learner.learn(num_steps=len(role.actors))
+    dt_sync = time.perf_counter() - t0
+    fps_sync = (frames(rt_sync) - f0) / dt_sync
+
+    # -- async: same components, event-driven ---------------------------------
+    rt_async = build_prewarmed()
+    f0 = frames(rt_async)
+    report = rt_async.run(max_seconds=seconds)
+    fps_async = (frames(rt_async) - f0) / report["wall_s"]
+    speedup = fps_async / fps_sync
+
+    # -- seeded --sync bit-determinism ---------------------------------------
+    def sync_run():
+        league, _, history = run_league_training(
+            env_name="rps", num_envs=4, unroll_len=8, periods=1,
+            steps_per_period=3, league_spec=mk_spec(), seed=11,
+            verbose=False)
+        state = league.league_state()
+        state.pop("wall_s", None)
+        return [r.get("loss") for r in history], state
+    la, sa = sync_run()
+    lb, sb = sync_run()
+    deterministic = (la == lb and sa == sb)   # float == float: bitwise
+    assert deterministic, "seeded --sync run is not bit-deterministic"
+
+    record = {
+        "env": env_name,
+        "arch": "tleague-policy-s",
+        "num_envs": num_envs,
+        "unroll_len": unroll,
+        "roles": 2,
+        "actors": 2 * actors_per_role,
+        "learners": 2,
+        "measure_seconds": seconds,
+        "sync_frames_per_s": round(fps_sync, 1),
+        "async_frames_per_s": round(fps_async, 1),
+        "async_speedup_x": round(speedup, 3),
+        "async_freezes": report["league"]["num_freezes"],
+        "freeze_latency_s_mean": report["freeze_latency_s_mean"],
+        "freeze_latency_s_max": report["freeze_latency_s_max"],
+        "async_clean_shutdown": report["clean_shutdown"],
+        "sync_bit_deterministic": deterministic,
+        "backend": jax.default_backend(),
+    }
+    path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_league.json"
+    _write_bench(path, record)
+    _emit("league/sync_lockstep", dt_sync * 1e6,
+          f"frames_per_s={fps_sync:.0f}")
+    _emit("league/async_runtime", report["wall_s"] * 1e6,
+          f"frames_per_s={fps_async:.0f};speedup_x={speedup:.2f};"
+          f"freeze_latency_ms={1e3 * (report['freeze_latency_s_mean'] or 0):.0f};"
+          f"wrote={path.name}")
+    return record
+
+
 def kernels():
     from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
     k = jax.random.PRNGKey(0)
@@ -420,8 +526,8 @@ def kernels():
 
 
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
-           "infserver_throughput", "learner_throughput", "kernels",
-           "fig4_winrate", "table12_league_eval")
+           "infserver_throughput", "learner_throughput", "league_throughput",
+           "kernels", "fig4_winrate", "table12_league_eval")
 
 
 def main() -> None:

@@ -1,20 +1,43 @@
 """End-to-end driver (paper §4.3): 2v2 Pommerman-lite team CSP training with
-the AlphaStar-style 35% self-play / 65% PFSP mixture, a main agent + an
-exploiter, periodic freezes, PBT hyper perturbation, and a win-rate
+the AlphaStar-style 35% self-play / 65% PFSP mixture, built from a
+LeagueSpec — one `main` role plus one `minimax_exploiter` (the
+data-efficient exploiter curriculum of arXiv:2311.17190) — with periodic
+freezes, exploiter reset-on-freeze, PBT hyper perturbation, and a win-rate
 evaluation vs the scripted SimpleAgent after every period (the paper's
 Fig. 4 curve).
 
   PYTHONPATH=src python examples/pommerman_league.py --periods 3 --steps 24
+
+`--async-seconds N` swaps the deterministic lockstep loop for the
+event-driven league runtime (threads + winrate-gated freezes) for N
+seconds per period instead.
 """
 import argparse
 
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core import FreezeGate
 from repro.envs import make_env
 from repro.envs.scripted import pommerman_simple_bot
 from repro.eval import learned_policy_fn, play_episodes, winrate_vs
-from repro.launch.train import run_league_training
+from repro.league import LeagueSpec, RoleSpec
+from repro.launch.train import run_league_training, run_league_training_async
+
+
+def build_spec(steps_per_period: int) -> LeagueSpec:
+    """One main + one minimax exploiter chasing it. The gate freezes on
+    pool winrate >= tau (or a step timeout), and the exploiter restarts
+    from its seed at every freeze (AlphaStar reset semantics)."""
+    return LeagueSpec(roles=(
+        RoleSpec(name="main", role="main",
+                 gate=FreezeGate(winrate=0.7, min_games=16, min_steps=8,
+                                 timeout_steps=max(8, steps_per_period))),
+        RoleSpec(name="exploiter:0", role="minimax_exploiter", target="main",
+                 matchmaking_kwargs={"beat_threshold": 0.6},
+                 gate=FreezeGate(winrate=0.6, min_games=16, min_steps=8,
+                                 timeout_steps=max(8, steps_per_period))),
+    ))
 
 
 def main():
@@ -23,19 +46,31 @@ def main():
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--envs", type=int, default=8)
     ap.add_argument("--eval-episodes", type=int, default=8)
+    ap.add_argument("--async-seconds", type=float, default=None,
+                    help="run the event-driven runtime for this many "
+                         "seconds per period instead of the lockstep loop")
     args = ap.parse_args()
 
     curve = []
     cfg = get_arch("tleague-policy-s")
     env = make_env("pommerman_lite")
+    spec = build_spec(args.steps)
 
     for p in range(args.periods):
-        league, agents, _ = run_league_training(
-            env_name="pommerman_lite", arch="tleague-policy-s",
-            game_mgr="sp_pfsp", periods=p + 1, steps_per_period=args.steps,
-            num_envs=args.envs, unroll_len=16, num_exploiters=1, pbt=True,
-            verbose=(p == 0))
-        _, learner = agents["main"]
+        if args.async_seconds:
+            league, runtime, report = run_league_training_async(
+                spec, env_name="pommerman_lite", arch="tleague-policy-s",
+                num_envs=args.envs, unroll_len=16, pbt=True,
+                max_seconds=args.async_seconds * (p + 1),
+                verbose=(p == 0))
+            learner = runtime.roles[0].learner.learner
+        else:
+            league, agents, _ = run_league_training(
+                env_name="pommerman_lite", arch="tleague-policy-s",
+                periods=p + 1, steps_per_period=args.steps,
+                num_envs=args.envs, unroll_len=16, pbt=True,
+                league_spec=spec, verbose=(p == 0))
+            _, learner = agents["main"]
         me = learned_policy_fn(cfg, env.spec.num_actions, learner.params)
         res = play_episodes(env, [me, me, pommerman_simple_bot,
                                   pommerman_simple_bot],

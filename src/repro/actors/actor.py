@@ -44,6 +44,7 @@ class Actor:
         self.rng = jax.random.PRNGKey(seed)
         self.carry = None
         self._served_theta_key = None
+        self._evict_backlog = set()   # routes declined while requests pending
         self.num_envs, self.unroll_len = num_envs, unroll_len
         self.frames_produced = 0   # rfps numerator (paper Table 3)
 
@@ -68,7 +69,19 @@ class Actor:
             # registry doesn't grow by one model per learning period
             prev = self._served_theta_key
             if prev is not None and prev != task.learner_key:
-                self.inf_server.evict_model(prev)
+                self._evict_backlog.add(prev)
+            self._evict_backlog.discard(task.learner_key)
+            self._evict_backlog.discard(task.opponent_keys[0])
+            # a superseded theta that froze into the pool is now a
+            # legitimate opponent route other workers may be mid-segment
+            # on — keep it hosted (the registry then tracks pool size, the
+            # same growth as the ModelPool itself); evict_model declines
+            # (returns False) while requests are queued for the route, so
+            # whatever remains is retried next segment
+            self._evict_backlog = {
+                k for k in self._evict_backlog
+                if k not in self.league.frozen_pool
+                and not self.inf_server.evict_model(k)}
             self._served_theta_key = task.learner_key
             self.inf_server.update_params(theta, key=task.learner_key)
             self.inf_server.ensure_model(task.opponent_keys[0], phi)

@@ -1,11 +1,13 @@
 """The paper's primary contribution: league-based CSP-MARL machinery
 (LeagueMgr, GameMgr opponent sampling, ModelPool, HyperMgr, payoff/Elo)."""
-from repro.core.types import ModelKey, Task, MatchResult, Hyperparam
+from repro.core.types import (ModelKey, Task, MatchResult, Hyperparam,
+                              FreezeGate)
 from repro.core.payoff import PayoffMatrix
 from repro.core.model_pool import ModelPool
 from repro.core.hyper_mgr import HyperMgr
 from repro.core.game_mgr import (
     GameMgr, UniformGameMgr, PFSPGameMgr, SelfPlayPFSPGameMgr,
-    EloMatchGameMgr, ExploiterGameMgr, GAME_MGRS,
+    EloMatchGameMgr, ExploiterGameMgr, LeagueExploiterGameMgr,
+    MinimaxExploiterGameMgr, GAME_MGRS,
 )
-from repro.core.league_mgr import LeagueMgr
+from repro.core.league_mgr import LeagueMgr, LearningAgent, ROLES

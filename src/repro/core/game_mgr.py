@@ -135,6 +135,50 @@ class EloMatchGameMgr(GameMgr):
         return self._choice(list(candidates), w)
 
 
+@register_game_mgr("league_pfsp")
+class LeagueExploiterGameMgr(PFSPGameMgr):
+    """League-Exploiter [Vinyals et al. 2019]: PFSP over the ENTIRE frozen
+    pool, every lineage included — it hunts systemic weaknesses of the whole
+    league rather than the main agent specifically. AlphaStar uses the
+    'linear' (1-p) weighting here, softer than the main agent's squared."""
+
+    def __init__(self, weighting: str = "linear", **kw):
+        super().__init__(weighting=weighting, **kw)
+
+
+@register_game_mgr("minimax")
+class MinimaxExploiterGameMgr(GameMgr):
+    """Minimax-Exploiter [arXiv:2311.17190]: a data-efficient exploiter
+    curriculum over the target lineage. Instead of always attacking the
+    newest (strongest) main model, walk the target's frozen history from
+    oldest to newest and play the first model not yet beaten (pool winrate
+    < `beat_threshold`) — easy wins first give a dense learning signal, and
+    the curriculum advances one rung per conquest until the newest model is
+    the only one left."""
+
+    def __init__(self, target_agent_id: str = "main",
+                 beat_threshold: float = 0.7, **kw):
+        super().__init__(**kw)
+        self.target_agent_id = target_agent_id
+        self.beat_threshold = beat_threshold
+
+    def get_opponent(self, learner_key, candidates):
+        targets = sorted((c for c in candidates
+                          if c.agent_id == self.target_agent_id),
+                         key=lambda k: k.version)
+        if not targets:
+            return learner_key
+        for t in targets:
+            if learner_key not in self.payoff or t not in self.payoff:
+                return t                      # no evidence yet: start here
+            if self.payoff.winrate(learner_key, t) < self.beat_threshold:
+                return t                      # current curriculum rung
+        return targets[-1]                    # beat them all: press the newest
+
+    def get_player(self, learner_key, candidates):
+        return self.get_opponent(learner_key, candidates)
+
+
 @register_game_mgr("exploiter")
 class ExploiterGameMgr(GameMgr):
     """Agent-Exploiter: always targets the main agent's current model."""

@@ -9,18 +9,38 @@ Lifecycle per learning agent (M_G of them can run in parallel):
   - `end_learning_period` freezes theta into the pool (M <- M + {theta}),
     mints theta_{v+1} (inheriting params via the ModelPool and hypers via
     HyperMgr — optionally PBT-perturbed), and returns the new key.
+
+Role-based scheduling (AlphaStar / Minimax-Exploiter extension): each
+learning agent can carry a role (`main`, `main_exploiter`,
+`league_exploiter`, `minimax_exploiter`), a `FreezeGate` that gates
+freezing on pool winrate (freeze when winrate >= tau vs the frozen pool,
+or on timeout) instead of a fixed period count, and a reset-on-freeze
+policy (`continue` keeps training from theta; `seed` restores the
+imitation/random seed params, the exploiter reset of AlphaStar). The
+league coordinator polls `should_freeze` and the Learner executes the
+freeze via `end_learning_period`.
+
+Every public method is thread-safe (one RLock): in the async runtime
+Actors, Learners and the coordinator call in concurrently from their own
+threads.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.game_mgr import GameMgr, SelfPlayPFSPGameMgr
 from repro.core.hyper_mgr import HyperMgr
 from repro.core.model_pool import ModelPool
 from repro.core.payoff import PayoffMatrix
-from repro.core.types import Hyperparam, MatchResult, ModelKey, Task
+from repro.core.types import (FreezeGate, Hyperparam, MatchResult, ModelKey,
+                              Task)
+from repro.utils.pytree import tree_copy
+
+ROLES = ("main", "main_exploiter", "league_exploiter", "minimax_exploiter")
 
 
 @dataclass
@@ -29,6 +49,10 @@ class LearningAgent:
     current: ModelKey
     game_mgr: GameMgr
     frozen_count: int = 0
+    role: str = "main"
+    gate: Optional[FreezeGate] = None
+    reset_on_freeze: str = "continue"      # 'continue' | 'seed'
+    seed_params: Any = None                # kept only when reset needs it
 
 
 class LeagueMgr:
@@ -44,68 +68,136 @@ class LeagueMgr:
         self.pbt = pbt
         self._task_ids = itertools.count()
         self._results: List[MatchResult] = []
+        self._lock = threading.RLock()
+        # incremental pool-membership filter: the opponent list only changes
+        # when a model freezes or pool membership moves, so cache it behind a
+        # (frozen-pool length, pool membership version) signature instead of
+        # re-filtering O(pool) on every request_task
+        self._opp_cache: Tuple[ModelKey, ...] = ()
+        self._opp_sig: Tuple[int, int] = (-1, -1)
+        self.freeze_events: List[dict] = []     # telemetry: who froze, why, when
 
     # -- setup -------------------------------------------------------------------
     def add_learning_agent(self, agent_id: str, init_params: Any,
                            game_mgr: Optional[GameMgr] = None,
                            hyper: Optional[Hyperparam] = None,
-                           seed_into_pool: bool = True) -> ModelKey:
+                           seed_into_pool: bool = True,
+                           role: str = "main",
+                           gate: Optional[FreezeGate] = None,
+                           reset_on_freeze: str = "continue") -> ModelKey:
         """Register a learning agent with its seed model theta_1 (random init
         or imitation-learned, §3.1)."""
-        gm = game_mgr or SelfPlayPFSPGameMgr(payoff=self.payoff)
-        gm.payoff = self.payoff                 # all agents share one payoff matrix
-        key = ModelKey(agent_id, 0)
-        self.model_pool.push(key, init_params)
-        self.hyper_mgr.register(key, hyper)
-        gm.add_player(key)
-        self.agents[agent_id] = LearningAgent(agent_id, key, gm)
-        if seed_into_pool:
-            # the seed policy is a valid opponent from the start
-            frozen_seed = ModelKey(agent_id, 0)
-            if frozen_seed not in self.frozen_pool:
-                self.frozen_pool.append(frozen_seed)
-        return key
+        assert role in ROLES, f"unknown role {role!r}; pick from {ROLES}"
+        assert reset_on_freeze in ("continue", "seed"), reset_on_freeze
+        with self._lock:
+            gm = game_mgr or SelfPlayPFSPGameMgr(payoff=self.payoff)
+            gm.payoff = self.payoff             # all agents share one payoff matrix
+            key = ModelKey(agent_id, 0)
+            self.model_pool.push(key, init_params)
+            self.hyper_mgr.register(key, hyper)
+            gm.add_player(key)
+            seed_params = tree_copy(init_params) if reset_on_freeze == "seed" else None
+            self.agents[agent_id] = LearningAgent(
+                agent_id, key, gm, role=role, gate=gate,
+                reset_on_freeze=reset_on_freeze, seed_params=seed_params)
+            if seed_into_pool:
+                # the seed policy is a valid opponent from the start
+                frozen_seed = ModelKey(agent_id, 0)
+                if frozen_seed not in self.frozen_pool:
+                    self.frozen_pool.append(frozen_seed)
+            return key
 
     # -- actor-facing API -----------------------------------------------------
+    def _opponents(self) -> Tuple[ModelKey, ...]:
+        """Frozen-pool members whose params are pullable, cached until the
+        frozen pool or the ModelPool's key set actually changes."""
+        sig = (len(self.frozen_pool), self.model_pool.membership_version)
+        if sig != self._opp_sig:
+            self._opp_cache = tuple(k for k in self.frozen_pool
+                                    if k in self.model_pool)
+            self._opp_sig = sig
+        return self._opp_cache
+
     def request_task(self, agent_id: str = "main") -> Task:
-        ag = self.agents[agent_id]
-        opponents = [k for k in self.frozen_pool if k in self.model_pool]
-        opp = ag.game_mgr.get_opponent(ag.current, opponents)
-        return Task(learner_key=ag.current, opponent_keys=(opp,),
-                    hyperparam=self.hyper_mgr.get(ag.current),
-                    task_id=next(self._task_ids))
+        with self._lock:
+            ag = self.agents[agent_id]
+            opp = ag.game_mgr.get_opponent(ag.current, self._opponents())
+            return Task(learner_key=ag.current, opponent_keys=(opp,),
+                        hyperparam=self.hyper_mgr.get(ag.current),
+                        task_id=next(self._task_ids))
 
     def report_result(self, result: MatchResult):
-        self._results.append(result)
-        for key in (result.learner_key, *result.opponent_keys):
-            if key not in self.payoff:
-                self.payoff.add_model(key)
-        ag = self.agents.get(result.learner_key.agent_id)
-        (ag.game_mgr if ag else GameMgr(payoff=self.payoff)).on_match_result(result)
+        with self._lock:
+            self._results.append(result)
+            for key in (result.learner_key, *result.opponent_keys):
+                if key not in self.payoff:
+                    self.payoff.add_model(key)
+            ag = self.agents.get(result.learner_key.agent_id)
+            if ag is not None:
+                ag.game_mgr.on_match_result(result)
+            else:
+                # unknown lineage (eval traffic, a lineage whose learner
+                # already detached): record straight on the shared payoff
+                # matrix instead of minting a throwaway GameMgr per result
+                self.payoff.record(result)
 
     # -- learner-facing API ------------------------------------------------------
     def request_learner_task(self, agent_id: str = "main") -> Task:
         return self.request_task(agent_id)
 
-    def end_learning_period(self, agent_id: str, params: Any) -> ModelKey:
-        """Freeze theta, mint theta_{v+1} (same lineage), PBT if enabled."""
-        ag = self.agents[agent_id]
-        old = ag.current
-        self.model_pool.push(old, params)       # final weights
-        self.model_pool.freeze(old)
-        if old not in self.frozen_pool:
-            self.frozen_pool.append(old)
-        new = ModelKey(agent_id, old.version + 1)
-        self.model_pool.push(new, params)       # warm start from theta
-        self.hyper_mgr.inherit(new, old)
-        if self.pbt:
-            self._maybe_pbt(agent_id, new)
-        ag.game_mgr.add_player(new, parent=old)
-        if new not in self.payoff:
-            self.payoff.add_model(new)
-        ag.current = new
-        ag.frozen_count += 1
-        return new
+    # -- freeze gating (league coordinator API) ----------------------------------
+    def pool_winrate(self, agent_id: str) -> Tuple[float, float]:
+        """theta's aggregate (winrate, games) vs the current frozen pool —
+        the FreezeGate signal."""
+        with self._lock:
+            ag = self.agents[agent_id]
+            opponents = [k for k in self._opponents() if k != ag.current]
+            return self.payoff.aggregate_vs(ag.current, opponents)
+
+    def should_freeze(self, agent_id: str, steps: int) -> Optional[str]:
+        """Freeze reason if this agent's gate fires at `steps` learner steps
+        into the current period; None to keep training. Agents without a
+        gate (legacy fixed-period drivers) never self-trigger."""
+        with self._lock:
+            ag = self.agents[agent_id]
+            if ag.gate is None:
+                return None
+            wr, games = self.pool_winrate(agent_id)
+            return ag.gate.check(steps, wr, games)
+
+    def end_learning_period(self, agent_id: str, params: Any,
+                            reason: str = "period") -> ModelKey:
+        """Freeze theta, mint theta_{v+1} (same lineage), PBT if enabled.
+
+        theta_{v+1} warm-starts from theta, unless the agent's
+        reset-on-freeze policy is 'seed' (exploiter roles), in which case it
+        restarts from the stashed seed params — the AlphaStar exploiter
+        reset. Callers that hold live params (the Learner) must re-pull
+        theta_{v+1} from the ModelPool afterwards."""
+        with self._lock:
+            ag = self.agents[agent_id]
+            old = ag.current
+            self.model_pool.push(old, params)       # final weights
+            self.model_pool.freeze(old)
+            if old not in self.frozen_pool:
+                self.frozen_pool.append(old)
+            new = ModelKey(agent_id, old.version + 1)
+            if ag.reset_on_freeze == "seed" and ag.seed_params is not None:
+                self.model_pool.push(new, tree_copy(ag.seed_params))
+            else:
+                self.model_pool.push(new, params)   # warm start from theta
+            self.hyper_mgr.inherit(new, old)
+            if self.pbt:
+                self._maybe_pbt(agent_id, new)
+            ag.game_mgr.add_player(new, parent=old)
+            if new not in self.payoff:
+                self.payoff.add_model(new)
+            ag.current = new
+            ag.frozen_count += 1
+            self.freeze_events.append({
+                "key": str(old), "agent": agent_id, "role": ag.role,
+                "reason": reason, "t": time.monotonic()})
+            return new
 
     def _maybe_pbt(self, agent_id: str, new_key: ModelKey):
         """If this agent's Elo trails the best learning agent by >100, copy
@@ -118,16 +210,24 @@ class LeagueMgr:
         best = max(elos, key=elos.get)
         if best != agent_id and elos[best] - elos[agent_id] > 100.0:
             leader = self.agents[best]
-            self.model_pool.push(new_key, self.model_pool.pull(leader.current))
+            # deep-copy the leader's pytree: the pulled object is (or will
+            # be adopted as) live learner state, and sharing it between two
+            # lineages lets one donating train step delete the other's
+            # buffers (the PR 1 aliasing-bug class)
+            self.model_pool.push(new_key,
+                                 self.model_pool.pull(leader.current, copy=True))
             self.hyper_mgr.exploit_explore(new_key, leader.current)
         else:
             self.hyper_mgr.explore(new_key)
 
     # -- introspection ---------------------------------------------------------
     def league_state(self) -> dict:
-        return {
-            "frozen_pool": [str(k) for k in self.frozen_pool],
-            "agents": {aid: str(a.current) for aid, a in self.agents.items()},
-            "elo": {str(k): v for k, v in self.payoff.elo.items()},
-            "num_results": len(self._results),
-        }
+        with self._lock:
+            return {
+                "frozen_pool": [str(k) for k in self.frozen_pool],
+                "agents": {aid: str(a.current) for aid, a in self.agents.items()},
+                "roles": {aid: a.role for aid, a in self.agents.items()},
+                "elo": {str(k): v for k, v in self.payoff.elo.items()},
+                "num_results": len(self._results),
+                "num_freezes": len(self.freeze_events),
+            }

@@ -6,6 +6,19 @@ dict, but the API is the paper's: `pull`/`push` for the current learning
 params (Actors pull theta and phi periodically; the Learner pushes theta),
 `freeze` at learning-period end (theta joins the opponent pool M), and a
 replica-pick hook preserved so the microservice semantics stay visible.
+
+Concurrency contract (the async league runtime hits this from every
+worker thread):
+
+* every operation is serialized under one lock — push/pull/freeze are
+  linearizable;
+* `snapshot_on_pull=True` makes `pull` return a deep copy of the stored
+  pytree, so no caller can ever alias a buffer that another thread later
+  hands to a donating train step (the PR 1 aliasing-bug class). Callers
+  can override per call with `pull(key, copy=...)`.
+* `membership_version` bumps whenever the key set changes — cheap
+  signatures for callers (LeagueMgr's opponent cache) that want to
+  revalidate membership incrementally instead of rescanning per task.
 """
 from __future__ import annotations
 
@@ -14,16 +27,20 @@ import threading
 from typing import Any, Dict, Optional
 
 from repro.core.types import ModelKey
+from repro.utils.pytree import tree_copy
 
 
 class ModelPool:
-    def __init__(self, num_replicas: int = 1, seed: int = 0):
+    def __init__(self, num_replicas: int = 1, seed: int = 0,
+                 snapshot_on_pull: bool = False):
         self.num_replicas = max(1, num_replicas)
+        self.snapshot_on_pull = snapshot_on_pull
         self._rng = random.Random(seed)
         self._lock = threading.Lock()
         self._params: Dict[ModelKey, Any] = {}
         self._frozen: Dict[ModelKey, bool] = {}
         self._step: Dict[ModelKey, int] = {}
+        self.membership_version = 0          # bumps when the key set changes
         self.read_counts = [0] * self.num_replicas  # replica load-balance bookkeeping
 
     def _pick_replica(self) -> int:
@@ -36,13 +53,19 @@ class ModelPool:
         with self._lock:
             if self._frozen.get(key):
                 raise ValueError(f"model {key} is frozen; push refused")
+            if key not in self._params:
+                self.membership_version += 1
             self._params[key] = params
             self._step[key] = step
 
-    def pull(self, key: ModelKey) -> Any:
-        self._pick_replica()
+    def pull(self, key: ModelKey, copy: Optional[bool] = None) -> Any:
+        """`copy=None` follows the pool-wide `snapshot_on_pull` policy."""
         with self._lock:
-            return self._params[key]
+            self._pick_replica()
+            params = self._params[key]
+            if self.snapshot_on_pull if copy is None else copy:
+                params = tree_copy(params)
+            return params
 
     def pull_attr(self, key: ModelKey) -> dict:
         with self._lock:

@@ -183,6 +183,22 @@ class PayoffMatrix:
         g = self._wins[i, js] + self._ties[i, js] + self._losses[i, js]
         return w / (g + prior_games)
 
+    def aggregate_vs(self, a: ModelKey,
+                     opponents: Sequence[ModelKey]) -> Tuple[float, float]:
+        """(winrate, games) of `a` aggregated over all games against
+        `opponents` — the freeze-gate signal (ties half-counted; 0.5 with
+        zero evidence). Unknown keys contribute nothing."""
+        i = self._index.get(a)
+        js = [self._index[o] for o in opponents
+              if o in self._index and o != a]
+        if i is None or not js:
+            return 0.5, 0.0
+        js = np.asarray(js, np.intp)
+        w = float(self._wins[i, js].sum())
+        t = float(self._ties[i, js].sum())
+        g = w + t + float(self._losses[i, js].sum())
+        return ((w + 0.5 * t) / g if g > 0 else 0.5), g
+
     def matrix(self, prior: float = 0.5, prior_games: float = 2.0) -> np.ndarray:
         """Full win-rate matrix (rows beat cols), one array expression:
         played off-diagonal pairs get the prior-smoothed rate, everything

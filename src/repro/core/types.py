@@ -39,6 +39,44 @@ class Hyperparam:
 
 
 @dataclass(frozen=True)
+class FreezeGate:
+    """When a learning model theta freezes into the opponent pool M.
+
+    AlphaStar-style strength gating instead of a fixed period count: freeze
+    once theta's aggregate winrate against the frozen pool reaches `winrate`
+    (tau) with at least `min_games` of evidence, or after `timeout_steps`
+    learner steps regardless. `step_gate`, when set, overrides everything
+    with a pure step-count gate — the deterministic mode the sync/async
+    equivalence tests rely on.
+    """
+    winrate: float = 0.7           # tau: freeze when pool winrate >= tau
+    min_games: int = 16            # evidence needed before trusting winrate
+    min_steps: int = 8             # never freeze before this many steps
+    timeout_steps: int = 512       # freeze anyway after this many steps
+    step_gate: Optional[int] = None  # pure step-count gate (determinism)
+
+    def check(self, steps: int, pool_winrate: float,
+              pool_games: float) -> Optional[str]:
+        """Returns a freeze reason string, or None to keep training."""
+        if self.step_gate is not None:
+            return f"step_gate@{steps}" if steps >= self.step_gate else None
+        if steps < self.min_steps:
+            return None
+        if pool_games >= self.min_games and pool_winrate >= self.winrate:
+            return f"winrate@{pool_winrate:.3f}"
+        if steps >= self.timeout_steps:
+            return f"timeout@{steps}"
+        return None
+
+    def to_dict(self) -> Dict:
+        return dict(self.__dict__)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FreezeGate":
+        return cls(**d)
+
+
+@dataclass(frozen=True)
 class Task:
     """What LeagueMgr hands to an Actor (and, consistently, to the Learner):
     who learns, against whom, with which hyperparameters."""

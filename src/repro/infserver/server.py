@@ -29,6 +29,7 @@ Also hosts the teacher-policy forward for KL penalties (paper §3.2).
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Dict, Hashable, List, Optional, Tuple
 
@@ -73,6 +74,11 @@ class InfServer:
         self.policy = make_obs_policy(cfg, num_actions)
         self.max_batch = max_batch
         self.rng = jax.random.PRNGKey(seed)
+        # one reentrant lock serializes registry mutation, queueing and
+        # flushing: the async league runtime has many Actor threads sharing
+        # one server while each role's Learner hot-swaps its theta route
+        # concurrently (`get` may re-enter `flush`, hence reentrant)
+        self._lock = threading.RLock()
         # model registry: key -> params, with a version counter so the
         # stacked-params cache knows when a hot-swap invalidated it
         self._models: Dict[Hashable, Any] = {}
@@ -107,52 +113,61 @@ class InfServer:
     def register_model(self, key: Hashable, params) -> None:
         """Host (or refresh) a model. The first registered model becomes the
         default route for `submit(obs)` without an explicit model."""
-        if self._default_key is None:
-            self._default_key = key
-        self._versions[key] = self._versions.get(key, -1) + 1
-        self._models[key] = params
-        # entries containing this key can never match again (version bumped)
-        # — drop them now so stale stacked copies don't pin device memory;
-        # entries for other model sets stay warm
-        self._stack_cache = {ck: v for ck, v in self._stack_cache.items()
-                             if all(k != key for k, _ in ck)}
+        with self._lock:
+            if self._default_key is None:
+                self._default_key = key
+            self._versions[key] = self._versions.get(key, -1) + 1
+            self._models[key] = params
+            # entries containing this key can never match again (version
+            # bumped) — drop them now so stale stacked copies don't pin
+            # device memory; entries for other model sets stay warm
+            self._stack_cache = {ck: v for ck, v in self._stack_cache.items()
+                                 if all(k != key for k, _ in ck)}
 
     def ensure_model(self, key: Hashable, params) -> None:
         """Register if absent — the Actor-facing idempotent route setup."""
-        if key not in self._models:
-            self.register_model(key, params)
+        with self._lock:
+            if key not in self._models:
+                self.register_model(key, params)
 
     def update_params(self, params, key: Hashable = None) -> None:
         """Learner pushed new theta to the ModelPool -> hot-swap. Params are
         traced jit arguments, so no recompilation happens."""
-        if key is None:
-            # a paramless server gets a real default route, not key None
-            key = self._default_key if self._default_key is not None else _DEFAULT
-        self.register_model(key, params)
+        with self._lock:
+            if key is None:
+                # a paramless server gets a real default route, not key None
+                key = self._default_key if self._default_key is not None else _DEFAULT
+            self.register_model(key, params)
 
-    def evict_model(self, key: Hashable) -> None:
-        assert not any(k == key for _, k, _ in self._pending), \
-            f"evicting {key!r} with pending requests"
-        self._models.pop(key, None)
-        self._versions.pop(key, None)
-        self._stack_cache.clear()
-        if key == self._default_key:
-            self._default_key = next(iter(self._models), None)
+    def evict_model(self, key: Hashable) -> bool:
+        """Drop a route. Returns False (and keeps the route) when requests
+        for it are still queued — under concurrent publishers the caller
+        retries after the next flush instead of racing the queue."""
+        with self._lock:
+            if any(k == key for _, k, _ in self._pending):
+                return False
+            self._models.pop(key, None)
+            self._versions.pop(key, None)
+            self._stack_cache.clear()
+            if key == self._default_key:
+                self._default_key = next(iter(self._models), None)
+            return True
 
     # -- client protocol -----------------------------------------------------
     def submit(self, obs: np.ndarray, model: Hashable = None) -> Ticket:
         """Queue a (k, L) observation batch for `model` (default: θ); returns
         a ticket future. A full queue (>= max_batch rows) flushes."""
-        key = self._default_key if model is None else model
-        assert key in self._models, f"unknown model route {key!r}"
         obs = np.asarray(obs)
-        ticket = Ticket(self._next_id, key, obs.shape[0], self)
-        self._next_id += 1
-        self._pending.append((ticket.tid, key, obs))
-        self._pending_rows += obs.shape[0]
-        if self._pending_rows >= self.max_batch:
-            self.flush()
-        return ticket
+        with self._lock:
+            key = self._default_key if model is None else model
+            assert key in self._models, f"unknown model route {key!r}"
+            ticket = Ticket(self._next_id, key, obs.shape[0], self)
+            self._next_id += 1
+            self._pending.append((ticket.tid, key, obs))
+            self._pending_rows += obs.shape[0]
+            if self._pending_rows >= self.max_batch:
+                self.flush()
+            return ticket
 
     @property
     def queue_depth(self) -> int:
@@ -161,26 +176,27 @@ class InfServer:
     def flush(self) -> None:
         """Run the grouped forward over everything pending and resolve
         tickets. One XLA dispatch regardless of how many models are routed."""
-        if not self._pending:
-            return
-        t0 = time.perf_counter()
-        pending, self._pending, self._pending_rows = self._pending, [], 0
+        with self._lock:
+            if not self._pending:
+                return
+            t0 = time.perf_counter()
+            pending, self._pending, self._pending_rows = self._pending, [], 0
 
-        groups: Dict[Hashable, List[Tuple[int, np.ndarray]]] = {}
-        for tid, key, obs in pending:
-            groups.setdefault(key, []).append((tid, obs))
+            groups: Dict[Hashable, List[Tuple[int, np.ndarray]]] = {}
+            for tid, key, obs in pending:
+                groups.setdefault(key, []).append((tid, obs))
 
-        if len(groups) == 1:
-            (key, items), = groups.items()
-            self._flush_single(key, items)
-        else:
-            self._flush_grouped(groups)
+            if len(groups) == 1:
+                (key, items), = groups.items()
+                self._flush_single(key, items)
+            else:
+                self._flush_grouped(groups)
 
-        self.requests_served += len(pending)
-        self.batches_run += 1
-        self.last_batch_models = len(groups)
-        self.last_batch_latency_s = time.perf_counter() - t0
-        self._latency_sum += self.last_batch_latency_s
+            self.requests_served += len(pending)
+            self.batches_run += 1
+            self.last_batch_models = len(groups)
+            self.last_batch_latency_s = time.perf_counter() - t0
+            self._latency_sum += self.last_batch_latency_s
 
     def _next_rng(self, n: int = 1):
         self.rng, *ks = jax.random.split(self.rng, n + 1)
@@ -244,9 +260,10 @@ class InfServer:
 
     def get(self, ticket) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         tid = ticket.tid if isinstance(ticket, Ticket) else int(ticket)
-        if tid not in self._results:
-            self.flush()
-        return self._results.pop(tid)
+        with self._lock:
+            if tid not in self._results:
+                self.flush()
+            return self._results.pop(tid)
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:

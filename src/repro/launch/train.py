@@ -4,9 +4,20 @@ Wires LeagueMgr + ModelPool + HyperMgr + GameMgr + Actors + Learner and runs
 learning periods with freezes — the same modules the k8s deployment would
 run as services (launch/k8s.py renders that spec).
 
+Two execution modes:
+
+  * **async (default with `--league-spec`)** — the event-driven
+    `repro.league.runtime`: every Actor and Learner on its own thread, a
+    coordinator thread applying the spec's winrate-gated freeze decisions.
+  * **sync (`--sync`, or no spec)** — the legacy lockstep nested loop with
+    fixed `--periods x --steps` freezes; bit-deterministic under a fixed
+    seed, kept as the determinism oracle for the async runtime.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --env pommerman_lite \
       --arch tleague-policy-s --game-mgr sp_pfsp --periods 3 --steps 20
+  PYTHONPATH=src python -m repro.launch.train --env rps \
+      --league-spec examples/league_specs/main_minimax.json --max-seconds 10
 """
 from __future__ import annotations
 
@@ -22,6 +33,7 @@ from repro.core import GAME_MGRS, Hyperparam, LeagueMgr
 from repro.core.game_mgr import GameMgr
 from repro.envs import make_env
 from repro.infserver import InfServer
+from repro.league import LeagueSpec, build_runtime, make_game_mgr
 from repro.learners import DataServer, Learner, build_env_train_step
 from repro.models import init_params
 from repro.optim import adamw
@@ -34,35 +46,58 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
                         unroll_len=16, periods=2, steps_per_period=16,
                         num_actors=1, num_exploiters=0, pbt=False,
                         lr=3e-4, seed=0, log_every=8, checkpoint_dir=None,
-                        served=False, verbose=True):
+                        served=False, verbose=True, league_spec=None):
     """`served=True` runs the SEED-style actor mode (ROADMAP next step):
     every Actor routes its policy forwards through ONE shared
     continuous-batching InfServer instead of per-actor jitted forwards —
-    θ and each lineage's φ ride the same grouped batch as server routes."""
+    θ and each lineage's φ ride the same grouped batch as server routes.
+
+    `league_spec` (a LeagueSpec) builds the population from role specs —
+    role matchmaking and reset-on-freeze policies apply, while freezing
+    stays on the fixed `periods x steps_per_period` schedule (the `--sync`
+    determinism path). Without a spec, the legacy main+N-exploiters layout
+    is used."""
     env = make_env(env_name)
     cfg = get_arch(arch)
     rng = jax.random.PRNGKey(seed)
     league = LeagueMgr(pbt=pbt, seed=seed)
     opt = adamw(lr, clip_norm=1.0)
+    if league_spec is not None:
+        total_actors = league_spec.num_actors_total
+    else:
+        total_actors = num_actors * (1 + num_exploiters)
     inf_server = None
     if served:
         # each rollout step submits one row per env-slot per actor; cap the
         # queue so a full actor sweep rides one grouped flush
         inf_server = InfServer(
             cfg, env.spec.num_actions, seed=seed + 7919,
-            max_batch=max(64, num_envs * env.spec.num_agents * num_actors))
+            max_batch=max(64, num_envs * env.spec.num_agents * total_actors))
+
+    if league_spec is not None:
+        role_rows = [(r.name, r.num_actors,
+                      lambda payoff, s, r=r: make_game_mgr(r, payoff=payoff, seed=s),
+                      dict(role=r.role, gate=None,           # fixed-period driver
+                           reset_on_freeze=r.reset_policy))
+                     for r in league_spec]
+    else:
+        ids = ["main"] + [f"exploiter:{i}" for i in range(num_exploiters)]
+        role_rows = [(aid, num_actors,
+                      lambda payoff, s, aid=aid: GAME_MGRS[
+                          game_mgr if aid == "main" else "exploiter"](
+                              payoff=payoff, seed=s),
+                      {})
+                     for aid in ids]
 
     agents = {}
-    ids = ["main"] + [f"exploiter:{i}" for i in range(num_exploiters)]
-    for i, aid in enumerate(ids):
+    for i, (aid, n_act, gm_fn, extra) in enumerate(role_rows):
         params = init_params(jax.random.fold_in(rng, i), cfg)
-        gm_name = game_mgr if aid == "main" else "exploiter"
-        gm = GAME_MGRS[gm_name](payoff=league.payoff, seed=seed + i)
-        league.add_learning_agent(aid, params, game_mgr=gm)
+        gm = gm_fn(league.payoff, seed + i)
+        league.add_learning_agent(aid, params, game_mgr=gm, **extra)
         actors = [Actor(env, cfg, league, agent_id=aid, num_envs=num_envs,
                         unroll_len=unroll_len, seed=seed * 1000 + i * 100 + a,
                         inf_server=inf_server)
-                  for a in range(num_actors)]
+                  for a in range(n_act)]
         step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
         learner = Learner(league, step, opt, params, agent_id=aid,
                           data_server=DataServer())
@@ -106,6 +141,30 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
     return league, agents, history
 
 
+def run_league_training_async(spec, *, env_name="pommerman_lite",
+                              arch="tleague-policy-s", loss="ppo",
+                              num_envs=16, unroll_len=16, lr=3e-4, seed=0,
+                              served=False, pbt=False, max_seconds=None,
+                              max_freezes_per_role=None,
+                              max_steps_per_role=None, verbose=True):
+    """The event-driven league runtime: one thread per Actor and per
+    Learner, a coordinator applying the spec's freeze gates. Returns
+    (league, runtime, report); raises if any worker failed, so a normal
+    return IS the clean-shutdown certificate."""
+    runtime = build_runtime(spec, env_name=env_name, arch=arch, loss=loss,
+                            num_envs=num_envs, unroll_len=unroll_len, lr=lr,
+                            seed=seed, served=served, pbt=pbt)
+    report = runtime.run(max_seconds=max_seconds,
+                         max_freezes_per_role=max_freezes_per_role,
+                         max_steps_per_role=max_steps_per_role)
+    if verbose:
+        print(f"[train:async] {report['frames_total']} frames in "
+              f"{report['wall_s']:.1f}s ({report['frames_per_s']:.0f} fps), "
+              f"{report['league']['num_freezes']} freezes "
+              f"(mean latency {report['freeze_latency_s_mean']}s)")
+    return runtime.league, runtime, report
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--env", default="pommerman_lite")
@@ -125,14 +184,35 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--league-spec", default=None,
+                    help="LeagueSpec JSON (roles + gates); runs the async "
+                         "event-driven runtime unless --sync is given")
+    ap.add_argument("--sync", action="store_true",
+                    help="force the legacy lockstep loop (fixed-period "
+                         "freezes; bit-deterministic under --seed)")
+    ap.add_argument("--max-seconds", type=float, default=None,
+                    help="async runtime: wall-clock stop condition")
+    ap.add_argument("--max-freezes", type=int, default=None,
+                    help="async runtime: stop once every role froze this "
+                         "many times")
     args = ap.parse_args()
+
+    spec = LeagueSpec.from_json(args.league_spec) if args.league_spec else None
+    if spec is not None and not args.sync:
+        league, _, report = run_league_training_async(
+            spec, env_name=args.env, arch=args.arch, loss=args.loss,
+            num_envs=args.num_envs, unroll_len=args.unroll_len, lr=args.lr,
+            seed=args.seed, served=args.served, pbt=args.pbt,
+            max_seconds=args.max_seconds, max_freezes_per_role=args.max_freezes)
+        print(json.dumps(report, indent=1))
+        return
     league, _, _ = run_league_training(
         env_name=args.env, arch=args.arch, game_mgr=args.game_mgr,
         loss=args.loss, num_envs=args.num_envs, unroll_len=args.unroll_len,
         periods=args.periods, steps_per_period=args.steps,
         num_actors=args.actors, num_exploiters=args.exploiters, pbt=args.pbt,
         lr=args.lr, seed=args.seed, checkpoint_dir=args.checkpoint_dir,
-        served=args.served)
+        served=args.served, league_spec=spec)
     print(json.dumps(league.league_state(), indent=1))
 
 

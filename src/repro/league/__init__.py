@@ -1,0 +1,7 @@
+"""Role-based asynchronous league runtime (§3.2, Fig. 2): LeagueSpec roles
+over an event-driven Actor/Learner/coordinator control plane."""
+from repro.core.types import FreezeGate
+from repro.league.spec import LeagueSpec, RoleSpec, ROLE_DEFAULTS
+from repro.league.roles import install_roles, make_game_mgr
+from repro.league.runtime import (ActorWorker, Coordinator, LearnerWorker,
+                                  LeagueRuntime, RoleRuntime, build_runtime)

@@ -70,10 +70,19 @@ class Learner:
                                             step=self.step_count)
         return last_metrics
 
-    def end_learning_period(self):
-        """Freeze theta into M, warm-start theta_{v+1} (paper lifecycle)."""
-        new_key = self.league.end_learning_period(self.agent_id,
-                                                  _snapshot(self.params))
+    def end_learning_period(self, reason: str = "period"):
+        """Freeze theta into M, adopt theta_{v+1} (paper lifecycle).
+
+        theta_{v+1} is re-pulled from the ModelPool rather than assumed to
+        equal our live params: the LeagueMgr may have reset it to the seed
+        (exploiter reset-on-freeze) or PBT-exploited the leader's weights —
+        either way the pool entry is authoritative. The pull is snapshotted
+        so our (donating) train step never shares buffers with the pool."""
+        new_key = self.league.end_learning_period(
+            self.agent_id, _snapshot(self.params), reason=reason)
+        # copy=True makes the pull itself the snapshot — exactly one deep
+        # copy whether or not the pool is snapshot_on_pull
+        self.params = self.league.model_pool.pull(new_key, copy=True)
         self.opt_state = self.optimizer.init(self.params)   # fresh moments
         self.task = self.league.request_learner_task(self.agent_id)
         return new_key

@@ -28,6 +28,7 @@ aliases the next staged transfer.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import List, Optional
 
@@ -52,6 +53,12 @@ class DataServer:
         self.capacity_frames = capacity_frames
         self.capacity_segments = capacity_segments
         self.rng = np.random.default_rng(seed)
+        # producer/consumer concurrency: every mutation runs under one
+        # reentrant lock; the condition signals both directions — `put`
+        # wakes learners blocked in `wait_ready`, consumption wakes actors
+        # blocked in `wait_for_room` (ring-full backpressure)
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
         self.blocking = blocking
         self.prefetch = prefetch
         self.device = device
@@ -101,8 +108,8 @@ class DataServer:
                          for s, leaf in zip(self._row_shapes, leaves)]
 
     # -- actor side --------------------------------------------------------------
-    def put(self, traj) -> None:
-        leaves = self._leaves(traj)
+    def _write_rows(self, leaves) -> None:
+        """Ring write + accounting + prefetch staging; caller holds the lock."""
         rows = leaves[0].shape[0]
         frames = rows * self._frames_per_row
         cap = self._row_slots
@@ -124,10 +131,53 @@ class DataServer:
             # on-policy: the next sample IS this segment — start its
             # host->device copy now so it overlaps the in-flight train step
             self._stage(self._last_rows, None)
+        self._cond.notify_all()
+
+    def put(self, traj) -> None:
+        with self._cond:
+            self._write_rows(self._leaves(traj))
+
+    def put_when_room(self, traj, timeout: Optional[float] = None) -> bool:
+        """`put` with TOCTOU-safe backpressure: the room predicate (the
+        segment fits without burying frames the learner has not consumed)
+        and the ring write happen under ONE lock hold, so concurrent
+        producers can never jointly overshoot capacity — a separate
+        check-then-put would re-release the lock between the two. Returns
+        False (nothing written) on timeout."""
+        with self._cond:
+            leaves = self._leaves(traj)
+            frames = leaves[0].shape[0] * self._frames_per_row
+
+            def room():
+                cap = self.ring_capacity_frames
+                return cap is None or self._unconsumed + frames <= cap
+            if not self._cond.wait_for(room, timeout=timeout):
+                return False
+            self._write_rows(leaves)
+            return True
+
+    def wait_for_room(self, frames: int, timeout: Optional[float] = None) -> bool:
+        """Advisory backpressure probe: block until a segment of `frames`
+        frames currently fits. Racy by construction under multiple
+        producers (the room can be gone by the time the caller puts) —
+        producers that need the guarantee use `put_when_room`."""
+        with self._cond:
+            def room():
+                cap = self.ring_capacity_frames
+                return cap is None or self._unconsumed + frames <= cap
+            return self._cond.wait_for(room, timeout=timeout)
 
     # -- learner side -----------------------------------------------------------
     def ready(self) -> bool:
-        return self._size > 0 and (not self.blocking or self._unconsumed > 0)
+        with self._lock:
+            return self._size > 0 and (not self.blocking or self._unconsumed > 0)
+
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        """Block until `ready()` (a fresh segment in blocking mode, any data
+        otherwise). True when ready, False on timeout — the learner worker's
+        continuous-drain wait."""
+        with self._cond:
+            return self._cond.wait_for(self.ready, timeout=timeout)
 
     def _sample_idx(self, batch_rows: Optional[int]) -> np.ndarray:
         if self.blocking and batch_rows is None:
@@ -141,15 +191,17 @@ class DataServer:
         frames = num_rows * self._frames_per_row
         self.frames_consumed += frames
         self._unconsumed = max(0, self._unconsumed - frames)
+        self._cond.notify_all()        # wake producers blocked on backpressure
 
     def sample(self, batch_rows: Optional[int] = None):
         """Most-recent segment when blocking (on-policy); a uniform
         vectorized row gather otherwise. Host (NumPy) arrays."""
-        assert self._size > 0, "DataServer empty"
-        idx = self._sample_idx(batch_rows)
-        out_leaves = [buf[idx] for buf in self._buffers]
-        self._consume(len(idx))
-        return jax.tree_util.tree_unflatten(self._treedef, out_leaves)
+        with self._cond:
+            assert self._size > 0, "DataServer empty"
+            idx = self._sample_idx(batch_rows)
+            out_leaves = [buf[idx] for buf in self._buffers]
+            self._consume(len(idx))
+            return jax.tree_util.tree_unflatten(self._treedef, out_leaves)
 
     # -- pipelined device feeding -------------------------------------------------
     def _state_token(self) -> tuple:
@@ -172,23 +224,24 @@ class DataServer:
         minibatch's transfer is prefetched (double-buffered: the batch being
         consumed and the one being staged are distinct freshly-allocated
         device buffers, so donating the consumed batch is safe)."""
-        assert self._size > 0, "DataServer empty"
-        staged, self._staged = self._staged, None
-        if (staged is not None and staged[0] == self._state_token()
-                and staged[1] == batch_rows):
-            idx, leaves = staged[2], staged[3]
-            self.prefetch_hits += 1
-        else:
-            idx = self._sample_idx(batch_rows)
-            leaves = [jax.device_put(buf[idx], self.device)
-                      for buf in self._buffers]
-            self.prefetch_misses += 1
-        self._consume(len(idx))
-        if self.prefetch and not self.blocking:
-            # off-policy: the next uniform gather is known now — stage it
-            # (blocking mode stages at `put`, when the next segment exists)
-            self._stage(self._sample_idx(batch_rows), batch_rows)
-        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+        with self._cond:
+            assert self._size > 0, "DataServer empty"
+            staged, self._staged = self._staged, None
+            if (staged is not None and staged[0] == self._state_token()
+                    and staged[1] == batch_rows):
+                idx, leaves = staged[2], staged[3]
+                self.prefetch_hits += 1
+            else:
+                idx = self._sample_idx(batch_rows)
+                leaves = [jax.device_put(buf[idx], self.device)
+                          for buf in self._buffers]
+                self.prefetch_misses += 1
+            self._consume(len(idx))
+            if self.prefetch and not self.blocking:
+                # off-policy: the next uniform gather is known now — stage it
+                # (blocking mode stages at `put`, when the next segment exists)
+                self._stage(self._sample_idx(batch_rows), batch_rows)
+            return jax.tree_util.tree_unflatten(self._treedef, leaves)
 
     # -- introspection ------------------------------------------------------------
     @property
@@ -198,6 +251,18 @@ class DataServer:
     @property
     def size_frames(self) -> int:
         return self._size * self._frames_per_row
+
+    @property
+    def ring_capacity_frames(self) -> Optional[int]:
+        """Total ring capacity in frames; None before the first `put`
+        allocates (capacity_frames unset) — no backpressure until known."""
+        if self._row_slots:
+            return self._row_slots * self._frames_per_row
+        return self.capacity_frames
+
+    @property
+    def unconsumed_frames(self) -> int:
+        return self._unconsumed
 
     # -- telemetry (paper Table 3) ----------------------------------------------
     def throughput(self) -> dict:

@@ -13,6 +13,14 @@ def tree_bytes(tree) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
 
 
+def tree_copy(tree):
+    """Deep-copy every array leaf (jax or numpy); immutable leaves pass
+    through. The defensive snapshot used wherever a pytree crosses an
+    ownership boundary (ModelPool pulls, PBT exploits, seed stashes) so a
+    later donating train step can never delete a shared buffer."""
+    return jax.tree.map(lambda x: x.copy() if hasattr(x, "copy") else x, tree)
+
+
 def tree_zeros_like(tree, dtype=None):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
 

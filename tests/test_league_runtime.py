@@ -1,0 +1,303 @@
+"""The asynchronous role-based league runtime (ISSUE 3): sync/async lineage
+equivalence under a step-count gate, winrate-gated freezing, exploiter
+reset-on-freeze, LeagueMgr report/PBT bugfixes, and producer/consumer/
+hot-swap concurrency on the data plane."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FreezeGate, LeagueMgr, MatchResult, ModelKey,
+                        ModelPool)
+from repro.league import LeagueSpec, RoleSpec, build_runtime
+from repro.learners import DataServer
+
+
+def mk(v, agent="main"):
+    return ModelKey(agent, v)
+
+
+def res(a, b, outcome):
+    return MatchResult(learner_key=a, opponent_keys=(b,), outcome=outcome)
+
+
+# ---------------------------------------------------------------------------
+# Freeze gating (LeagueMgr + FreezeGate semantics)
+# ---------------------------------------------------------------------------
+def test_winrate_gate_triggers_freeze():
+    lg = LeagueMgr()
+    gate = FreezeGate(winrate=0.6, min_games=4, min_steps=2, timeout_steps=99)
+    lg.add_learning_agent("a", {"w": 0}, gate=gate)
+    lg.add_learning_agent("b", {"w": 1}, gate=gate)
+    # not enough steps, no evidence: no freeze
+    assert lg.should_freeze("a", 1) is None
+    assert lg.should_freeze("a", 10) is None          # 0 pool games yet
+    for _ in range(6):
+        lg.report_result(res(mk(0, "a"), mk(0, "b"), +1))
+    wr, games = lg.pool_winrate("a")
+    assert games == 6 and wr == 1.0
+    assert lg.should_freeze("a", 1) is None           # min_steps still gates
+    reason = lg.should_freeze("a", 3)
+    assert reason is not None and reason.startswith("winrate@")
+    # the loser's winrate is 0: only the timeout can freeze it
+    assert lg.should_freeze("b", 50) is None
+    reason_b = lg.should_freeze("b", 99)
+    assert reason_b is not None and reason_b.startswith("timeout@")
+
+
+def test_step_gate_overrides_winrate():
+    lg = LeagueMgr()
+    lg.add_learning_agent("a", {"w": 0}, gate=FreezeGate(step_gate=5))
+    assert lg.should_freeze("a", 4) is None
+    assert lg.should_freeze("a", 5) == "step_gate@5"
+
+
+def test_agents_without_gate_never_self_trigger():
+    lg = LeagueMgr()
+    lg.add_learning_agent("a", {"w": 0})
+    assert lg.should_freeze("a", 10 ** 9) is None
+
+
+# ---------------------------------------------------------------------------
+# Exploiter reset-on-freeze (AlphaStar reset semantics)
+# ---------------------------------------------------------------------------
+def test_exploiter_reset_on_freeze_restores_seed_params():
+    lg = LeagueMgr()
+    seed_params = {"w": np.array([1.0, 2.0])}
+    lg.add_learning_agent("ex", seed_params, role="minimax_exploiter",
+                          reset_on_freeze="seed")
+    trained = {"w": np.array([9.0, 9.0])}
+    new = lg.end_learning_period("ex", trained)
+    # the frozen model keeps the trained weights...
+    np.testing.assert_array_equal(lg.model_pool.pull(mk(0, "ex"))["w"],
+                                  trained["w"])
+    # ...but theta_{v+1} restarts from the seed, not from theta
+    np.testing.assert_array_equal(lg.model_pool.pull(new)["w"],
+                                  seed_params["w"])
+    # and the stash survives the original being mutated after registration
+    seed_params["w"][:] = -1.0
+    new2 = lg.end_learning_period("ex", {"w": np.array([7.0, 7.0])})
+    np.testing.assert_array_equal(lg.model_pool.pull(new2)["w"],
+                                  np.array([1.0, 2.0]))
+
+
+def test_learner_adopts_pool_params_after_freeze():
+    """The Learner's live params must follow the pool's authoritative
+    theta_{v+1} (seed reset / PBT exploit), not silently keep training the
+    old weights."""
+    from repro.learners import Learner
+    from repro.optim import adamw
+
+    lg = LeagueMgr()
+    seed_params = {"w": jnp.asarray([1.0, 2.0])}
+    lg.add_learning_agent("ex", seed_params, role="main_exploiter",
+                          reset_on_freeze="seed")
+    opt = adamw(1e-3)
+    fake_step = lambda p, o, b: (p, o, {"loss": jnp.float32(0)})
+    learner = Learner(lg, fake_step, opt, seed_params, agent_id="ex",
+                      data_server=DataServer())
+    learner.params = {"w": jnp.asarray([5.0, 5.0])}    # pretend training moved
+    learner.end_learning_period()
+    np.testing.assert_array_equal(np.asarray(learner.params["w"]),
+                                  [1.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# LeagueMgr bugfixes (satellites)
+# ---------------------------------------------------------------------------
+def test_report_result_unknown_lineage_records_on_shared_payoff():
+    lg = LeagueMgr()
+    lg.add_learning_agent("main", {"w": 0})
+    ghost, seed = mk(7, "ghost"), mk(0, "main")
+    lg.report_result(res(ghost, seed, +1))
+    assert "ghost" not in lg.agents
+    assert lg.payoff.games(ghost, seed) == 1
+    assert lg.payoff.elo[ghost] > 1200.0 > lg.payoff.elo[seed]
+
+
+def test_pbt_exploit_deep_copies_leader_params():
+    lg = LeagueMgr(pbt=True)
+    leader_params = {"w": np.array([3.0, 4.0])}
+    lg.add_learning_agent("a", leader_params)
+    lg.add_learning_agent("b", {"w": np.array([0.0, 0.0])})
+    lg.payoff.elo[mk(0, "a")] = 1500.0                 # a leads by >100
+    new = lg.end_learning_period("b", {"w": np.array([0.5, 0.5])})
+    got = lg.model_pool.pull(new)
+    np.testing.assert_array_equal(got["w"], leader_params["w"])
+    # exploit must copy, not alias: a donating train step on one lineage
+    # must never be able to delete the other's buffers
+    assert not np.shares_memory(got["w"],
+                                lg.model_pool.pull(mk(0, "a"))["w"])
+
+
+def test_request_task_opponent_cache_tracks_pool_changes():
+    lg = LeagueMgr()
+    lg.add_learning_agent("main", {"w": 0})
+    assert lg.request_task("main").opponent_keys[0] == mk(0)
+    lg.end_learning_period("main", {"w": 1})
+    # the cached opponent list must pick up the newly frozen model
+    opps = {lg.request_task("main").opponent_keys[0] for _ in range(64)}
+    assert mk(0) in opps
+
+
+def test_model_pool_snapshot_on_pull():
+    pool = ModelPool(snapshot_on_pull=True)
+    k = mk(0)
+    stored = {"w": np.array([1.0, 2.0])}
+    pool.push(k, stored)
+    pulled = pool.pull(k)
+    np.testing.assert_array_equal(pulled["w"], stored["w"])
+    assert not np.shares_memory(pulled["w"], stored["w"])
+    # per-call override still hands out the raw reference
+    assert np.shares_memory(pool.pull(k, copy=False)["w"], stored["w"])
+
+
+# ---------------------------------------------------------------------------
+# Concurrency stress: put/learn/hot-swap never drop or double-count frames
+# ---------------------------------------------------------------------------
+def _seg(marker, rows=4, t=8, obs_len=3):
+    """Segment whose every leaf is a constant `marker` — a torn (mixed-put)
+    read is detectable as mixed values inside one sampled minibatch."""
+    return {
+        "obs": np.full((rows, t, obs_len), marker, np.int32),
+        "actions": np.full((rows, t), marker, np.int32),
+        "rewards": np.full((rows, t), float(marker), np.float32),
+    }
+
+
+@pytest.mark.timeout(120)
+def test_concurrent_put_learn_hotswap_ring_accounting():
+    n_producers, puts_each, rows, t = 3, 40, 4, 8
+    seg_frames = rows * t
+    ds = DataServer(capacity_frames=8 * seg_frames, blocking=True,
+                    prefetch=True)
+    total_frames = n_producers * puts_each * seg_frames
+    errors = []
+
+    def producer(pid):
+        try:
+            for j in range(puts_each):
+                # room-check + write are atomic: concurrent producers can
+                # never jointly bury unconsumed frames
+                assert ds.put_when_room(_seg(pid * 1000 + j),
+                                        timeout=30.0), "no room"
+        except BaseException as e:          # noqa: BLE001
+            errors.append(e)
+
+    stop = threading.Event()
+
+    def hot_swap():
+        # concurrent publisher on the shared pool while the ring churns
+        pool = ModelPool(snapshot_on_pull=True)
+        pool.push(mk(0), {"w": np.zeros(4)})
+        i = 0
+        while not stop.is_set():
+            pool.push(mk(0), {"w": np.full(4, float(i))}, step=i)
+            got = pool.pull(mk(0))["w"]
+            assert (got == got[0]).all()    # never a torn pytree
+            i += 1
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(n_producers)]
+    swapper = threading.Thread(target=hot_swap)
+    for th in threads:
+        th.start()
+    swapper.start()
+
+    consumed_markers = []
+    while ds.frames_consumed < total_frames:
+        assert ds.wait_ready(timeout=30.0), (
+            f"starved at {ds.frames_consumed}/{total_frames}")
+        assert ds.unconsumed_frames <= ds.ring_capacity_frames
+        mb = ds.sample_to_device()
+        acts = np.asarray(mb["actions"])
+        # one sample = one whole segment from one put — never torn
+        assert (acts == acts.flat[0]).all()
+        assert np.asarray(mb["obs"]).flat[0] == acts.flat[0]
+        consumed_markers.append(int(acts.flat[0]))
+    stop.set()
+    for th in threads:
+        th.join(timeout=30.0)
+    swapper.join(timeout=30.0)
+    assert not errors, errors
+    # exact accounting: every produced frame consumed once, none dropped,
+    # none double-counted
+    assert ds.frames_received == total_frames
+    assert ds.frames_consumed == total_frames
+    assert ds.unconsumed_frames == 0
+    assert len(consumed_markers) == n_producers * puts_each
+
+
+@pytest.mark.timeout(180)
+def test_infserver_hotswap_under_concurrent_clients():
+    from repro.configs import get_arch
+    from repro.infserver import InfServer
+    from repro.models import init_params
+    import jax
+
+    cfg = get_arch("tleague-policy-s")
+    theta = init_params(jax.random.PRNGKey(0), cfg)
+    phi = init_params(jax.random.PRNGKey(1), cfg)
+    server = InfServer(cfg, 6, theta, max_batch=8)
+    obs = np.zeros((2, 26), np.int32)
+    server.get(server.submit(obs))          # compile before threading
+    errors = []
+
+    def client():
+        try:
+            for _ in range(40):
+                a, logp, v = server.get(server.submit(obs))
+                assert np.isfinite(v).all()
+        except BaseException as e:          # noqa: BLE001
+            errors.append(e)
+
+    def swapper():
+        try:
+            for i in range(80):
+                server.update_params(theta if i % 2 else phi)
+        except BaseException as e:          # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client) for _ in range(2)]
+    threads.append(threading.Thread(target=swapper))
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=120.0)
+    assert not any(th.is_alive() for th in threads)
+    assert not errors, errors
+
+
+# ---------------------------------------------------------------------------
+# Sync vs async: same frozen-pool lineage structure under a step-count gate
+# ---------------------------------------------------------------------------
+@pytest.mark.timeout(600)
+def test_sync_and_async_reach_same_lineage_structure():
+    from repro.launch.train import (run_league_training,
+                                    run_league_training_async)
+
+    periods, steps = 2, 3
+    spec = LeagueSpec(roles=(
+        RoleSpec(name="main", role="main",
+                 gate=FreezeGate(step_gate=steps)),
+        RoleSpec(name="exploiter:0", role="minimax_exploiter", target="main",
+                 gate=FreezeGate(step_gate=steps)),
+    ))
+    sync_league, _, _ = run_league_training(
+        env_name="rps", num_envs=4, unroll_len=8, periods=periods,
+        steps_per_period=steps, league_spec=spec, seed=3, verbose=False)
+    async_league, _, report = run_league_training_async(
+        spec, env_name="rps", num_envs=4, unroll_len=8, seed=3,
+        max_freezes_per_role=periods, max_seconds=240, verbose=False)
+
+    s_state, a_state = sync_league.league_state(), async_league.league_state()
+    assert sorted(s_state["frozen_pool"]) == sorted(a_state["frozen_pool"])
+    assert s_state["agents"] == a_state["agents"]
+    assert report["clean_shutdown"]
+    # every freeze the async coordinator applied came from the step gate
+    for role in report["roles"].values():
+        assert len(role["freezes"]) == periods
+        for f in role["freezes"]:
+            assert f["reason"].startswith("step_gate@")
+            assert f["latency_s"] >= 0.0
