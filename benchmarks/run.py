@@ -17,6 +17,10 @@ Prints ``name,us_per_call,derived`` CSV.
                         host vs pipelined device feeding; asserts
                         kernel<->reference parity and writes
                         BENCH_learner.json
+  sharded_serving     — 1-device vs mesh-sharded InfServer forward
+                        latency/throughput (parity asserted <=1e-4) and
+                        in-process vs RPC seam overhead for the league
+                        transport; writes BENCH_sharded.json
 
 BENCH_*.json records are stamped with the git sha + UTC timestamp and
 written atomically (tmp file + rename), so the bench trajectory files stay
@@ -505,6 +509,106 @@ def league_throughput(out_path: str | None = None, seconds: float = 10.0):
     return record
 
 
+def sharded_serving(out_path: str | None = None, num_actors: int = 32):
+    """ISSUE 4 acceptance: (a) the InfServer's grouped forward on one
+    device vs mesh-sharded over the local ('data','model') mesh — same
+    seed, parity asserted <=1e-4 — and (b) the cost of making the league
+    seams process boundaries: in-process calls vs msgpack-RPC over
+    loopback for ModelPool.pull, LeagueMgr.request_task and the InfServer
+    submit/flush/get round trip. Writes BENCH_sharded.json.
+
+    On a 1-device host `make_local_mesh` collapses to (1, 1) and the
+    sharded numbers measure pure mesh-placement overhead; on a real pod
+    the same harness times the TP+DP layout (`make_production_mesh`)."""
+    from repro.configs import get_arch
+    from repro.core import LeagueMgr, ModelKey
+    from repro.distributed import transport as tp
+    from repro.infserver import InfServer
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import init_params
+
+    cfg = get_arch("tleague-policy-s")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    num_actions, obs_len = 6, 26
+    obs1 = np.zeros((1, obs_len), np.int32)
+    mesh = make_local_mesh()
+
+    # -- (a) single-device vs mesh-sharded grouped forward -------------------
+    def serve_round(server):
+        tickets = [server.submit(obs1, model=("theta" if i % 2 == 0 else "phi"))
+                   for i in range(num_actors)]
+        server.flush()
+        return [server.get(t) for t in tickets]
+
+    outs, us = {}, {}
+    for name, m in (("single", None), ("sharded", mesh)):
+        server = InfServer(cfg, num_actions, seed=11, max_batch=2 * num_actors,
+                           mesh=m)
+        server.register_model("theta", params)
+        server.register_model("phi", params)
+        outs[name] = serve_round(server)       # also compiles
+        us[name] = _time(lambda s=server: serve_round(s), iters=4) / num_actors
+    parity = max(float(np.max(np.abs(np.asarray(a, np.float64)
+                                     - np.asarray(b, np.float64))))
+                 for ra, rb in zip(outs["single"], outs["sharded"])
+                 for a, b in zip(ra, rb))
+    assert parity <= 1e-4, f"sharded/single forward parity {parity} > 1e-4"
+    _emit("sharded/forward_single", us["single"], "per_request")
+    _emit("sharded/forward_sharded", us["sharded"],
+          f"per_request;parity={parity:.2e};"
+          f"mesh={'x'.join(map(str, mesh.devices.shape))}")
+
+    # -- (b) in-process vs RPC seam overhead ---------------------------------
+    league = LeagueMgr()
+    league.add_learning_agent("main", params)
+    inf = InfServer(cfg, num_actions, params, max_batch=8)
+    inf.get(inf.submit(obs1))                   # compile off the clock
+    srv = tp.serve_league(league, inf)
+    lg = tp.LeagueMgrClient(srv.address)
+    ic = tp.InfServerClient(tp.RpcClient(srv.address))
+    key = ModelKey("main", 0)
+    try:
+        seams = {
+            "pool_pull": (lambda: league.model_pool.pull(key),
+                          lambda: lg.model_pool.pull(key)),
+            "request_task": (lambda: league.request_task("main"),
+                             lambda: lg.request_task("main")),
+            "inf_round": (lambda: inf.get(inf.submit(obs1)),
+                          lambda: ic.get(ic.submit(obs1))),
+        }
+        rpc_overhead = {}
+        for name, (local_fn, rpc_fn) in seams.items():
+            us_local = _time(local_fn, iters=16)
+            us_rpc = _time(rpc_fn, iters=16)
+            rpc_overhead[name] = {
+                "inproc_us": round(us_local, 2), "rpc_us": round(us_rpc, 2),
+                "overhead_x": round(us_rpc / max(us_local, 1e-9), 2),
+            }
+            _emit(f"sharded/rpc_{name}", us_rpc,
+                  f"inproc_us={us_local:.1f};"
+                  f"overhead_x={rpc_overhead[name]['overhead_x']}")
+    finally:
+        srv.close()
+
+    record = {
+        "backend": jax.default_backend(),
+        "num_devices": len(jax.devices()),
+        "mesh_shape": {k: int(v) for k, v in mesh.shape.items()},
+        "num_actors": num_actors,
+        "arch": "tleague-policy-s",
+        "codec": tp.CODEC,
+        "single_us_per_request": round(us["single"], 2),
+        "sharded_us_per_request": round(us["sharded"], 2),
+        "sharded_speedup_x": round(us["single"] / max(us["sharded"], 1e-9), 3),
+        "parity_max_abs_err": parity,
+        "rpc_seams": rpc_overhead,
+    }
+    path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_sharded.json"
+    _write_bench(path, record)
+    _emit("sharded/bench_written", 0.0, f"wrote={path.name}")
+    return record
+
+
 def kernels():
     from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
     k = jax.random.PRNGKey(0)
@@ -527,7 +631,7 @@ def kernels():
 
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "infserver_throughput", "learner_throughput", "league_throughput",
-           "kernels", "fig4_winrate", "table12_league_eval")
+           "sharded_serving", "kernels", "fig4_winrate", "table12_league_eval")
 
 
 def main() -> None:

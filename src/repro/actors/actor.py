@@ -78,9 +78,13 @@ class Actor:
             # same growth as the ModelPool itself); evict_model declines
             # (returns False) while requests are queued for the route, so
             # whatever remains is retried next segment
+            # frozen_pool is read ONCE per segment: against a remote
+            # LeagueMgrClient the attribute is a full RPC, so per-element
+            # evaluation inside the comprehension would multiply round trips
+            frozen = set(self.league.frozen_pool)
             self._evict_backlog = {
                 k for k in self._evict_backlog
-                if k not in self.league.frozen_pool
+                if k not in frozen
                 and not self.inf_server.evict_model(k)}
             self._served_theta_key = task.learner_key
             self.inf_server.update_params(theta, key=task.learner_key)

@@ -119,6 +119,11 @@ class LeagueMgr:
         return self._opp_cache
 
     def request_task(self, agent_id: str = "main") -> Task:
+        """Actor-facing: sample an opponent and return a fresh Task. Holds
+        the league lock only for the matchmaking draw — never blocks on
+        anything else. The returned Task is an immutable value object
+        (safe to ship across threads or the RPC transport); params are NOT
+        included — the Actor pulls them from the ModelPool by key."""
         with self._lock:
             ag = self.agents[agent_id]
             opp = ag.game_mgr.get_opponent(ag.current, self._opponents())
@@ -127,6 +132,11 @@ class LeagueMgr:
                         task_id=next(self._task_ids))
 
     def report_result(self, result: MatchResult):
+        """Actor-facing: record an episode outcome on the shared payoff
+        matrix (and the owning agent's matchmaker state). Non-blocking
+        (lock only); safe to call from any worker thread at any rate —
+        freeze gating reads the same payoff under the same lock, so a
+        result is visible to `should_freeze` as soon as this returns."""
         with self._lock:
             self._results.append(result)
             for key in (result.learner_key, *result.opponent_keys):
@@ -173,7 +183,14 @@ class LeagueMgr:
         reset-on-freeze policy is 'seed' (exploiter roles), in which case it
         restarts from the stashed seed params — the AlphaStar exploiter
         reset. Callers that hold live params (the Learner) must re-pull
-        theta_{v+1} from the ModelPool afterwards."""
+        theta_{v+1} from the ModelPool afterwards.
+
+        Contract: non-blocking (league lock only, briefly also the pool
+        lock via push/freeze). `params` is stored LIVE as the frozen final
+        weights AND (under 'continue') as theta_{v+1}'s warm start — hand
+        over a snapshot, never a buffer a donating step may delete. The
+        single-writer discipline (only the owning Learner thread calls
+        this for its agent) is by convention, not enforced."""
         with self._lock:
             ag = self.agents[agent_id]
             old = ag.current
@@ -221,6 +238,13 @@ class LeagueMgr:
             self.hyper_mgr.explore(new_key)
 
     # -- introspection ---------------------------------------------------------
+    def current_model_key(self, agent_id: str) -> ModelKey:
+        """The lineage's current learning key. Cheap by design (one small
+        value, lock only) — the RPC transport's per-step `current_key`
+        lookups land here instead of on the full `league_state` dump."""
+        with self._lock:
+            return self.agents[agent_id].current
+
     def league_state(self) -> dict:
         with self._lock:
             return {

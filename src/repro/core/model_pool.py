@@ -49,7 +49,16 @@ class ModelPool:
         return r
 
     # -- API (paper protocol) -------------------------------------------------
+    # Contract: every method here takes the pool lock and returns without
+    # waiting on anything else — no pool call ever blocks beyond lock
+    # contention (there is no capacity limit to wait on).
+
     def push(self, key: ModelKey, params: Any, step: int = 0) -> None:
+        """Store `params` under `key`. Never blocks (lock only). The stored
+        object is the caller's pytree, LIVE — the pool does not copy on
+        push, so callers must hand over a snapshot if they keep mutating
+        (the Learner's `_snapshot` does exactly that) and must never push
+        buffers a donating train step may later consume."""
         with self._lock:
             if self._frozen.get(key):
                 raise ValueError(f"model {key} is frozen; push refused")
@@ -59,7 +68,11 @@ class ModelPool:
             self._step[key] = step
 
     def pull(self, key: ModelKey, copy: Optional[bool] = None) -> Any:
-        """`copy=None` follows the pool-wide `snapshot_on_pull` policy."""
+        """Read `key`'s params. Never blocks (lock only). Snapshot vs live:
+        with `copy=True` (or `copy=None` under a `snapshot_on_pull` pool)
+        the caller gets a deep copy it can own outright; with `copy=False`
+        it gets the LIVE stored object — read-only, and never safe to feed
+        to a donating train step. Raises KeyError for unknown keys."""
         with self._lock:
             self._pick_replica()
             params = self._params[key]
@@ -68,16 +81,22 @@ class ModelPool:
             return params
 
     def pull_attr(self, key: ModelKey) -> dict:
+        """Metadata snapshot (step counter, frozen flag); non-blocking."""
         with self._lock:
             return {"step": self._step.get(key, 0), "frozen": self._frozen.get(key, False)}
 
     def freeze(self, key: ModelKey) -> None:
+        """Mark `key` immutable: later `push`es to it raise. Non-blocking;
+        the params themselves are not copied — freezing is a write-bar,
+        not a snapshot."""
         with self._lock:
             if key not in self._params:
                 raise KeyError(key)
             self._frozen[key] = True
 
     def keys(self):
+        """Snapshot list of hosted keys (stale the moment the lock drops —
+        use `membership_version` to detect changes cheaply)."""
         with self._lock:
             return list(self._params)
 

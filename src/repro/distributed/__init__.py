@@ -1,3 +1,5 @@
 from repro.distributed.sharding import (
     param_shardings, batch_shardings, state_shardings, data_axes,
+    serving_param_shardings, stacked_param_shardings, obs_batch_sharding,
+    grouped_obs_sharding,
 )

@@ -150,6 +150,44 @@ def batch_shardings(batch_shapes: Any, mesh: Mesh):
     return jax.tree.map(one, batch_shapes)
 
 
+def serving_param_shardings(param_shapes: Any, cfg, mesh: Mesh):
+    """Serving layout for the InfServer's hosted params: pure tensor
+    parallelism over 'model' (attention heads / FFN hidden / vocab split
+    exactly as `param_shardings`), but NO FSDP — a forward-only server
+    re-gathering ZeRO-3 shards on every request would trade its latency
+    for memory it doesn't need. Data axes carry the request batch instead
+    (`obs_batch_sharding`)."""
+    return param_shardings(param_shapes, cfg, mesh, fsdp=False)
+
+
+def stacked_param_shardings(shardings: Any, mesh: Mesh):
+    """Shardings for the grouped θ+φ forward's (M, ...) stacked pytree:
+    the model-group axis M stays unsharded (it is vmapped, and M is tiny —
+    the learner plus a few frozen opponents), every trailing dim keeps the
+    per-model serving spec."""
+    def one(ns: NamedSharding):
+        return NamedSharding(mesh, P(*((None,) + tuple(ns.spec))))
+    return jax.tree.map(one, shardings,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))
+
+
+def obs_batch_sharding(mesh: Mesh, rows: int) -> NamedSharding:
+    """Data-parallel layout for a (rows, L) observation batch: rows over
+    the ('pod','data') axes when they divide (the continuous batch is
+    padded to a power-of-two bucket, so any power-of-two data axis
+    divides), replicated otherwise."""
+    dp = data_axes(mesh)
+    return NamedSharding(mesh, _fit(mesh, (rows,), (dp,)))
+
+
+def grouped_obs_sharding(mesh: Mesh, rows: int) -> NamedSharding:
+    """Layout for the grouped (M, S, L) observation tensor: model-group
+    dim replicated (vmapped), the per-model batch S data-parallel."""
+    dp = data_axes(mesh)
+    spec = _fit(mesh, (1, rows), (None, dp))
+    return NamedSharding(mesh, spec)
+
+
 def state_shardings(state_shapes: Any, cfg, mesh: Mesh,
                     *, shard_cache_len: bool = False):
     """Decode-state shardings. KV caches are (R, B, W, KV, hd): batch over

@@ -1,0 +1,602 @@
+"""Process-boundary transport for the league seams (§3.3 / §3.4).
+
+The paper connects LeagueMgr, ModelPool, Learner, Actor and InfServer with
+ZeroMQ so each module can live in its own process on a hybrid cluster.
+This module is that transport layer for the PR 3 thread seams: a small
+length-prefixed **msgpack-over-TCP RPC** (msgpack when available — it is a
+dev extra — with a pickle fallback for bare installs; both are
+trusted-cluster protocols, not internet-facing ones) plus thin
+client/server wrappers that mirror the in-process seam APIs exactly:
+
+  * `ModelPoolClient`   — pull / push / pull_attr / freeze / keys
+  * `LeagueMgrClient`   — request_task / report_result / should_freeze /
+                          end_learning_period / pool_winrate / league_state
+  * `InfServerClient`   — submit / flush / get (ticket ids travel as ints)
+                          / update_params / ensure_model / evict_model
+  * `DataServerClient`  — put / put_when_room / wait_ready / throughput
+
+Because every pytree that crosses the wire is freshly deserialized in the
+receiving process, a remote `pull` is a snapshot *by construction* — the
+donating-train-step aliasing hazards the in-process seams guard against
+with `snapshot_on_pull` cannot exist across a process boundary.
+
+Wire format: 8-byte big-endian length, then one msgpack (or pickle)
+message. Requests are `{"m": "ns.method", "a": [...], "k": {...}}`;
+replies `{"ok": result}` or `{"err": message, "tb": traceback}` — a
+remote exception re-raises client-side as `RemoteError` with the server
+traceback attached, and a dead peer raises `TransportError` (the
+killed-server path the transport tests exercise).
+
+`serve_league` is the one-call server: it namespaces one LeagueMgr (and
+its ModelPool, and optionally an InfServer) behind a single `RpcServer`
+socket — the layout `launch/train.py --role coordinator` binds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+import threading
+import traceback
+from types import SimpleNamespace
+from typing import Any, Dict, Hashable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import (FreezeGate, Hyperparam, MatchResult, ModelKey,
+                              Task)
+
+try:
+    import msgpack
+    CODEC = "msgpack"
+except ImportError:                              # bare install: no dev extras
+    import pickle
+    CODEC = "pickle"
+
+
+class TransportError(ConnectionError):
+    """The peer is gone (refused, reset, or closed mid-message)."""
+
+
+class RemoteError(RuntimeError):
+    """The remote method raised; `.remote_tb` carries the server traceback."""
+
+    def __init__(self, message: str, remote_tb: str = ""):
+        super().__init__(message)
+        self.remote_tb = remote_tb
+
+
+# -- codec -------------------------------------------------------------------
+# msgpack handles scalars/strings/bytes/lists/dicts natively; everything the
+# league protocol adds rides extension dicts: ndarrays (dtype/shape/bytes),
+# tuples (strict_types makes them reach `default`, so round-trips preserve
+# tuple-ness — pytree treedefs survive), and the §3.3 message dataclasses.
+
+_DATACLASSES = {c.__name__: c for c in
+                (ModelKey, Hyperparam, FreezeGate, Task, MatchResult)}
+
+
+def _encode(o):
+    if isinstance(o, tuple):
+        return {"__t__": list(o)}
+    if isinstance(o, np.ndarray):
+        return {"__nd__": [o.dtype.str, list(o.shape),
+                           np.ascontiguousarray(o).tobytes()]}
+    if isinstance(o, np.generic):
+        return o.item()
+    if dataclasses.is_dataclass(o) and type(o).__name__ in _DATACLASSES:
+        return {"__dc__": type(o).__name__,
+                "f": {f.name: getattr(o, f.name)
+                      for f in dataclasses.fields(o)}}
+    if hasattr(o, "__array__"):                  # jax.Array and friends
+        return _encode(np.asarray(o))
+    raise TypeError(f"cannot serialize {type(o)!r} over the league transport")
+
+
+def _decode(d):
+    if "__t__" in d and len(d) == 1:
+        return tuple(d["__t__"])
+    if "__nd__" in d and len(d) == 1:
+        dt, shape, buf = d["__nd__"]
+        return np.frombuffer(buf, dtype=np.dtype(dt)).reshape(shape).copy()
+    if "__dc__" in d:
+        return _DATACLASSES[d["__dc__"]](**d["f"])
+    return d
+
+
+_CODEC_MSGPACK, _CODEC_PICKLE = 1, 2
+_CODEC_ID = _CODEC_MSGPACK if CODEC == "msgpack" else _CODEC_PICKLE
+
+
+def packb(obj) -> bytes:
+    if CODEC == "msgpack":
+        return msgpack.packb(obj, default=_encode, strict_types=True,
+                             use_bin_type=True)
+    return pickle.dumps(obj)
+
+
+def unpackb(buf: bytes, codec_id: Optional[int] = None):
+    """Decode with the codec the MESSAGE was packed with (every frame
+    carries a codec byte), defaulting to this process's codec. A
+    msgpack-encoded frame from a peer on a bare install (no msgpack) is a
+    clear error instead of a garbled pickle failure; pickle frames decode
+    anywhere (pickle is stdlib)."""
+    codec_id = _CODEC_ID if codec_id is None else codec_id
+    if codec_id == _CODEC_MSGPACK:
+        if CODEC != "msgpack":
+            raise TransportError(
+                "peer sent a msgpack frame but msgpack is not installed "
+                "here (pip install msgpack, or run all peers bare)")
+        return msgpack.unpackb(buf, object_hook=_decode, raw=False,
+                               strict_map_key=False)
+    if codec_id == _CODEC_PICKLE:
+        import pickle as _pickle
+        return _pickle.loads(buf)
+    raise TransportError(f"unknown wire codec id {codec_id}")
+
+
+# -- framing -----------------------------------------------------------------
+# 1-byte codec id + 8-byte big-endian length, then the payload. The codec
+# byte makes a mixed msgpack/pickle deployment either work (pickle frames
+# decode anywhere) or fail with a message that names the problem.
+def send_msg(sock: socket.socket, obj) -> None:
+    payload = packb(obj)
+    try:
+        sock.sendall(struct.pack(">BQ", _CODEC_ID, len(payload)) + payload)
+    except OSError as e:
+        raise TransportError(f"send failed: {e}") from e
+
+
+def recv_msg(sock: socket.socket):
+    header = _recv_exactly(sock, 9)
+    codec_id, n = struct.unpack(">BQ", header)
+    return unpackb(_recv_exactly(sock, n), codec_id)
+
+
+def _recv_exactly(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        try:
+            chunk = sock.recv(min(n, 1 << 20))
+        except OSError as e:
+            raise TransportError(f"recv failed: {e}") from e
+        if not chunk:
+            raise TransportError("peer closed the connection")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+def parse_addr(addr: str) -> Tuple[str, int]:
+    """'host:port' -> (host, port)."""
+    host, _, port = addr.rpartition(":")
+    return host or "127.0.0.1", int(port)
+
+
+# -- server ------------------------------------------------------------------
+class RpcServer:
+    """Serve the public surface of named objects over one TCP socket.
+
+    `objects` maps a namespace to a backend object; a request for
+    `"ns.name"` resolves `getattr(objects[ns], name)` — called with the
+    request args when callable, returned as a snapshot value otherwise
+    (so plain attributes like `LeagueMgr.frozen_pool` are readable
+    remotely). Dunder/private names never resolve. One handler thread per
+    connection; the backend objects' own locks provide the concurrency
+    contract, exactly as they do for in-process threads."""
+
+    def __init__(self, objects: Dict[str, Any], host: str = "127.0.0.1",
+                 port: int = 0):
+        self._objects = {ns: o for ns, o in objects.items() if o is not None}
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(64)
+        self._sock.settimeout(0.2)              # accept-loop stop poll
+        self._stop = threading.Event()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns: list[socket.socket] = []
+        self._lock = threading.Lock()
+
+    @property
+    def address(self) -> str:
+        host, port = self._sock.getsockname()
+        return f"{host}:{port}"
+
+    def start(self) -> "RpcServer":
+        if self._accept_thread is not None:      # idempotent
+            return self
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"rpc-accept@{self.address}",
+            daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def _accept_loop(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                return
+            with self._lock:
+                self._conns.append(conn)
+            threading.Thread(target=self._serve_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            while not self._stop.is_set():
+                try:
+                    req = recv_msg(conn)
+                except TransportError:
+                    return
+                reply = self._dispatch(req)
+                try:
+                    send_msg(conn, reply)
+                except TransportError:
+                    return                     # peer gone mid-reply
+                except Exception as e:         # noqa: BLE001 — result didn't
+                    # serialize (packb raises before any bytes hit the
+                    # socket): ship the failure as a RemoteError instead of
+                    # dropping the connection, which clients would misread
+                    # as a server shutdown
+                    send_msg(conn, {"err": f"unserializable reply: "
+                                           f"{type(e).__name__}: {e}",
+                                    "tb": traceback.format_exc()})
+        finally:
+            conn.close()
+
+    def _dispatch(self, req) -> dict:
+        try:
+            ns, _, name = req["m"].partition(".")
+            if name.startswith("_") or not name:
+                raise AttributeError(f"{req['m']!r} is not a public method")
+            target = getattr(self._objects[ns], name)
+            result = (target(*req.get("a", ()), **req.get("k", {}))
+                      if callable(target) else target)
+            return {"ok": result}
+        except Exception as e:                   # noqa: BLE001 — shipped back
+            return {"err": f"{type(e).__name__}: {e}",
+                    "tb": traceback.format_exc()}
+
+    def close(self) -> None:
+        self._stop.set()
+        self._sock.close()
+        with self._lock:
+            conns, self._conns = self._conns, []
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            c.close()
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+# -- client ------------------------------------------------------------------
+class RpcClient:
+    """One connection, serialized request/reply calls (thread-safe via a
+    lock — give each worker thread its own client for parallel calls)."""
+
+    def __init__(self, address: str, timeout: Optional[float] = None,
+                 connect_retries: int = 50, retry_delay_s: float = 0.1):
+        self.address = address
+        self._timeout = timeout
+        self._retries = connect_retries
+        self._retry_delay_s = retry_delay_s
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    def _connect(self) -> socket.socket:
+        if self._sock is None:
+            host, port = parse_addr(self.address)
+            last: Optional[Exception] = None
+            for _ in range(max(1, self._retries)):
+                try:
+                    sock = socket.create_connection((host, port), timeout=10.0)
+                    sock.settimeout(self._timeout)
+                    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                    self._sock = sock
+                    break
+                except OSError as e:             # server may still be binding
+                    last = e
+                    threading.Event().wait(self._retry_delay_s)
+            else:
+                raise TransportError(
+                    f"cannot connect to {self.address}: {last}") from last
+        return self._sock
+
+    def call(self, method: str, *args, **kwargs):
+        with self._lock:
+            sock = self._connect()
+            try:
+                send_msg(sock, {"m": method, "a": list(args), "k": kwargs})
+                reply = recv_msg(sock)
+            except TransportError:
+                self.close_locked()
+                raise
+        if "err" in reply:
+            raise RemoteError(reply["err"], reply.get("tb", ""))
+        return reply["ok"]
+
+    def close_locked(self) -> None:
+        if self._sock is not None:
+            self._sock.close()
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self.close_locked()
+
+
+class _NamespaceClient:
+    """Shared plumbing: bind an RpcClient (or address) to one namespace."""
+
+    def __init__(self, client, ns: str):
+        self._c = client if isinstance(client, RpcClient) else RpcClient(client)
+        self._ns = ns
+
+    def _call(self, name: str, *args, **kwargs):
+        return self._c.call(f"{self._ns}.{name}", *args, **kwargs)
+
+    def close(self) -> None:
+        self._c.close()
+
+
+# -- seam wrappers -----------------------------------------------------------
+class ModelPoolClient(_NamespaceClient):
+    """Remote `repro.core.ModelPool`. Every pull deserializes into fresh
+    buffers, so remote pulls are snapshots by construction (`copy` is
+    accepted for signature compatibility and ignored)."""
+
+    def __init__(self, client, ns: str = "pool"):
+        super().__init__(client, ns)
+
+    def pull(self, key: ModelKey, copy: Optional[bool] = None):
+        return self._call("pull", key)
+
+    def push(self, key: ModelKey, params, step: int = 0) -> None:
+        self._call("push", key, params, step=step)
+
+    def pull_attr(self, key: ModelKey) -> dict:
+        return self._call("pull_attr", key)
+
+    def freeze(self, key: ModelKey) -> None:
+        self._call("freeze", key)
+
+    def keys(self):
+        return self._call("keys")
+
+    def __contains__(self, key: ModelKey) -> bool:
+        return key in self.keys()
+
+    @property
+    def membership_version(self) -> int:
+        return self._call("membership_version")
+
+
+class LeagueMgrClient(_NamespaceClient):
+    """Remote `repro.core.LeagueMgr` — the Actor/Learner-facing slice of
+    the league protocol (request_task/report_result on the actor side,
+    should_freeze/end_learning_period on the learner side). `model_pool`
+    is a `ModelPoolClient` over the same connection, so code written
+    against the in-process LeagueMgr (`league.model_pool.pull(...)`) runs
+    unchanged against the remote one."""
+
+    def __init__(self, client, ns: str = "league", pool_ns: str = "pool"):
+        super().__init__(client, ns)
+        self.model_pool = ModelPoolClient(self._c, ns=pool_ns)
+
+    def request_task(self, agent_id: str = "main") -> Task:
+        return self._call("request_task", agent_id)
+
+    def request_learner_task(self, agent_id: str = "main") -> Task:
+        return self._call("request_learner_task", agent_id)
+
+    def report_result(self, result: MatchResult) -> None:
+        self._call("report_result", result)
+
+    def pool_winrate(self, agent_id: str) -> Tuple[float, float]:
+        return tuple(self._call("pool_winrate", agent_id))
+
+    def should_freeze(self, agent_id: str, steps: int) -> Optional[str]:
+        return self._call("should_freeze", agent_id, steps)
+
+    def end_learning_period(self, agent_id: str, params,
+                            reason: str = "period") -> ModelKey:
+        return self._call("end_learning_period", agent_id, params,
+                          reason=reason)
+
+    def league_state(self) -> dict:
+        return self._call("league_state")
+
+    @property
+    def frozen_pool(self):
+        return list(self._call("frozen_pool"))
+
+    @property
+    def agents(self):
+        """Remote agent registry shaped like the in-process
+        `LeagueMgr.agents` just enough for `Learner.current_key`
+        (`league.agents[aid].current`). Lazy: indexing returns a view
+        whose `.current` is ONE small `current_model_key` RPC — not a
+        full `league_state` dump, which Learner.learn would otherwise
+        trigger on every published step."""
+        return _RemoteAgents(self)
+
+
+class _RemoteAgents:
+    def __init__(self, league: "LeagueMgrClient"):
+        self._league = league
+
+    def __getitem__(self, agent_id: str) -> SimpleNamespace:
+        key = self._league._call("current_model_key", agent_id)
+        return SimpleNamespace(current=key)
+
+
+class RemoteTicket:
+    """Client-side future for a submitted batch; mirrors `infserver.Ticket`
+    (the integer ticket id is what actually crossed the wire)."""
+    __slots__ = ("tid", "model", "rows", "_client")
+
+    def __init__(self, tid: int, model, rows: int, client: "InfServerClient"):
+        self.tid, self.model, self.rows, self._client = tid, model, rows, client
+
+    def done(self) -> bool:
+        return self._client.poll(self.tid)
+
+    def result(self):
+        return self._client.get(self)
+
+    def __int__(self) -> int:
+        return self.tid
+
+    def __repr__(self):
+        return f"RemoteTicket({self.tid}, model={self.model!r}, rows={self.rows})"
+
+
+class InfServerBackend:
+    """Server-side adapter: `infserver.Ticket` holds a live server
+    reference, so over the wire only its integer id travels. `submit`
+    returns the id, `get` accepts it back, `poll` is the non-blocking
+    probe.
+
+    Outstanding tickets are bounded (`max_outstanding`): a client that
+    submits and then dies would otherwise leak its ticket — and, once
+    flushed, its result arrays — forever in a long-lived serving process.
+    Beyond the cap the oldest unfetched ticket is discarded server-side
+    (its later `get` raises KeyError, which a live client would see as a
+    RemoteError rather than silent wrong data)."""
+
+    def __init__(self, server, max_outstanding: int = 4096):
+        self._server = server
+        self._max_outstanding = max_outstanding
+        self._tickets: Dict[int, Any] = {}       # insertion-ordered
+        self._lock = threading.Lock()
+
+    def submit(self, obs, model: Hashable = None) -> int:
+        t = self._server.submit(np.asarray(obs), model=model)
+        with self._lock:
+            self._tickets[t.tid] = t
+            while len(self._tickets) > self._max_outstanding:
+                stale = next(iter(self._tickets))
+                self._server.discard(self._tickets.pop(stale))
+        return t.tid
+
+    def poll(self, tid: int) -> bool:
+        with self._lock:
+            t = self._tickets.get(tid)
+        return bool(t is not None and t.done())
+
+    def get(self, tid: int):
+        with self._lock:
+            t = self._tickets.pop(tid)
+        a, logp, v = self._server.get(t)
+        return np.asarray(a), np.asarray(logp), np.asarray(v)
+
+    def flush(self) -> None:
+        self._server.flush()
+
+    def update_params(self, params, key: Hashable = None) -> None:
+        self._server.update_params(params, key=key)
+
+    def ensure_model(self, key: Hashable, params) -> None:
+        self._server.ensure_model(key, params)
+
+    def register_model(self, key: Hashable, params) -> None:
+        self._server.register_model(key, params)
+
+    def evict_model(self, key: Hashable) -> bool:
+        return self._server.evict_model(key)
+
+    def stats(self) -> dict:
+        return self._server.stats()
+
+
+class InfServerClient(_NamespaceClient):
+    """Remote `repro.infserver.InfServer` speaking the same
+    submit/flush/get protocol as the in-process server, so
+    `build_served_rollout` (and therefore a served Actor) can run against
+    either without knowing which it has."""
+
+    def __init__(self, client, ns: str = "inf"):
+        super().__init__(client, ns)
+
+    def submit(self, obs: np.ndarray, model: Hashable = None) -> RemoteTicket:
+        obs = np.asarray(obs)
+        tid = self._call("submit", obs, model=model)
+        return RemoteTicket(tid, model, obs.shape[0], self)
+
+    def poll(self, tid) -> bool:
+        return self._call("poll", int(tid))
+
+    def get(self, ticket):
+        return tuple(self._call("get", int(ticket)))
+
+    def flush(self) -> None:
+        self._call("flush")
+
+    def update_params(self, params, key: Hashable = None) -> None:
+        self._call("update_params", params, key=key)
+
+    def ensure_model(self, key: Hashable, params) -> None:
+        self._call("ensure_model", key, params)
+
+    def register_model(self, key: Hashable, params) -> None:
+        self._call("register_model", key, params)
+
+    def evict_model(self, key: Hashable) -> bool:
+        return self._call("evict_model", key)
+
+    def stats(self) -> dict:
+        return self._call("stats")
+
+
+class DataServerClient(_NamespaceClient):
+    """Remote `repro.learners.DataServer` put-side: the Actor→Learner data
+    seam. The DataServer lives in the Learner's process (the paper
+    embeds it there); Actors connect here to ship segments. Backpressure
+    crosses the boundary: `put_when_room` blocks server-side under the
+    ring's condition variable and returns False on timeout exactly like
+    the in-process call."""
+
+    def __init__(self, client, ns: str = "data"):
+        super().__init__(client, ns)
+
+    def put(self, traj) -> None:
+        self._call("put", traj)
+
+    def put_when_room(self, traj, timeout: Optional[float] = None) -> bool:
+        return self._call("put_when_room", traj, timeout=timeout)
+
+    def wait_ready(self, timeout: Optional[float] = None) -> bool:
+        return self._call("wait_ready", timeout=timeout)
+
+    def ready(self) -> bool:
+        return self._call("ready")
+
+    def throughput(self) -> dict:
+        return self._call("throughput")
+
+
+# -- one-call league server ---------------------------------------------------
+def serve_league(league, inf_server=None, *, extra: Optional[Dict[str, Any]] = None,
+                 host: str = "127.0.0.1", port: int = 0) -> RpcServer:
+    """Put a LeagueMgr (namespace `league`), its ModelPool (`pool`) and
+    optionally an InfServer (`inf`, ticket ids over the wire) behind one
+    started RpcServer. `extra` adds more namespaces (the multiprocess
+    driver's `ctrl` plane). Close the returned server to tear down."""
+    objects: Dict[str, Any] = {"league": league, "pool": league.model_pool}
+    if inf_server is not None:
+        objects["inf"] = InfServerBackend(inf_server)
+    objects.update(extra or {})
+    return RpcServer(objects, host=host, port=port).start()

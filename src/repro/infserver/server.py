@@ -22,6 +22,13 @@ Design (this repo's data-plane rebuild):
 * **Param hot-swap** — `update_params`/`ensure_model` replace a model's
   pytree in place; params are traced arguments, so new weights never
   recompile (only the stacked-params cache entry is invalidated).
+* **Mesh-sharded execution** (`mesh=`) — hosted params are laid out over a
+  `("data", "model")` mesh with the serving shardings from
+  `repro.distributed.sharding`: tensor parallelism over 'model' for the
+  attention/MLP/vocab weights (no FSDP — forward-only), the continuous
+  batch data-parallel over 'data'. The grouped θ+φ forward keeps its
+  vmapped model-group axis replicated. `mesh=None` (default) is the
+  unchanged single-device path.
 * **Telemetry** — per-batch latency and occupancy (real rows / padded
   rows) feed `stats()`, the Table-3-style serving numbers.
 
@@ -69,10 +76,17 @@ class Ticket:
 
 class InfServer:
     def __init__(self, cfg, num_actions: int, params=None, *, max_batch: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, mesh=None):
+        """`mesh` switches on sharded execution: every hosted model is laid
+        out over the mesh with the serving shardings (TP over 'model', no
+        FSDP) and flush batches ride the mesh data-parallel. `mesh=None`
+        keeps the single-device path bit-for-bit unchanged."""
         self.cfg = cfg
         self.policy = make_obs_policy(cfg, num_actions)
         self.max_batch = max_batch
+        self.mesh = mesh
+        self._param_shardings = None     # lazy: from the first model's shapes
+        self._stacked_shardings = None
         self.rng = jax.random.PRNGKey(seed)
         # one reentrant lock serializes registry mutation, queueing and
         # flushing: the async league runtime has many Actor threads sharing
@@ -110,6 +124,46 @@ class InfServer:
         """Legacy accessor: the default model's current params."""
         return self._models.get(self._default_key)
 
+    def _place(self, params):
+        """Sharded mode: lay the pytree out over the mesh with the serving
+        shardings (computed once from the first model's shapes — all routes
+        host the same arch). No-op on the single-device path."""
+        if self.mesh is None:
+            return params
+        if self._param_shardings is None:
+            from repro.distributed.sharding import (serving_param_shardings,
+                                                    stacked_param_shardings)
+            shapes = jax.eval_shape(lambda: params)
+            self._param_shardings = serving_param_shardings(
+                shapes, self.cfg, self.mesh)
+            self._stacked_shardings = stacked_param_shardings(
+                self._param_shardings, self.mesh)
+        return jax.device_put(params, self._param_shardings)
+
+    def _pad_rows(self, rows: int) -> int:
+        """Padded batch size for `rows` real rows: the power-of-two bucket,
+        rounded up in sharded mode to a multiple of the mesh's data-axis
+        extent so the batch dim always divides for the data-parallel
+        layout."""
+        s = _bucket(rows)
+        if self.mesh is not None:
+            from repro.distributed.sharding import data_axes
+            d = int(np.prod([self.mesh.shape[a]
+                             for a in data_axes(self.mesh)]) or 1)
+            s = ((s + d - 1) // d) * d
+        return s
+
+    def _place_obs(self, obs: np.ndarray, grouped: bool):
+        """Commit a flush batch to the mesh data-parallel (sharded mode) or
+        just hand it to jit (single-device)."""
+        if self.mesh is None:
+            return jnp.asarray(obs)
+        from repro.distributed.sharding import (grouped_obs_sharding,
+                                                obs_batch_sharding)
+        ns = (grouped_obs_sharding(self.mesh, obs.shape[1]) if grouped
+              else obs_batch_sharding(self.mesh, obs.shape[0]))
+        return jax.device_put(obs, ns)
+
     def register_model(self, key: Hashable, params) -> None:
         """Host (or refresh) a model. The first registered model becomes the
         default route for `submit(obs)` without an explicit model."""
@@ -117,7 +171,7 @@ class InfServer:
             if self._default_key is None:
                 self._default_key = key
             self._versions[key] = self._versions.get(key, -1) + 1
-            self._models[key] = params
+            self._models[key] = self._place(params)
             # entries containing this key can never match again (version
             # bumped) — drop them now so stale stacked copies don't pin
             # device memory; entries for other model sets stay warm
@@ -132,7 +186,11 @@ class InfServer:
 
     def update_params(self, params, key: Hashable = None) -> None:
         """Learner pushed new theta to the ModelPool -> hot-swap. Params are
-        traced jit arguments, so no recompilation happens."""
+        traced jit arguments, so no recompilation happens. Non-blocking
+        (lock only); in-flight flushes finished under the old weights, the
+        next flush sees the new ones. The pytree is hosted LIVE on the
+        single-device path (callers pass snapshots) and re-laid-out via
+        device_put (its own copy) in sharded mode."""
         with self._lock:
             if key is None:
                 # a paramless server gets a real default route, not key None
@@ -156,7 +214,12 @@ class InfServer:
     # -- client protocol -----------------------------------------------------
     def submit(self, obs: np.ndarray, model: Hashable = None) -> Ticket:
         """Queue a (k, L) observation batch for `model` (default: θ); returns
-        a ticket future. A full queue (>= max_batch rows) flushes."""
+        a ticket future. Usually just an enqueue (lock only), but MAY BLOCK
+        for one grouped forward when this submit fills the queue to
+        `max_batch` rows — the submitter that trips the threshold pays the
+        flush for everyone (the in-process form of backpressure). The obs
+        array is referenced until that flush, not copied: callers reusing
+        a staging buffer must not overwrite it before `get`."""
         obs = np.asarray(obs)
         with self._lock:
             key = self._default_key if model is None else model
@@ -175,7 +238,10 @@ class InfServer:
 
     def flush(self) -> None:
         """Run the grouped forward over everything pending and resolve
-        tickets. One XLA dispatch regardless of how many models are routed."""
+        tickets. One XLA dispatch regardless of how many models are routed.
+        BLOCKS for the device round trip while HOLDING the server lock —
+        concurrent submit/get/hot-swap callers wait behind it (that
+        serialization is what makes the batch 'continuous')."""
         with self._lock:
             if not self._pending:
                 return
@@ -207,11 +273,12 @@ class InfServer:
         sizes = [o.shape[0] for _, o in items]
         rows = sum(sizes)
         big = np.concatenate([o for _, o in items], axis=0)
-        pad = _bucket(rows) - rows
+        pad = self._pad_rows(rows) - rows
         if pad:
             big = np.concatenate([big, np.zeros((pad,) + big.shape[1:],
                                                 big.dtype)], axis=0)
-        a, logp, v = self._act(self._models[key], self._next_rng(), jnp.asarray(big))
+        a, logp, v = self._act(self._models[key], self._next_rng(),
+                               self._place_obs(big, grouped=False))
         self._scatter(tickets, sizes, np.asarray(a), np.asarray(logp),
                       np.asarray(v))
         self.rows_served += rows
@@ -222,14 +289,15 @@ class InfServer:
         per_model = [np.concatenate([o for _, o in groups[k]], axis=0)
                      for k in keys]
         rows = [m.shape[0] for m in per_model]
-        S = _bucket(max(rows))
+        S = self._pad_rows(max(rows))
         obs_mat = np.zeros((len(keys), S) + per_model[0].shape[1:],
                            per_model[0].dtype)
         for m, sub in enumerate(per_model):
             obs_mat[m, :sub.shape[0]] = sub
         stacked = self._stacked_params(keys)
         rngs = self._next_rng(len(keys))
-        a, logp, v = self._grouped_act(stacked, rngs, jnp.asarray(obs_mat))
+        a, logp, v = self._grouped_act(stacked, rngs,
+                                       self._place_obs(obs_mat, grouped=True))
         a, logp, v = np.asarray(a), np.asarray(logp), np.asarray(v)
         for m, k in enumerate(keys):
             tickets = [t for t, _ in groups[k]]
@@ -246,6 +314,11 @@ class InfServer:
         if hit is None:
             hit = jax.tree.map(lambda *xs: jnp.stack(xs),
                                *(self._models[k] for k in keys))
+            if self.mesh is not None:
+                # re-commit the stack to the (None, *serving-spec) layout:
+                # stacking sharded members leaves XLA's inferred placement,
+                # and the grouped forward wants the per-model TP layout back
+                hit = jax.device_put(hit, self._stacked_shardings)
             while len(self._stack_cache) >= 8:     # bound without thrashing
                 self._stack_cache.pop(next(iter(self._stack_cache)))
             self._stack_cache[cache_key] = hit
@@ -259,11 +332,31 @@ class InfServer:
             ofs += n
 
     def get(self, ticket) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Resolve a ticket: (actions, logps, values) for its rows, each a
+        fresh host array the caller owns. MAY BLOCK for one forward — an
+        unresolved ticket triggers a flush (so `get` is self-sufficient:
+        submit/get with no explicit flush always completes). Results pop
+        on read; a second get for the same ticket raises KeyError."""
         tid = ticket.tid if isinstance(ticket, Ticket) else int(ticket)
         with self._lock:
             if tid not in self._results:
                 self.flush()
             return self._results.pop(tid)
+
+    def discard(self, ticket) -> None:
+        """Forget a ticket without consuming it: drop its queued request
+        (if not yet flushed) and its result (if already resolved).
+        Non-blocking. The eviction path for clients that submitted and
+        then died — without it an abandoned ticket's result arrays live
+        forever."""
+        tid = ticket.tid if isinstance(ticket, Ticket) else int(ticket)
+        with self._lock:
+            self._results.pop(tid, None)
+            kept = [(t, k, o) for t, k, o in self._pending if t != tid]
+            if len(kept) != len(self._pending):
+                self._pending_rows -= sum(o.shape[0] for t, k, o
+                                          in self._pending if t == tid)
+                self._pending = kept
 
     # -- telemetry ------------------------------------------------------------
     def stats(self) -> dict:
@@ -279,4 +372,7 @@ class InfServer:
             "last_batch_models": self.last_batch_models,
             "models_hosted": len(self._models),
             "queue_depth": self.queue_depth,
+            "sharded": self.mesh is not None,
+            "mesh_shape": (dict(self.mesh.shape)
+                           if self.mesh is not None else None),
         }

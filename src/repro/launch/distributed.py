@@ -1,0 +1,500 @@
+"""Multiprocess league launch: the PR 3 thread seams as process boundaries.
+
+The event-driven runtime (`repro.league.runtime`) already communicates
+only through the decoupled-service seams; this module places those seams
+on the `repro.distributed.transport` RPC layer so LeagueMgr/ModelPool,
+each Learner, each Actor and a shared (optionally mesh-sharded) InfServer
+run as separate OS processes — the paper's §3.4 hybrid-cluster layout,
+with TCP standing in for ZeroMQ.
+
+Process roles (each is `python -m repro.launch.train --role <role>`):
+
+  * **coordinator** — owns LeagueMgr + ModelPool (and the shared InfServer
+    unless a separate `--role infserver` process is launched), serves them
+    over one RPC socket, runs the freeze/stop control plane (`ctrl`
+    namespace: endpoint registry, learner step reports, the stop flag).
+  * **learner** (one per role) — hosts its role's DataServer behind its
+    own RPC socket (registered with the coordinator so actors can find
+    it), pulls θ from the remote ModelPool, drains the ring, pushes θ
+    back, polls `should_freeze` at step boundaries and executes freezes
+    through `LeagueMgrClient.end_learning_period` — params cross the wire,
+    so the pool entry stays authoritative exactly as in-process.
+  * **actor** — requests tasks and reports results against the remote
+    LeagueMgr, ships trajectory segments into its role's remote DataServer
+    (`put_when_room`: ring-full backpressure crosses the process
+    boundary), and in `--served` mode routes every policy forward through
+    the shared serving mesh via `InfServerClient`.
+  * **infserver** — a standalone serving process hosting the grouped θ+φ
+    forward, mesh-sharded over the local devices with `--sharded`.
+
+`run_multiprocess` (`train.py --workers N`) is the one-command form: the
+parent becomes the coordinator and spawns one learner process per role
+plus N actor processes (round-robin over roles), then tears everything
+down on the stop condition and prints the merged report.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.distributed.transport import (DataServerClient, InfServerClient,
+                                         LeagueMgrClient, RpcClient,
+                                         RpcServer, TransportError,
+                                         serve_league)
+
+_POLL_S = 0.05
+
+
+class Ctrl:
+    """Coordinator control plane, served under the `ctrl` namespace: a
+    process-boundary replacement for the runtime's in-process Coordinator
+    thread state. All methods are called over RPC from worker processes;
+    the lock makes them linearizable (the RpcServer runs one thread per
+    connection)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._stop = False
+        self._endpoints: Dict[str, str] = {}
+        self._steps: Dict[str, int] = {}
+        self._segments: Dict[str, int] = {}
+        self._frames: Dict[str, int] = {}
+
+    # -- stop flag ----------------------------------------------------------
+    def stop(self) -> None:
+        with self._lock:
+            self._stop = True
+
+    def should_stop(self) -> bool:
+        with self._lock:
+            return self._stop
+
+    # -- endpoint registry --------------------------------------------------
+    def register_endpoint(self, name: str, address: str) -> None:
+        """`name` is free-form (`data/<role>`, `inf/shared`); workers poll
+        `endpoint` until the owning process has bound and registered."""
+        with self._lock:
+            self._endpoints[name] = address
+
+    def endpoint(self, name: str) -> Optional[str]:
+        with self._lock:
+            return self._endpoints.get(name)
+
+    # -- progress reports ---------------------------------------------------
+    def report_learner(self, role: str, steps: int) -> None:
+        with self._lock:
+            self._steps[role] = steps
+
+    def report_actor(self, actor_id: str, segments: int, frames: int) -> None:
+        with self._lock:
+            self._segments[actor_id] = segments
+            self._frames[actor_id] = frames
+
+    def progress(self) -> dict:
+        with self._lock:
+            return {"learner_steps": dict(self._steps),
+                    "actor_segments": dict(self._segments),
+                    "frames_total": sum(self._frames.values())}
+
+
+def _ctrl_client(address: str) -> RpcClient:
+    return RpcClient(address)
+
+
+def _wait_endpoint(ctrl: RpcClient, name: str, timeout: float = 60.0) -> str:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        addr = ctrl.call("ctrl.endpoint", name)
+        if addr:
+            return addr
+        time.sleep(_POLL_S)
+    raise TimeoutError(f"endpoint {name!r} never registered with coordinator")
+
+
+def _coordinator_alive(connect: str) -> bool:
+    """Probe the coordinator with a fresh connection (the cached client's
+    socket may be the thing that just died)."""
+    probe = RpcClient(connect, connect_retries=1, retry_delay_s=0.01)
+    try:
+        probe.call("ctrl.should_stop")
+        return True
+    except TransportError:
+        return False
+    finally:
+        probe.close()
+
+
+def _advertised(address: str) -> str:
+    """What to publish in the ctrl endpoint registry for a socket bound at
+    `address`: a wildcard bind (0.0.0.0 / ::) is reachable by nobody, so
+    advertise this machine's hostname instead (inside k8s that resolves
+    via the pod's Service). Loopback binds are advertised as-is — correct
+    for the single-host default, never routable across hosts (bind
+    0.0.0.0 for multi-host layouts)."""
+    import socket
+
+    host, _, port = address.rpartition(":")
+    if host in ("0.0.0.0", "::", ""):
+        return f"{socket.gethostname()}:{port}"
+    return address
+
+
+def _build_mesh(sharded: bool):
+    if not sharded:
+        return None
+    from repro.launch.mesh import make_local_mesh
+    return make_local_mesh()
+
+
+# -- coordinator -------------------------------------------------------------
+def run_coordinator(spec, *, env_name: str = "rps",
+                    arch: str = "tleague-policy-s", seed: int = 0,
+                    served: bool = False, sharded: bool = False,
+                    pbt: bool = False, bind: str = "127.0.0.1:0",
+                    max_seconds: Optional[float] = None,
+                    max_steps_per_role: Optional[int] = None,
+                    on_bound=None, verbose: bool = True) -> dict:
+    """Host the league services and run the stop-condition loop. Blocks
+    until `max_seconds` elapses or every role's learner reported
+    `max_steps_per_role` steps, then raises the ctrl stop flag, lingers
+    briefly so workers can observe it, and returns the final report.
+
+    With NO stop condition the coordinator serves until something calls
+    `ctrl.stop` over RPC (or the process is killed) — the k8s Deployment
+    semantics, where the pod's lifetime is the run's lifetime."""
+    import jax
+
+    from repro.configs import get_arch
+    from repro.distributed.transport import parse_addr
+    from repro.envs import make_env
+    from repro.infserver import InfServer
+    from repro.league.roles import install_roles
+    from repro.models import init_params
+
+    env = make_env(env_name)
+    cfg = get_arch(arch)
+    rng = jax.random.PRNGKey(seed)
+    league = install_roles(
+        spec, lambda i: init_params(jax.random.fold_in(rng, i), cfg),
+        pbt=pbt, seed=seed)
+    inf_server = None
+    if served:
+        inf_server = InfServer(cfg, env.spec.num_actions, seed=seed + 7919,
+                               max_batch=max(64, 16 * spec.num_actors_total),
+                               mesh=_build_mesh(sharded))
+    ctrl = Ctrl()
+    host, port = parse_addr(bind)
+    server = serve_league(league, inf_server, extra={"ctrl": ctrl},
+                          host=host, port=port)
+    if inf_server is not None:
+        ctrl.register_endpoint("inf/shared", _advertised(server.address))
+    if on_bound is not None:
+        on_bound(server.address)
+    if verbose:
+        print(f"[coordinator] serving league at {server.address} "
+              f"(roles: {[r.name for r in spec]})", flush=True)
+    t0 = time.monotonic()
+    try:
+        while not ctrl.should_stop():
+            if max_seconds is not None and time.monotonic() - t0 >= max_seconds:
+                break
+            if max_steps_per_role is not None:
+                steps = ctrl.progress()["learner_steps"]
+                if (len(steps) == len(spec)
+                        and all(s >= max_steps_per_role for s in steps.values())):
+                    break
+            time.sleep(_POLL_S)
+        ctrl.stop()
+        time.sleep(1.0)          # let workers observe the flag and detach
+        report = {
+            "wall_s": round(time.monotonic() - t0, 3),
+            "progress": ctrl.progress(),
+            "league": league.league_state(),
+            "serving": inf_server.stats() if inf_server is not None else None,
+        }
+        if verbose:
+            print(f"[coordinator] done: {json.dumps(report['progress'])}",
+                  flush=True)
+        return report
+    finally:
+        ctrl.stop()
+        server.close()
+
+
+# -- learner -----------------------------------------------------------------
+def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
+                arch: str = "tleague-policy-s", loss: str = "ppo",
+                lr: float = 3e-4, seed: int = 0, num_envs: int = 8,
+                unroll_len: int = 8, ring_segments: int = 4,
+                data_bind: str = "127.0.0.1:0",
+                advertise: Optional[str] = None,
+                verbose: bool = True) -> dict:
+    """One role's Learner as a process: local DataServer (served to the
+    role's actors over RPC), remote league protocol for everything else.
+    `advertise` overrides the address registered for `data/<role>` —
+    under k8s that is the learner's Service DNS name, which stays stable
+    across pod restarts."""
+    from repro.configs import get_arch
+    from repro.distributed.transport import parse_addr
+    from repro.envs import make_env
+    from repro.learners import DataServer, Learner, build_env_train_step
+    from repro.optim import adamw
+
+    env = make_env(env_name)
+    cfg = get_arch(arch)
+    league = LeagueMgrClient(connect)
+    ctrl = _ctrl_client(connect)
+    ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
+    seg_frames = num_envs * env.spec.team_size * unroll_len
+    ds = DataServer(capacity_frames=ring_segments * seg_frames, blocking=True)
+    host, port = parse_addr(data_bind)
+    data_srv = RpcServer({"data": ds}, host=host, port=port).start()
+    ctrl.call("ctrl.register_endpoint", f"data/{role_name}",
+              advertise or _advertised(data_srv.address))
+
+    opt = adamw(lr, clip_norm=1.0)
+    step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
+    try:
+        # warm-start from the role's CURRENT key, not version 0: a learner
+        # process restarted mid-run (the k8s auto-restart path) must adopt
+        # the lineage where it left off, not push seed weights over it
+        current = league.agents[role_name].current
+        learner = Learner(league, step, opt, league.model_pool.pull(current),
+                          agent_id=role_name, data_server=ds)
+        period_steps, freezes = 0, 0
+        while not ctrl.call("ctrl.should_stop"):
+            reason = league.should_freeze(role_name, period_steps)
+            if reason:
+                new_key = learner.end_learning_period(reason=reason)
+                freezes += 1
+                period_steps = 0
+                if verbose:
+                    print(f"[learner/{role_name}] froze ({reason}) "
+                          f"-> {new_key}", flush=True)
+                continue
+            if not ds.wait_ready(timeout=_POLL_S):
+                continue
+            if learner.learn(num_steps=1):
+                period_steps += 1
+                ctrl.call("ctrl.report_learner", role_name, learner.step_count)
+        steps = learner.step_count
+    except TransportError as e:
+        # the coordinator owns the run's lifetime: once we were connected,
+        # its disappearance IS the shutdown signal, not a failure (the stop
+        # flag and the socket close race — a worker mid-poll sees whichever
+        # comes first). A *connect* failure still raises out of RpcClient.
+        if verbose:
+            print(f"[learner/{role_name}] coordinator gone ({e}); "
+                  "shutting down", flush=True)
+        steps, freezes = -1, -1
+    finally:
+        data_srv.close()
+    return {"role": role_name, "steps": steps, "freezes": freezes}
+
+
+# -- actor -------------------------------------------------------------------
+def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
+              env_name: str = "rps", arch: str = "tleague-policy-s",
+              num_envs: int = 8, unroll_len: int = 8, seed: int = 0,
+              served: bool = False, verbose: bool = True) -> dict:
+    """One Actor as a process: remote task/result protocol, remote
+    DataServer put (with cross-process backpressure), and optionally the
+    shared serving mesh for every policy forward."""
+    from repro.actors import Actor
+    from repro.configs import get_arch
+    from repro.envs import make_env
+
+    env = make_env(env_name)
+    cfg = get_arch(arch)
+    league = LeagueMgrClient(connect)
+    ctrl = _ctrl_client(connect)
+    ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
+    actor_id = f"{role_name}/{actor_index}"
+    segments = 0
+    try:
+        data = DataServerClient(_wait_endpoint(ctrl, f"data/{role_name}"))
+        inf = None
+        if served:
+            inf = InfServerClient(_wait_endpoint(ctrl, "inf/shared"))
+        actor = Actor(env, cfg, league, agent_id=role_name, num_envs=num_envs,
+                      unroll_len=unroll_len,
+                      seed=seed * 1000 + actor_index, inf_server=inf)
+        while not ctrl.call("ctrl.should_stop"):
+            traj, _task = actor.run_segment()
+            # backpressure: the server blocks on the ring condition for the
+            # whole timeout, so a LONG timeout means the segment is shipped
+            # once and waits server-side — retrying at the poll interval
+            # would re-serialize the full pytree 20x/s exactly when the
+            # learner is already the bottleneck
+            while not ctrl.call("ctrl.should_stop"):
+                if data.put_when_room(traj, timeout=2.0):
+                    segments += 1
+                    break
+            ctrl.call("ctrl.report_actor", actor_id, segments,
+                      actor.frames_produced)
+        frames = actor.frames_produced
+    except TransportError as e:
+        # a vanished coordinator is shutdown, not failure (see run_learner)
+        # — but this handler also guards calls to the learner's DataServer
+        # and the InfServer, whose death with a live coordinator is a REAL
+        # failure that must surface (nonzero exit -> k8s restarts the pod)
+        if _coordinator_alive(connect):
+            raise
+        if verbose:
+            print(f"[actor/{actor_id}] coordinator gone ({e}); "
+                  "shutting down", flush=True)
+        frames = -1
+    if verbose:
+        print(f"[actor/{actor_id}] {segments} segments, "
+              f"{frames} frames", flush=True)
+    return {"actor": actor_id, "segments": segments, "frames": frames}
+
+
+# -- standalone inference server ---------------------------------------------
+def run_infserver(connect: str, *, env_name: str = "rps",
+                  arch: str = "tleague-policy-s", seed: int = 0,
+                  sharded: bool = False, max_batch: int = 256,
+                  bind: str = "127.0.0.1:0", advertise: Optional[str] = None,
+                  verbose: bool = True) -> dict:
+    """A standalone serving process: host the grouped θ+φ forward
+    (mesh-sharded over the local devices with `sharded=True`) and register
+    as the shared `inf/shared` endpoint. Routes are installed lazily by
+    served Actors (`update_params`/`ensure_model` over RPC).
+
+    `advertise` overrides the registered address. REQUIRED for replicated
+    deployments: N replicas each registering their own pod hostname under
+    the single `inf/shared` key would last-write-win and leave N-1 idle —
+    advertising the k8s Service name instead lets the Service spread
+    actor connections across all replicas."""
+    from repro.configs import get_arch
+    from repro.distributed.transport import InfServerBackend, parse_addr
+    from repro.envs import make_env
+    from repro.infserver import InfServer
+
+    env = make_env(env_name)
+    cfg = get_arch(arch)
+    server = InfServer(cfg, env.spec.num_actions, seed=seed,
+                       max_batch=max_batch, mesh=_build_mesh(sharded))
+    ctrl = _ctrl_client(connect)
+    host, port = parse_addr(bind)
+    rpc = RpcServer({"inf": InfServerBackend(server)},
+                    host=host, port=port).start()
+    ctrl.call("ctrl.register_endpoint", "inf/shared",
+              advertise or _advertised(rpc.address))
+    if verbose:
+        print(f"[infserver] serving at {rpc.address} "
+              f"(sharded={server.mesh is not None})", flush=True)
+    try:
+        while not ctrl.call("ctrl.should_stop"):
+            time.sleep(_POLL_S)
+    except TransportError:
+        pass                         # coordinator gone == shutdown signal
+    finally:
+        rpc.close()
+    return server.stats()
+
+
+# -- one-command multiprocess launch ------------------------------------------
+def _spawn_role(role: str, connect: str, extra: List[str],
+                env_overrides: Optional[Dict[str, str]] = None) -> subprocess.Popen:
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--role", role, "--connect", connect] + extra
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__)))), env.get("PYTHONPATH")) if p)
+    env.update(env_overrides or {})
+    return subprocess.Popen(cmd, env=env)
+
+
+def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
+                     arch: str = "tleague-policy-s", loss: str = "ppo",
+                     num_envs: int = 8, unroll_len: int = 8, lr: float = 3e-4,
+                     seed: int = 0, served: bool = False, sharded: bool = False,
+                     pbt: bool = False,
+                     max_seconds: Optional[float] = None,
+                     max_steps_per_role: Optional[int] = None,
+                     verbose: bool = True) -> dict:
+    """`train.py --workers N`: this process becomes the coordinator; one
+    learner process per role plus `workers` actor processes (round-robin
+    over roles, min one each) are spawned as `--role` children. Returns
+    the coordinator report with per-child exit codes merged in."""
+    assert workers >= 1, "--workers needs at least one actor process"
+    assert max_seconds is not None or max_steps_per_role is not None, \
+        "--workers needs a stop condition (--max-seconds / --max-steps)"
+    ctrl_box: Dict[str, object] = {}
+    addr_ready = threading.Event()
+
+    def _on_bound(address: str):
+        ctrl_box["address"] = address
+        addr_ready.set()
+
+    def _coordinator():
+        try:
+            ctrl_box["report"] = run_coordinator(
+                spec, env_name=env_name, arch=arch, seed=seed, served=served,
+                sharded=sharded, pbt=pbt, max_seconds=max_seconds,
+                max_steps_per_role=max_steps_per_role,
+                on_bound=_on_bound, verbose=verbose)
+        except BaseException as e:      # noqa: BLE001 — re-raised by parent
+            ctrl_box["error"] = e
+            addr_ready.set()            # unblock the parent if bind failed
+
+    coord = threading.Thread(target=_coordinator, name="coordinator",
+                             daemon=True)
+    coord.start()
+    assert addr_ready.wait(timeout=30.0), "coordinator failed to bind"
+    if "error" in ctrl_box:
+        raise RuntimeError("coordinator failed") from ctrl_box["error"]  # type: ignore[arg-type]
+    address = str(ctrl_box["address"])
+
+    common = ["--env", env_name, "--arch", arch, "--loss", loss,
+              "--num-envs", str(num_envs), "--unroll-len", str(unroll_len),
+              "--lr", str(lr), "--seed", str(seed)]
+    if served:
+        common.append("--served")
+    children: List[subprocess.Popen] = []
+    for role in spec:
+        children.append(_spawn_role(
+            "learner", address, common + ["--league-role", role.name]))
+    role_names = [r.name for r in spec]
+    for w in range(workers):
+        role = role_names[w % len(role_names)]
+        children.append(_spawn_role(
+            "actor", address,
+            common + ["--league-role", role, "--actor-index", str(w)]))
+
+    # the coordinator loop owns the stop condition — but if every child
+    # died (e.g. crashed on startup) a step-quota coordinator would wait
+    # forever, so raise its ctrl stop flag through its own RPC socket
+    while coord.is_alive():
+        coord.join(timeout=1.0)
+        if coord.is_alive() and all(c.poll() is not None for c in children):
+            try:
+                RpcClient(address, connect_retries=1).call("ctrl.stop")
+            except TransportError:
+                pass
+            coord.join(timeout=30.0)
+            break
+    deadline = time.monotonic() + 30.0
+    exit_codes = []
+    for c in children:
+        try:
+            exit_codes.append(c.wait(
+                timeout=max(0.1, deadline - time.monotonic())))
+        except subprocess.TimeoutExpired:
+            c.terminate()
+            exit_codes.append(c.wait(timeout=10.0))
+    if "error" in ctrl_box:
+        # children saw the dead socket as shutdown and exited 0 — the
+        # coordinator's own failure must still fail the run
+        raise RuntimeError("coordinator crashed mid-run") from ctrl_box["error"]  # type: ignore[arg-type]
+    report = dict(ctrl_box.get("report") or {})
+    report["worker_exit_codes"] = exit_codes
+    report["clean_shutdown"] = all(code == 0 for code in exit_codes)
+    return report

@@ -3,11 +3,30 @@
 The paper prepares one yml.jinja2 per training ("56 Learners, 8 InfServers,
 each Learner 1 GPU, every 7 Learners + 1 InfServer co-located...") and runs
 `render_template | kubectl apply -f -`. This module is that renderer,
-dependency-free: LeagueMgr/ModelPool/Learner/InfServer as Services, Actors
-as a ReplicaSet (auto-restart on env crashes per the k8s imperative
-semantics), nodeSelector co-location, all RL + league hyperparameters in
-the spec. On a TPU cloud the Learner block becomes a JobSet over the pod
-slice; the rendered spec is what `kubectl apply` would take.
+dependency-free: the coordinator (LeagueMgr + ModelPool + ctrl plane),
+Learners, InfServers as Services, Actors as a high-replica Deployment
+(auto-restart on env crashes per the k8s imperative semantics),
+nodeSelector co-location, all RL + league hyperparameters in the spec.
+
+Every rendered command line is the REAL `repro.launch.train` CLI — the
+same flags a laptop run uses (README "Mesh-sharded serving +
+multiprocess league"):
+
+  * coordinator: `--role coordinator --league-spec <path> [--served]`
+    — hosts LeagueMgr/ModelPool behind the RPC transport
+    (`repro.distributed.transport`); the ModelPool has no separate
+    Deployment because it lives inside the coordinator process (the
+    paper's M_M replicas collapse into its in-memory store).
+  * learner:     `--role learner --league-role <role>` — finds the
+    coordinator via the injected `LEAGUE_MGR_EP` env var.
+  * actor:       `--role actor --league-role <role> [--served]`.
+  * inf-server:  `--role infserver --sharded` — the mesh-sharded grouped
+    θ+φ forward over the node's accelerator mesh.
+
+The single-host determinism fallback (no cluster) is the same image with
+`--league-spec <path> --sync` — the bit-deterministic lockstep loop.
+On a TPU cloud the Learner block becomes a JobSet over the pod slice;
+the rendered spec is what `kubectl apply` would take.
 
   PYTHONPATH=src python -m repro.launch.k8s --learners 56 --inf-servers 8 \
       --actors-per-learner 16 | kubectl apply -f -   # (on a real cluster)
@@ -47,38 +66,71 @@ spec:
           requests: {{cpu: "{cpus}"{accel}}}
           limits: {{cpu: "{cpus}"{accel}}}
         env:
-        - {{name: LEAGUE_MGR_EP, value: "tcp://{signature}-league-mgr:9003"}}
-        - {{name: MODEL_POOL_EP, value: "tcp://{signature}-model-pool:9004"}}
+        - {{name: LEAGUE_MGR_EP, value: "tcp://{signature}-coordinator:9003"}}
+        - {{name: MODEL_POOL_EP, value: "tcp://{signature}-coordinator:9003"}}
 """
 
 
 def render(*, signature="tleague", image="repro:latest", learners=8,
-           inf_servers=2, actors_per_learner=16, model_pools=2,
+           inf_servers=2, actors_per_learner=16,
            actor_cpus=4, learner_accel="google.com/tpu: 1",
            env="pommerman_lite", arch="tleague-policy-s",
-           game_mgr="sp_pfsp", lr=3e-4):
+           league_spec="/config/league_spec.json", league_role="main",
+           served=True, lr=3e-4):
+    """Render the full multiprocess league as k8s Services/Deployments.
+
+    `league_spec` is the LeagueSpec JSON path inside the image (mount it
+    via a ConfigMap); `league_role` is the role the rendered learner and
+    actor blocks work for — render once per role for a multi-role league.
+    `served=True` adds `--served` so actors route policy forwards through
+    the sharded inf-server deployment (and only there: the coordinator
+    must not also host one, or the two would race for the `inf/shared`
+    endpoint). `learners` sizes the ACTOR fleet (learners ×
+    actors_per_learner, the paper's co-location ratio); the learner
+    Deployment itself is always replicas=1 per role — params are
+    single-writer, and M_L data parallelism is inside the pjit step."""
     common = dict(signature=signature, image=image)
+    base = ["--env", env, "--arch", arch]
+    serve_flag = ["--served"] if served else []
+
+    def fmt(args: list) -> str:
+        return "[" + ", ".join(f'"{a}"' for a in args) + "]"
+
     blocks = []
+    # the coordinator must NOT get --served when dedicated inf-server
+    # deployments exist: both would register the single `inf/shared`
+    # endpoint and early actors would cache whichever won the race —
+    # usually the coordinator's unsharded CPU server
+    coord_serve = serve_flag if inf_servers == 0 else []
     blocks.append(SERVICE_TMPL.format(
-        role="league-mgr", port=9003, replicas=1, node_pool="cpu-highmem",
+        role="coordinator", port=9003, replicas=1, node_pool="cpu-highmem",
         module="repro.launch.train",
-        args=f'["--env", "{env}", "--arch", "{arch}", "--game-mgr", "{game_mgr}", "--lr", "{lr}"]',
+        args=fmt(["--role", "coordinator", "--league-spec", league_spec,
+                  "--bind", "0.0.0.0:9003"] + base + coord_serve),
         cpus=8, accel="", **common))
+    # ONE learner process per role: the lineage's params are single-writer
+    # (see LeagueMgr.end_learning_period) — M_L-way data parallelism lives
+    # INSIDE the learner's pjit'd train step over its node's mesh, not in
+    # pod replicas. Render once per role for a multi-role league.
     blocks.append(SERVICE_TMPL.format(
-        role="model-pool", port=9004, replicas=model_pools,
-        node_pool="cpu-highmem", module="repro.core.model_pool",
-        args="[]", cpus=8, accel="", **common))
-    blocks.append(SERVICE_TMPL.format(
-        role="learner", port=9005, replicas=learners, node_pool="tpu-v5e",
-        module="repro.launch.train", args='["--role", "learner"]',
+        role="learner", port=9005, replicas=1, node_pool="tpu-v5e",
+        module="repro.launch.train",
+        args=fmt(["--role", "learner", "--league-role", league_role,
+                  "--lr", str(lr), "--bind", "0.0.0.0:9005",
+                  "--advertise", f"{signature}-learner:9005"] + base),
         cpus=16, accel=", " + learner_accel, **common))
     blocks.append(SERVICE_TMPL.format(
         role="inf-server", port=9006, replicas=inf_servers,
-        node_pool="tpu-v5e", module="repro.infserver.server", args="[]",
+        node_pool="tpu-v5e", module="repro.launch.train",
+        args=fmt(["--role", "infserver", "--sharded",
+                  "--bind", "0.0.0.0:9006",
+                  "--advertise", f"{signature}-inf-server:9006"] + base),
         cpus=8, accel=", " + learner_accel, **common))
     blocks.append(SERVICE_TMPL.format(
         role="actor", port=9007, replicas=learners * actors_per_learner,
-        node_pool="cpu", module="repro.actors.actor", args="[]",
+        node_pool="cpu", module="repro.launch.train",
+        args=fmt(["--role", "actor", "--league-role", league_role]
+                 + base + serve_flag),
         cpus=actor_cpus, accel="", **common))
     return "".join(blocks)
 
@@ -89,14 +141,17 @@ def main():
     ap.add_argument("--learners", type=int, default=8)
     ap.add_argument("--inf-servers", type=int, default=2)
     ap.add_argument("--actors-per-learner", type=int, default=16)
-    ap.add_argument("--model-pools", type=int, default=2)
     ap.add_argument("--env", default="pommerman_lite")
     ap.add_argument("--arch", default="tleague-policy-s")
+    ap.add_argument("--league-spec", default="/config/league_spec.json")
+    ap.add_argument("--league-role", default="main")
+    ap.add_argument("--no-served", dest="served", action="store_false")
     args = ap.parse_args()
     print(render(signature=args.signature, learners=args.learners,
                  inf_servers=args.inf_servers,
                  actors_per_learner=args.actors_per_learner,
-                 model_pools=args.model_pools, env=args.env, arch=args.arch))
+                 env=args.env, arch=args.arch, league_spec=args.league_spec,
+                 league_role=args.league_role, served=args.served))
 
 
 if __name__ == "__main__":

@@ -4,7 +4,7 @@ Wires LeagueMgr + ModelPool + HyperMgr + GameMgr + Actors + Learner and runs
 learning periods with freezes — the same modules the k8s deployment would
 run as services (launch/k8s.py renders that spec).
 
-Two execution modes:
+Three execution modes:
 
   * **async (default with `--league-spec`)** — the event-driven
     `repro.league.runtime`: every Actor and Learner on its own thread, a
@@ -12,12 +12,22 @@ Two execution modes:
   * **sync (`--sync`, or no spec)** — the legacy lockstep nested loop with
     fixed `--periods x --steps` freezes; bit-deterministic under a fixed
     seed, kept as the determinism oracle for the async runtime.
+  * **multiprocess (`--workers N`, or one `--role` per process)** — the
+    thread seams as real process boundaries over the
+    `repro.distributed.transport` RPC layer (the paper's §3.4 layout):
+    `--workers N` forks one learner process per role plus N actor
+    processes from a parent coordinator; alternatively run each role
+    yourself with `--role {coordinator,learner,actor,infserver}
+    --connect host:port`. Add `--served --sharded` for a mesh-sharded
+    shared InfServer.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --env pommerman_lite \
       --arch tleague-policy-s --game-mgr sp_pfsp --periods 3 --steps 20
   PYTHONPATH=src python -m repro.launch.train --env rps \
       --league-spec examples/league_specs/main_minimax.json --max-seconds 10
+  PYTHONPATH=src python -m repro.launch.train --env rps --workers 2 \
+      --league-spec examples/league_specs/main_minimax.json --max-seconds 20
 """
 from __future__ import annotations
 
@@ -165,6 +175,58 @@ def run_league_training_async(spec, *, env_name="pommerman_lite",
     return runtime.league, runtime, report
 
 
+def _main_distributed(args, spec):
+    """Dispatch the multiprocess modes (`--workers` / `--role`) onto
+    `repro.launch.distributed`. Worker roles read the coordinator endpoint
+    from `--connect` or the `LEAGUE_MGR_EP` env var (the name the k8s
+    renderer injects; a `tcp://` scheme prefix is accepted and stripped)."""
+    import os
+
+    from repro.launch import distributed as dist
+
+    def endpoint():
+        ep = args.connect or os.environ.get("LEAGUE_MGR_EP", "")
+        assert ep, f"--role {args.role} needs --connect or $LEAGUE_MGR_EP"
+        return ep.removeprefix("tcp://")
+
+    if args.workers is not None:
+        assert args.role is None, "--workers spawns its own --role children"
+        assert spec is not None, "--workers needs --league-spec"
+        report = dist.run_multiprocess(
+            spec, workers=args.workers, env_name=args.env, arch=args.arch,
+            loss=args.loss, num_envs=args.num_envs,
+            unroll_len=args.unroll_len, lr=args.lr, seed=args.seed,
+            served=args.served, sharded=args.sharded, pbt=args.pbt,
+            max_seconds=args.max_seconds, max_steps_per_role=args.max_steps)
+        print(json.dumps(report, indent=1, default=str))
+        assert report["clean_shutdown"], (
+            f"worker exit codes: {report['worker_exit_codes']}")
+    elif args.role == "coordinator":
+        assert spec is not None, "--role coordinator needs --league-spec"
+        report = dist.run_coordinator(
+            spec, env_name=args.env, arch=args.arch, seed=args.seed,
+            served=args.served, sharded=args.sharded, pbt=args.pbt,
+            bind=args.bind, max_seconds=args.max_seconds,
+            max_steps_per_role=args.max_steps)
+        print(json.dumps(report, indent=1, default=str))
+    elif args.role == "learner":
+        dist.run_learner(args.league_role, endpoint(), env_name=args.env,
+                         arch=args.arch, loss=args.loss, lr=args.lr,
+                         seed=args.seed, num_envs=args.num_envs,
+                         unroll_len=args.unroll_len, data_bind=args.bind,
+                         advertise=args.advertise)
+    elif args.role == "actor":
+        dist.run_actor(args.league_role, endpoint(),
+                       actor_index=args.actor_index, env_name=args.env,
+                       arch=args.arch, num_envs=args.num_envs,
+                       unroll_len=args.unroll_len, seed=args.seed,
+                       served=args.served)
+    elif args.role == "infserver":
+        dist.run_infserver(endpoint(), env_name=args.env, arch=args.arch,
+                           seed=args.seed, sharded=args.sharded,
+                           bind=args.bind, advertise=args.advertise)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--env", default="pommerman_lite")
@@ -195,9 +257,46 @@ def main():
     ap.add_argument("--max-freezes", type=int, default=None,
                     help="async runtime: stop once every role froze this "
                          "many times")
+    ap.add_argument("--max-steps", type=int, default=None,
+                    help="multiprocess mode: stop once every role's learner "
+                         "reported this many steps")
+    # -- multiprocess / distributed flags (repro.launch.distributed) ---------
+    ap.add_argument("--workers", type=int, default=None,
+                    help="spawn a multiprocess league: one learner process "
+                         "per role plus N actor processes, this process "
+                         "coordinating over the RPC transport")
+    ap.add_argument("--role", default=None,
+                    choices=["coordinator", "learner", "actor", "infserver"],
+                    help="run exactly one league role in this process "
+                         "(pair with --connect, or --bind for coordinator)")
+    ap.add_argument("--league-role", default="main",
+                    help="--role learner/actor: which LeagueSpec role this "
+                         "process works for")
+    ap.add_argument("--actor-index", type=int, default=0,
+                    help="--role actor: index for seeding/telemetry")
+    ap.add_argument("--connect", default=None,
+                    help="coordinator endpoint host:port (worker roles); "
+                         "defaults to $LEAGUE_MGR_EP")
+    ap.add_argument("--bind", default="127.0.0.1:0",
+                    help="listen address for the socket this role serves "
+                         "(coordinator: league RPC; learner: its "
+                         "DataServer; infserver: the serving RPC). Bind "
+                         "0.0.0.0 for multi-host layouts — a wildcard "
+                         "bind is advertised to peers as this hostname")
+    ap.add_argument("--advertise", default=None,
+                    help="--role learner/infserver: address to register "
+                         "with the coordinator instead of the bound "
+                         "socket (k8s: the Service DNS name, so replicas "
+                         "load-balance and restarts keep the address)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="with --served: shard the InfServer's grouped "
+                         "forward over the local ('data','model') mesh")
     args = ap.parse_args()
 
     spec = LeagueSpec.from_json(args.league_spec) if args.league_spec else None
+    if args.workers is not None or args.role is not None:
+        _main_distributed(args, spec)
+        return
     if spec is not None and not args.sync:
         league, _, report = run_league_training_async(
             spec, env_name=args.env, arch=args.arch, loss=args.loss,

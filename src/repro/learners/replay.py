@@ -134,6 +134,12 @@ class DataServer:
         self._cond.notify_all()
 
     def put(self, traj) -> None:
+        """Unconditional ring write: never blocks (lock only) and never
+        fails for capacity — old rows are overwritten, which in blocking
+        (on-policy) mode can bury frames the learner never saw. Producers
+        that must not lose frames use `put_when_room`. The segment is
+        COPIED into the preallocated ring (np.copyto), so the caller's
+        arrays stay the caller's."""
         with self._cond:
             self._write_rows(self._leaves(traj))
 
@@ -142,8 +148,12 @@ class DataServer:
         segment fits without burying frames the learner has not consumed)
         and the ring write happen under ONE lock hold, so concurrent
         producers can never jointly overshoot capacity — a separate
-        check-then-put would re-release the lock between the two. Returns
-        False (nothing written) on timeout."""
+        check-then-put would re-release the lock between the two.
+
+        MAY BLOCK up to `timeout` (forever when None) waiting for the
+        learner to consume; returns False (nothing written) on timeout.
+        This is the actor-side backpressure edge: a slow learner throttles
+        every producer that uses this call."""
         with self._cond:
             leaves = self._leaves(traj)
             frames = leaves[0].shape[0] * self._frames_per_row
@@ -195,7 +205,11 @@ class DataServer:
 
     def sample(self, batch_rows: Optional[int] = None):
         """Most-recent segment when blocking (on-policy); a uniform
-        vectorized row gather otherwise. Host (NumPy) arrays."""
+        vectorized row gather otherwise. Host (NumPy) arrays. Never
+        blocks — asserts non-empty instead (gate on `ready()` /
+        `wait_ready` first). The gather COPIES out of the ring, so the
+        returned batch is the caller's own (donation-safe) and later
+        `put`s can never mutate it."""
         with self._cond:
             assert self._size > 0, "DataServer empty"
             idx = self._sample_idx(batch_rows)

@@ -1,0 +1,314 @@
+"""Process-boundary transport (ISSUE 4): codec round trips, one RPC
+round trip per league seam (pool pull/push, league request/report,
+infserver submit/poll, dataserver put), killed-server error propagation,
+and sharded-vs-single-device InfServer forward parity (local mesh
+in-process; a forced multi-device CPU mesh in a subprocess)."""
+import subprocess
+import sys
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import LeagueMgr, MatchResult, ModelKey
+from repro.core.types import FreezeGate, Hyperparam, Task
+from repro.distributed import transport as tp
+from repro.infserver import InfServer
+from repro.launch.mesh import make_local_mesh
+from repro.learners import DataServer
+from repro.models import init_params
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("tleague-policy-s")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.fixture()
+def league(params):
+    lg = LeagueMgr()
+    lg.add_learning_agent("main", params, gate=FreezeGate(step_gate=2))
+    return lg
+
+
+# -- codec -------------------------------------------------------------------
+def test_codec_roundtrip_protocol_types():
+    task = Task(ModelKey("main", 3), (ModelKey("opp", 1), ModelKey("opp", 2)),
+                Hyperparam(learning_rate=1e-3), task_id=7)
+    msg = {
+        "task": task,
+        "result": MatchResult(task.learner_key, task.opponent_keys, -1, 9),
+        "gate": FreezeGate(winrate=0.6, step_gate=None),
+        "arr_f32": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "arr_bool": np.array([True, False]),
+        "nested_tuple": (1, ("a", 2.5), None),
+        "pytree": {"w": np.ones((2, 2)), "b": np.zeros((2,))},
+    }
+    out = tp.unpackb(tp.packb(msg))
+    assert out["task"] == task
+    assert out["result"].outcome == -1
+    assert out["gate"] == msg["gate"]
+    assert out["nested_tuple"] == msg["nested_tuple"]
+    assert isinstance(out["nested_tuple"], tuple)
+    np.testing.assert_array_equal(out["arr_f32"], msg["arr_f32"])
+    assert out["arr_f32"].dtype == np.float32
+    np.testing.assert_array_equal(out["arr_bool"], msg["arr_bool"])
+    np.testing.assert_array_equal(out["pytree"]["w"], msg["pytree"]["w"])
+
+
+def test_codec_jax_arrays_become_numpy():
+    out = tp.unpackb(tp.packb({"x": jax.numpy.arange(4)}))
+    assert isinstance(out["x"], np.ndarray)
+    np.testing.assert_array_equal(out["x"], np.arange(4))
+
+
+# -- per-seam RPC round trips ------------------------------------------------
+def test_model_pool_seam_roundtrip(league, params):
+    with tp.serve_league(league) as srv:
+        pool = tp.ModelPoolClient(srv.address)
+        key = ModelKey("main", 0)
+        pulled = pool.pull(key)
+        # remote pull is a snapshot by construction: fresh numpy buffers
+        for a, b in zip(jax.tree.leaves(pulled), jax.tree.leaves(params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+            assert isinstance(a, np.ndarray)
+        pool.push(key, pulled, step=5)
+        assert pool.pull_attr(key) == {"step": 5, "frozen": False}
+        assert key in pool and ModelKey("ghost", 9) not in pool
+        assert pool.membership_version == league.model_pool.membership_version
+
+
+def test_league_seam_roundtrip(league):
+    with tp.serve_league(league) as srv:
+        lg = tp.LeagueMgrClient(srv.address)
+        task = lg.request_task("main")
+        assert isinstance(task, Task) and task.learner_key == ModelKey("main", 0)
+        lg.report_result(MatchResult(task.learner_key, task.opponent_keys, 1, 3))
+        wr, games = lg.pool_winrate("main")
+        assert games >= 0.0
+        assert lg.should_freeze("main", 0) is None          # step_gate=2
+        assert lg.should_freeze("main", 2) == "step_gate@2"
+        assert lg.frozen_pool == [ModelKey("main", 0)]
+        # a freeze through the wire: params cross as msgpack pytrees
+        new_key = lg.end_learning_period("main", lg.model_pool.pull(task.learner_key),
+                                         reason="test")
+        assert new_key == ModelKey("main", 1)
+        assert lg.league_state()["agents"]["main"] == "main:0001"
+        # the lazy agents view: one cheap current_model_key RPC, shaped
+        # like the in-process registry for Learner.current_key
+        assert lg.agents["main"].current == ModelKey("main", 1)
+
+
+def test_infserver_seam_roundtrip(cfg, params):
+    server = InfServer(cfg, 6, max_batch=64)
+    league = LeagueMgr()
+    league.add_learning_agent("main", params)
+    with tp.serve_league(league, server) as srv:
+        client = tp.InfServerClient(tp.RpcClient(srv.address))
+        client.register_model("theta", params)
+        client.ensure_model("phi", params)
+        obs = np.zeros((3, 26), np.int32)
+        t1 = client.submit(obs, model="theta")
+        t2 = client.submit(obs, model="phi")
+        assert not client.poll(t1.tid)
+        client.flush()                       # θ and φ share one grouped batch
+        assert client.poll(t1.tid)
+        a1, logp1, v1 = client.get(t1)
+        a2, _, _ = client.get(t2)
+        assert a1.shape == a2.shape == (3,)
+        assert logp1.shape == v1.shape == (3,)
+        assert client.stats()["models_hosted"] == 2
+        assert client.evict_model("phi")
+
+
+def test_infserver_rpc_matches_local(cfg, params):
+    """The same observations through the in-process server and through the
+    RPC client must produce identical outputs (same seed, same routes)."""
+    obs = (np.arange(2 * 26).reshape(2, 26) % 16).astype(np.int32)
+
+    def round_trip(get_server):
+        server = InfServer(cfg, 6, params, max_batch=64, seed=13)
+        with tp.serve_league(LeagueMgr(), server) as srv:
+            s = get_server(server, srv)
+            return s.get(s.submit(obs))
+
+    local = round_trip(lambda server, srv: server)
+    remote = round_trip(
+        lambda server, srv: tp.InfServerClient(tp.RpcClient(srv.address)))
+    for a, b in zip(local, remote):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_data_seam_roundtrip_and_backpressure():
+    rows, T = 4, 8
+    traj = {"obs": np.zeros((rows, T, 26), np.int32),
+            "actions": np.zeros((rows, T), np.int32)}
+    ds = DataServer(capacity_frames=rows * T, blocking=True)
+    with tp.RpcServer({"data": ds}) as srv:
+        client = tp.DataServerClient(srv.address)
+        assert client.put_when_room(traj, timeout=1.0)
+        assert client.ready() and ds.num_rows == rows
+        # ring full of unconsumed frames: backpressure crosses the boundary
+        assert not client.put_when_room(traj, timeout=0.1)
+        ds.sample()                              # learner-side consume frees room
+        assert client.put_when_room(traj, timeout=1.0)
+        assert client.throughput()["rfps"] > 0
+
+
+def test_killed_server_error_propagation(league):
+    srv = tp.serve_league(league)
+    lg = tp.LeagueMgrClient(srv.address)
+    assert lg.request_task("main").task_id == 0      # connection established
+    srv.close()
+    with pytest.raises(tp.TransportError):
+        lg.request_task("main")
+    # a client that never could connect also raises TransportError
+    dead = tp.RpcClient("127.0.0.1:1", connect_retries=1, retry_delay_s=0.01)
+    with pytest.raises(tp.TransportError):
+        dead.call("league.request_task", "main")
+
+
+def test_remote_exception_carries_server_traceback(league):
+    with tp.serve_league(league) as srv:
+        lg = tp.LeagueMgrClient(srv.address)
+        with pytest.raises(tp.RemoteError) as ei:
+            lg.request_task("nonexistent-agent")
+        assert "KeyError" in str(ei.value)
+        assert "request_task" in ei.value.remote_tb
+
+
+def test_unserializable_reply_is_remote_error_not_disconnect(league):
+    """A result the codec rejects (here: the live PayoffMatrix object via
+    an attribute read) must come back as RemoteError and leave the
+    connection usable — not kill it, which clients would misread as a
+    server shutdown."""
+    with tp.serve_league(league) as srv:
+        lg = tp.LeagueMgrClient(srv.address)
+        with pytest.raises(tp.RemoteError):
+            lg._call("payoff")
+        assert lg.request_task("main").learner_key == ModelKey("main", 0)
+
+
+def test_infserver_discard_and_backend_ticket_bound(cfg, params):
+    server = InfServer(cfg, 6, params, max_batch=64)
+    obs = np.zeros((2, 26), np.int32)
+    # discard before flush: the queued rows are dropped from the batch
+    t = server.submit(obs)
+    server.discard(t)
+    assert server.queue_depth == 0
+    # discard after flush: the resolved result is dropped
+    t = server.submit(obs)
+    server.flush()
+    server.discard(t)
+    with pytest.raises(KeyError):
+        server.get(t)
+    # the RPC backend evicts the oldest outstanding ticket beyond its cap
+    backend = tp.InfServerBackend(server, max_outstanding=2)
+    tids = [backend.submit(obs) for _ in range(3)]
+    backend.flush()
+    with pytest.raises(KeyError):
+        backend.get(tids[0])             # evicted
+    for tid in tids[1:]:
+        a, _, _ = backend.get(tid)
+        assert a.shape == (2,)
+
+
+def test_rpc_server_concurrent_clients(league):
+    """N threads, each with its own connection, hammering one seam: the
+    backend lock serializes them and every reply routes to its caller."""
+    with tp.serve_league(league) as srv:
+        results = [None] * 8
+
+        def worker(i):
+            lg = tp.LeagueMgrClient(srv.address)
+            results[i] = [lg.request_task("main").task_id for _ in range(5)]
+
+        threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=30.0)
+        ids = [tid for r in results for tid in r]
+        assert len(ids) == len(set(ids)) == 40   # every task id unique
+
+
+# -- sharded serving parity --------------------------------------------------
+def test_sharded_forward_parity_local_mesh(cfg, params):
+    """ISSUE 4 acceptance: sharded forward matches single-device output
+    <=1e-4 (exact here) on the make_local_mesh CPU mesh, single and
+    grouped (θ+φ) paths."""
+    obs_a = (np.arange(5 * 26).reshape(5, 26) % 16).astype(np.int32)
+    obs_b = (np.arange(3 * 26).reshape(3, 26) % 16).astype(np.int32)
+
+    def run(mesh):
+        s = InfServer(cfg, 6, max_batch=64, seed=3, mesh=mesh)
+        s.register_model("theta", params)
+        out = [s.get(s.submit(obs_a, model="theta"))]
+        s.register_model("phi", params)
+        t1, t2 = s.submit(obs_a, model="theta"), s.submit(obs_b, model="phi")
+        s.flush()
+        out += [s.get(t1), s.get(t2)]
+        return out
+
+    single, sharded = run(None), run(make_local_mesh())
+    err = max(float(np.max(np.abs(np.asarray(a, np.float64)
+                                  - np.asarray(b, np.float64))))
+              for ra, rb in zip(single, sharded) for a, b in zip(ra, rb))
+    assert err <= 1e-4, f"sharded/single parity {err} > 1e-4"
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
+import jax, numpy as np
+assert len(jax.devices()) == 4
+from repro.configs import get_arch
+from repro.infserver import InfServer
+from repro.launch.mesh import make_local_mesh
+from repro.models import init_params
+
+cfg = get_arch('tleague-policy-s')
+params = init_params(jax.random.PRNGKey(0), cfg)
+obs = (np.arange(5 * 26).reshape(5, 26) % 16).astype(np.int32)
+obs2 = (np.arange(3 * 26).reshape(3, 26) % 16).astype(np.int32)
+
+def run(mesh):
+    s = InfServer(cfg, 6, max_batch=64, seed=3, mesh=mesh)
+    s.register_model('theta', params)
+    s.register_model('phi', params)
+    t1, t2 = s.submit(obs, model='theta'), s.submit(obs2, model='phi')
+    s.flush()
+    return [s.get(t1), s.get(t2)]
+
+single, sharded = run(None), run(make_local_mesh())
+err = max(float(np.max(np.abs(np.asarray(a, np.float64)
+                              - np.asarray(b, np.float64))))
+          for ra, rb in zip(single, sharded) for a, b in zip(ra, rb))
+assert err <= 1e-4, err
+print('SHARDED-PARITY', err)
+"""
+
+
+@pytest.mark.timeout(600)
+def test_sharded_forward_parity_multidevice():
+    """The same parity on a REAL 4-device CPU mesh (data=4), where the
+    batch actually shards. Subprocess: the forced host platform must be
+    set before jax initializes."""
+    import os
+    import pathlib
+
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    pythonpath = os.pathsep.join(
+        p for p in (str(repo / "src"), os.environ.get("PYTHONPATH")) if p)
+    env = dict(os.environ, PYTHONPATH=pythonpath)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                       capture_output=True, text=True, timeout=580, env=env)
+    assert "SHARDED-PARITY" in r.stdout, (r.stdout[-2000:], r.stderr[-2000:])
