@@ -21,6 +21,13 @@ Prints ``name,us_per_call,derived`` CSV.
                         latency/throughput (parity asserted <=1e-4) and
                         in-process vs RPC seam overhead for the league
                         transport; writes BENCH_sharded.json
+  param_plane         — the versioned param plane over RPC: full pull vs
+                        hash-gated no-op pull vs changed-leaves delta
+                        pull, chunked vs monolithic transfer, heartbeat
+                        ping cost; asserts bit-exact parity across the
+                        chunked path and >=50x no-op-vs-full; writes
+                        BENCH_params.json. `--against FILE` re-runs and
+                        fails on regression vs the stored record (CI).
 
 BENCH_*.json records are stamped with the git sha + UTC timestamp and
 written atomically (tmp file + rename), so the bench trajectory files stay
@@ -609,6 +616,133 @@ def sharded_serving(out_path: str | None = None, num_actors: int = 32):
     return record
 
 
+def param_plane(out_path: str | None = None, against: str | None = None,
+                model_mb: int = 64):
+    """ISSUE 5 acceptance: what a `pool_pull` costs over RPC under the
+    versioned param plane. One synthetic ~`model_mb` MB pytree is hosted
+    in a ModelPool behind the transport; measured per axis:
+
+      * full pull        — the pre-param-plane contract (ship everything)
+      * no-op pull       — `pull_if_changed` at the current version: one
+                           NotModified tag (the >=50x headline)
+      * delta pull       — one small leaf changed: only it crosses
+      * chunked vs monolithic — the same full pull with streaming
+                           transfer disabled (one giant msgpack frame)
+      * heartbeat ping   — the liveness channel's per-probe cost
+
+    Pulled params are asserted BIT-EXACT against the pool copy across
+    the chunked path (dtype + bytes). With `against`, the fresh record
+    is compared to a stored BENCH_params.json and a regression (ratio
+    floors below) fails the run — the CI mode."""
+    from repro.core.model_pool import ModelPool
+    from repro.core.types import ModelKey
+    from repro.distributed import transport as tp
+    from repro.distributed.heartbeat import Heartbeat
+
+    # read the reference BEFORE the run overwrites it (the CI invocation
+    # passes the same BENCH_params.json path this bench writes)
+    prior = (json.loads(pathlib.Path(against).read_text())
+             if against else None)
+    rng = np.random.default_rng(7)
+    n_layers = max(1, model_mb // 4)
+    params = {f"layer{i}": {"w": rng.normal(size=(1024, 1024)).astype(np.float32),
+                            "b": rng.normal(size=(1024,)).astype(np.float32)}
+              for i in range(n_layers)}
+    nbytes = sum(a.nbytes for lyr in params.values() for a in lyr.values())
+
+    pool = ModelPool(snapshot_on_pull=True)
+    key = ModelKey("bench", 0)
+    pool.push(key, params)
+    hb = Heartbeat().start_beating(0.5)
+    srv = tp.RpcServer({"pool": pool, "ctrl": hb}).start()
+    raw = tp.RpcClient(srv.address)
+    try:
+        # -- full pull, chunked (default) vs monolithic ----------------------
+        pulled = raw.call("pool.pull", key)
+        for lyr in params:                       # bit-exact across chunks
+            for name, truth in params[lyr].items():
+                got = pulled[lyr][name]
+                assert got.dtype == truth.dtype and np.array_equal(got, truth), \
+                    f"chunked pull not bit-exact at {lyr}/{name}"
+        us_full = _time(lambda: raw.call("pool.pull", key), iters=5)
+        with tp.chunking(threshold=1 << 62):     # never stream: one big frame
+            us_mono = _time(lambda: raw.call("pool.pull", key), iters=5)
+
+        # -- hash-gated no-op pull ------------------------------------------
+        v = pool.version(key)
+        us_noop = _time(lambda: raw.call("pool.pull_if_changed", key, v),
+                        iters=16)
+
+        # -- delta pull: one small leaf changes -----------------------------
+        params2 = dict(params, layer0={"w": params["layer0"]["w"],
+                                       "b": params["layer0"]["b"] + 1.0})
+        pool.push(key, params2)
+        delta = raw.call("pool.pull_if_changed", key, v)
+        assert not delta.full and list(delta.leaves), "expected a leaf delta"
+        rebuilt = tp.apply_delta(pulled, delta.leaves)
+        for lyr in params2:
+            for name, truth in params2[lyr].items():
+                assert np.array_equal(rebuilt[lyr][name], truth), \
+                    f"delta reconstruction not bit-exact at {lyr}/{name}"
+        us_delta = _time(lambda: raw.call("pool.pull_if_changed", key, v),
+                         iters=16)
+
+        # -- heartbeat ------------------------------------------------------
+        us_ping = _time(lambda: raw.call("ctrl.ping"), iters=32)
+    finally:
+        raw.close()
+        srv.close()
+        hb.stop_beating()
+
+    noop_x = us_full / max(us_noop, 1e-9)
+    delta_x = us_full / max(us_delta, 1e-9)
+    chunk_x = us_mono / max(us_full, 1e-9)
+    assert noop_x >= 50, (
+        f"hash-gated no-op pull only {noop_x:.1f}x cheaper than full (<50x)")
+    record = {
+        "model_mb": round(nbytes / 2**20, 1),
+        "codec": tp.CODEC,
+        "full_pull_ms": round(us_full / 1e3, 3),
+        "full_pull_monolithic_ms": round(us_mono / 1e3, 3),
+        "noop_pull_us": round(us_noop, 2),
+        "delta_pull_us": round(us_delta, 2),
+        "heartbeat_ping_us": round(us_ping, 2),
+        "noop_speedup_x": round(noop_x, 1),
+        "delta_speedup_x": round(delta_x, 1),
+        "chunked_speedup_x": round(chunk_x, 3),
+        "pull_parity_bit_exact": True,
+        "pool_pull_stats": dict(pool.pull_stats),
+    }
+    path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_params.json"
+    _write_bench(path, record)
+    _emit("params/full_pull", us_full, f"model_mb={record['model_mb']}")
+    _emit("params/full_pull_monolithic", us_mono,
+          f"chunked_speedup_x={chunk_x:.2f}")
+    _emit("params/noop_pull", us_noop, f"speedup_x={noop_x:.0f}")
+    _emit("params/delta_pull", us_delta, f"speedup_x={delta_x:.0f}")
+    _emit("params/heartbeat_ping", us_ping, f"wrote={path.name}")
+    if prior is not None:
+        _check_against(record, prior, against,
+                       floors={"noop_speedup_x": (50.0, 0.4),
+                               "delta_speedup_x": (5.0, 0.4)})
+    return record
+
+
+def _check_against(record: dict, prior: dict, label: str,
+                   floors: dict) -> None:
+    """Regression gate: each metric must clear its absolute floor AND a
+    fraction of the stored record's value (runner classes differ, so the
+    relative bar is loose). Raises AssertionError on regression."""
+    failures = []
+    for metric, (absolute, rel) in floors.items():
+        bar = max(absolute, rel * float(prior.get(metric, 0.0)))
+        if float(record[metric]) < bar:
+            failures.append(f"{metric}: {record[metric]} < {bar:.1f} "
+                            f"(prior {prior.get(metric)})")
+    assert not failures, f"bench regression vs {label}: " + "; ".join(failures)
+    _emit("params/regression_check", 0.0, f"ok_vs={label}")
+
+
 def kernels():
     from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
     k = jax.random.PRNGKey(0)
@@ -631,18 +765,33 @@ def kernels():
 
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "infserver_throughput", "learner_throughput", "league_throughput",
-           "sharded_serving", "kernels", "fig4_winrate", "table12_league_eval")
+           "sharded_serving", "param_plane", "kernels", "fig4_winrate",
+           "table12_league_eval")
 
 
 def main() -> None:
-    """`python benchmarks/run.py [bench ...]` — no args runs everything."""
-    chosen = sys.argv[1:] or list(BENCHES)
+    """`python benchmarks/run.py [bench ...]` — no args runs everything.
+    `--against FILE` (with a bench that supports it, e.g. param_plane)
+    re-runs and fails on regression vs the stored record."""
+    argv = list(sys.argv[1:])
+    against = None
+    if "--against" in argv:
+        i = argv.index("--against")
+        assert i + 1 < len(argv), "--against needs a FILE argument"
+        against = argv[i + 1]
+        del argv[i:i + 2]
+        assert "param_plane" in argv, \
+            "--against is only supported with an explicit param_plane bench"
+    chosen = argv or list(BENCHES)
     unknown = [n for n in chosen if n not in BENCHES]
     assert not unknown, f"unknown benches {unknown}; pick from {BENCHES}"
     print("name,us_per_call,derived", flush=True)
     for name in chosen:
-        globals()[name]()
-    if sys.argv[1:]:
+        if name == "param_plane" and against:
+            param_plane(against=against)
+        else:
+            globals()[name]()
+    if argv:
         return
     # roofline table (from dry-run artifacts, if present)
     try:

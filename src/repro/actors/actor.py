@@ -13,6 +13,15 @@ Two inference modes:
     the central continuous-batching InfServer (SEED-style), with θ and φ
     hosted as separate routes of one grouped forward. The Actor keeps the
     server's routes fresh from the ModelPool before each segment.
+
+Parameter sync rides the param plane (`repro.params`): θ and φ are
+pulled through a `CachedPuller`, so a segment whose models did not
+change costs one `NotModified` tag per key instead of a full pytree
+copy (and, against a remote pool, zero param bytes on the wire), while
+a Learner publish ships only the changed leaves. The served refresh is
+hash-gated end to end: `update_params`/`ensure_model` carry the
+manifest's `tree_hash`, so the InfServer no-ops identical swaps and a
+remote server is not even sent the params (`has_model` probe).
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ import numpy as np
 from repro.actors.rollout import build_rollout, build_served_rollout
 from repro.core import LeagueMgr, MatchResult
 from repro.envs.base import MultiAgentEnv
+from repro.params import CachedPuller
 
 
 class Actor:
@@ -43,6 +53,10 @@ class Actor:
                 learner_slots=learner_slots)
         self.rng = jax.random.PRNGKey(seed)
         self.carry = None
+        # version-cached pulls: unchanged models cost a NotModified tag,
+        # Learner publishes arrive as changed-leaf deltas
+        self._puller = CachedPuller(league.model_pool)
+        self._theta_key = None        # current lineage key (cache eviction)
         self._served_theta_key = None
         self._evict_backlog = set()   # routes declined while requests pending
         self.num_envs, self.unroll_len = num_envs, unroll_len
@@ -55,46 +69,74 @@ class Actor:
     def run_segment(self):
         """One Task -> one unroll segment. Returns the learner trajectory."""
         task = self.league.request_task(self.agent_id)
-        theta = self.league.model_pool.pull(task.learner_key)
-        phi = self.league.model_pool.pull(task.opponent_keys[0])
+        # the lineage advanced: drop the superseded theta's cache entry —
+        # it is only ever pulled again if it froze into the pool and comes
+        # back as somebody's φ (one full re-pull then). Opponent entries
+        # stay cached and track pool size, the same growth contract as the
+        # ModelPool itself.
+        if self._theta_key is not None and self._theta_key != task.learner_key:
+            self._puller.drop(self._theta_key)
+        self._theta_key = task.learner_key
+        theta, theta_man = self._puller.get_with_manifest(task.learner_key)
+        phi, phi_man = self._puller.get_with_manifest(task.opponent_keys[0])
         if self.carry is None:
             self.carry = self.init_carry(self._next_rng())
         if self.inf_server is None:
             self.carry, traj, episodes = self.rollout(theta, phi, self.carry,
                                                       self._next_rng())
         else:
-            # refresh the server's routes from the pool: θ hot-swaps every
-            # segment (the Learner keeps pushing), frozen φ registers once;
-            # evict the previous lineage route when θ's key advances so the
-            # registry doesn't grow by one model per learning period
-            prev = self._served_theta_key
-            if prev is not None and prev != task.learner_key:
-                self._evict_backlog.add(prev)
-            self._evict_backlog.discard(task.learner_key)
-            self._evict_backlog.discard(task.opponent_keys[0])
-            # a superseded theta that froze into the pool is now a
-            # legitimate opponent route other workers may be mid-segment
-            # on — keep it hosted (the registry then tracks pool size, the
-            # same growth as the ModelPool itself); evict_model declines
-            # (returns False) while requests are queued for the route, so
-            # whatever remains is retried next segment
-            # frozen_pool is read ONCE per segment: against a remote
-            # LeagueMgrClient the attribute is a full RPC, so per-element
-            # evaluation inside the comprehension would multiply round trips
-            frozen = set(self.league.frozen_pool)
-            self._evict_backlog = {
-                k for k in self._evict_backlog
-                if k not in frozen
-                and not self.inf_server.evict_model(k)}
-            self._served_theta_key = task.learner_key
-            self.inf_server.update_params(theta, key=task.learner_key)
-            self.inf_server.ensure_model(task.opponent_keys[0], phi)
+            self._maybe_refresh_served(task, theta, theta_man, phi, phi_man)
             self.carry, traj, episodes = self.rollout(
                 self.inf_server, task.learner_key, task.opponent_keys[0],
                 self.carry, self._next_rng())
         self._report(task, episodes)
         self.frames_produced += self.num_envs * self.unroll_len
         return traj, task
+
+    def _maybe_refresh_served(self, task, theta, theta_man, phi, phi_man):
+        """Refresh the shared InfServer's routes from the pool: θ
+        hot-swaps whenever its content actually changed (the Learner
+        keeps pushing), frozen φ registers once; evict the previous
+        lineage route when θ's key advances so the registry doesn't grow
+        by one model per learning period.
+
+        Hash-gated (param plane): every refresh carries the manifest's
+        `tree_hash` + pool version, so the server no-ops identical
+        content (whoever delivered it first) instead of re-uploading and
+        re-sharding, and drops stale-version stragglers. Against a
+        remote server the `InfServerClient` probes `has_model` first, so
+        a gated refresh never ships the bytes — the calls below stay
+        unconditional on purpose: the probe doubles as the route
+        EXISTENCE check, re-registering a route another actor evicted
+        (skipping based on this actor's memory alone would race that
+        eviction)."""
+        prev = self._served_theta_key
+        if prev is not None and prev != task.learner_key:
+            self._evict_backlog.add(prev)
+        self._evict_backlog.discard(task.learner_key)
+        self._evict_backlog.discard(task.opponent_keys[0])
+        # a superseded theta that froze into the pool is now a
+        # legitimate opponent route other workers may be mid-segment
+        # on — keep it hosted (the registry then tracks pool size, the
+        # same growth as the ModelPool itself); evict_model declines
+        # (returns False) while requests are queued for the route, so
+        # whatever remains is retried next segment
+        # frozen_pool is read ONCE per segment: against a remote
+        # LeagueMgrClient the attribute is a full RPC, so per-element
+        # evaluation inside the comprehension would multiply round trips
+        frozen = set(self.league.frozen_pool)
+        self._evict_backlog = {
+            k for k in self._evict_backlog
+            if k not in frozen
+            and not self.inf_server.evict_model(k)}
+        self._served_theta_key = task.learner_key
+        self.inf_server.update_params(
+            theta, key=task.learner_key,
+            content_hash=theta_man.tree_hash if theta_man else None,
+            version=theta_man.version if theta_man else None)
+        self.inf_server.ensure_model(
+            task.opponent_keys[0], phi,
+            content_hash=phi_man.tree_hash if phi_man else None)
 
     def _report(self, task, episodes):
         done = np.asarray(episodes["done"])      # (T, E)

@@ -7,27 +7,46 @@ params (Actors pull theta and phi periodically; the Learner pushes theta),
 `freeze` at learning-period end (theta joins the opponent pool M), and a
 replica-pick hook preserved so the microservice semantics stay visible.
 
+The pool is also the mint of the **param plane** (`repro.params`): every
+push bumps a monotonic per-key `version`, and the first consumer that
+asks gets a `ParamManifest` (per-leaf content hashes) for it — computed
+lazily and cached per version, so a run that never syncs by version (the
+`--sync` loop) never pays for hashing. `pull_if_changed(key,
+have_version)` is the hash-gated pull: `NotModified` when the caller is
+current, a changed-leaves `ParamDelta` when the server still holds the
+manifest of the caller's version (a bounded history), a full pytree
+otherwise.
+
 Concurrency contract (the async league runtime hits this from every
 worker thread):
 
 * every operation is serialized under one lock — push/pull/freeze are
-  linearizable;
-* `snapshot_on_pull=True` makes `pull` return a deep copy of the stored
-  pytree, so no caller can ever alias a buffer that another thread later
-  hands to a donating train step (the PR 1 aliasing-bug class). Callers
-  can override per call with `pull(key, copy=...)`.
+  linearizable, and a `pull_if_changed` can never observe a version
+  whose params it does not also see;
+* `snapshot_on_pull=True` makes `pull` (and the leaves of a
+  `ParamDelta`) return deep copies of the stored pytree, so no caller
+  can ever alias a buffer that another thread later hands to a donating
+  train step (the PR 1 aliasing-bug class). Callers can override per
+  call with `copy=...`.
 * `membership_version` bumps whenever the key set changes — cheap
   signatures for callers (LeagueMgr's opponent cache) that want to
   revalidate membership incrementally instead of rescanning per task.
+  Per-key `version` counters are independent of it: re-pushing an
+  existing key bumps that key's version but not `membership_version`.
 """
 from __future__ import annotations
 
+import collections
 import random
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Union
 
 from repro.core.types import ModelKey
+from repro.params.manifest import (NotModified, ParamDelta, ParamManifest,
+                                   build_manifest, flatten_with_paths)
 from repro.utils.pytree import tree_copy
+
+_MANIFEST_HISTORY = 16       # past manifests kept per key (hashes only)
 
 
 class ModelPool:
@@ -40,8 +59,13 @@ class ModelPool:
         self._params: Dict[ModelKey, Any] = {}
         self._frozen: Dict[ModelKey, bool] = {}
         self._step: Dict[ModelKey, int] = {}
+        self._versions: Dict[ModelKey, int] = {}          # monotonic per key
+        self._manifest: Dict[ModelKey, ParamManifest] = {}  # current, lazy
+        self._history: Dict[ModelKey, "collections.OrderedDict[int, ParamManifest]"] = {}
         self.membership_version = 0          # bumps when the key set changes
         self.read_counts = [0] * self.num_replicas  # replica load-balance bookkeeping
+        # param-plane telemetry: how pulls were actually served
+        self.pull_stats = {"full": 0, "delta": 0, "noop": 0}
 
     def _pick_replica(self) -> int:
         r = self._rng.randrange(self.num_replicas)
@@ -51,14 +75,17 @@ class ModelPool:
     # -- API (paper protocol) -------------------------------------------------
     # Contract: every method here takes the pool lock and returns without
     # waiting on anything else — no pool call ever blocks beyond lock
-    # contention (there is no capacity limit to wait on).
+    # contention (there is no capacity limit to wait on). Manifest hashing
+    # happens lazily under the lock, once per (key, version), on the first
+    # call that needs it.
 
     def push(self, key: ModelKey, params: Any, step: int = 0) -> None:
-        """Store `params` under `key`. Never blocks (lock only). The stored
-        object is the caller's pytree, LIVE — the pool does not copy on
-        push, so callers must hand over a snapshot if they keep mutating
-        (the Learner's `_snapshot` does exactly that) and must never push
-        buffers a donating train step may later consume."""
+        """Store `params` under `key` and bump its version. Never blocks
+        (lock only). The stored object is the caller's pytree, LIVE — the
+        pool does not copy on push, so callers must hand over a snapshot
+        if they keep mutating (the Learner's `_snapshot` does exactly
+        that) and must never push buffers a donating train step may later
+        consume."""
         with self._lock:
             if self._frozen.get(key):
                 raise ValueError(f"model {key} is frozen; push refused")
@@ -66,6 +93,8 @@ class ModelPool:
                 self.membership_version += 1
             self._params[key] = params
             self._step[key] = step
+            self._versions[key] = self._versions.get(key, -1) + 1
+            self._manifest.pop(key, None)    # re-minted lazily on next ask
 
     def pull(self, key: ModelKey, copy: Optional[bool] = None) -> Any:
         """Read `key`'s params. Never blocks (lock only). Snapshot vs live:
@@ -75,20 +104,82 @@ class ModelPool:
         to a donating train step. Raises KeyError for unknown keys."""
         with self._lock:
             self._pick_replica()
+            self.pull_stats["full"] += 1
             params = self._params[key]
             if self.snapshot_on_pull if copy is None else copy:
                 params = tree_copy(params)
             return params
 
-    def pull_attr(self, key: ModelKey) -> dict:
-        """Metadata snapshot (step counter, frozen flag); non-blocking."""
+    def pull_if_changed(self, key: ModelKey,
+                        have_version: Optional[int] = None,
+                        copy: Optional[bool] = None
+                        ) -> Union[NotModified, ParamDelta]:
+        """The hash-gated pull. With `have_version` equal to the current
+        version the answer is a `NotModified` tag (nothing else moves).
+        Otherwise a `ParamDelta`: changed leaves only, when the manifest
+        of `have_version` is still in the bounded per-key history (it is
+        whenever the caller obtained that version through this method);
+        the full pytree when the caller's version is unknown, prehistoric,
+        or the leaf set itself changed. Copy semantics of the returned
+        arrays match `pull`. Raises KeyError for unknown keys."""
         with self._lock:
-            return {"step": self._step.get(key, 0), "frozen": self._frozen.get(key, False)}
+            self._pick_replica()
+            params = self._params[key]          # KeyError for unknown keys
+            man = self._current_manifest_locked(key)
+            if have_version is not None and have_version == man.version:
+                self.pull_stats["noop"] += 1
+                return NotModified(version=man.version)
+            snap = self.snapshot_on_pull if copy is None else copy
+            old = (self._history.get(key, {}).get(have_version)
+                   if have_version is not None else None)
+            if old is not None:
+                changed = man.changed_paths(old)
+                if changed is not None:
+                    self.pull_stats["delta"] += 1
+                    by_path = dict(flatten_with_paths(params))
+                    leaves = {p: (tree_copy(by_path[p]) if snap else by_path[p])
+                              for p in changed}
+                    return ParamDelta(manifest=man, full=False, leaves=leaves)
+            self.pull_stats["full"] += 1
+            return ParamDelta(manifest=man, full=True,
+                              params=tree_copy(params) if snap else params)
+
+    def _current_manifest_locked(self, key: ModelKey) -> ParamManifest:
+        man = self._manifest.get(key)
+        if man is None:
+            man = build_manifest(self._params[key], self._versions[key])
+            self._manifest[key] = man
+            hist = self._history.setdefault(key, collections.OrderedDict())
+            hist[man.version] = man
+            while len(hist) > _MANIFEST_HISTORY:
+                hist.popitem(last=False)
+        return man
+
+    def manifest(self, key: ModelKey) -> ParamManifest:
+        """Current `ParamManifest` for `key` (minted now if needed)."""
+        with self._lock:
+            return self._current_manifest_locked(key)
+
+    def version(self, key: ModelKey) -> int:
+        """Current monotonic version of `key` (no hashing)."""
+        with self._lock:
+            if key not in self._params:
+                raise KeyError(key)
+            return self._versions[key]
+
+    def pull_attr(self, key: ModelKey) -> dict:
+        """Metadata snapshot (step counter, frozen flag, param-plane
+        version); non-blocking."""
+        with self._lock:
+            return {"step": self._step.get(key, 0),
+                    "frozen": self._frozen.get(key, False),
+                    "version": self._versions.get(key, 0)}
 
     def freeze(self, key: ModelKey) -> None:
         """Mark `key` immutable: later `push`es to it raise. Non-blocking;
         the params themselves are not copied — freezing is a write-bar,
-        not a snapshot."""
+        not a snapshot (and its version stops advancing, so every later
+        `pull_if_changed` on it is a NotModified no-op)."""
         with self._lock:
             if key not in self._params:
                 raise KeyError(key)

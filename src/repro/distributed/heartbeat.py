@@ -1,0 +1,174 @@
+"""Coordinator liveness: heartbeats so workers can tell slow from dead.
+
+The transport's failure signal (`TransportError`) only fires when the
+kernel reports the peer gone (RST / closed socket). A coordinator that
+is *wedged* — SIGSTOPped, deadlocked, or on the far side of a network
+partition — keeps its sockets open and workers block forever inside
+`recv`. The heartbeat channel closes that gap:
+
+* **`Heartbeat`** — a monotonic beat counter the coordinator's beater
+  thread bumps every `interval_s`. Served as `ctrl.ping` it is the
+  liveness signal: a busy-but-alive coordinator still advances it (the
+  beater thread needs only the GIL), a dead or frozen one cannot.
+* **`HeartbeatMonitor`** — a worker-side thread with its OWN short-
+  timeout RPC connection (so a slow bulk transfer on the main connection
+  never starves the probe). The coordinator is declared dead only when
+  the counter fails to ADVANCE for `timeout_s` — an unreachable server
+  and a frozen one look identical, a merely slow one does not. On
+  death it runs `on_dead` (typically: set a stop flag and close the
+  worker's blocked RPC clients, which turns their in-flight `recv` into
+  a `TransportError` the worker already treats as clean shutdown).
+* **`probe`** / `python -m repro.distributed.heartbeat ADDR` — a
+  one-shot liveness check (exit 0 alive / 1 dead) that the k8s renderer
+  wires into pod liveness probes.
+
+The same `Heartbeat` object doubles as the in-process channel: the
+league runtime's coordinator thread beats it, and worker threads call
+`stalled(timeout_s)` instead of running monitor threads.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+
+class Heartbeat:
+    """A thread-safe beat counter with wall-age bookkeeping."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0
+        self._t = time.monotonic()
+        self._beater: Optional[threading.Thread] = None
+        self._beater_stop = threading.Event()
+
+    def beat(self) -> int:
+        with self._lock:
+            self._n += 1
+            self._t = time.monotonic()
+            return self._n
+
+    def ping(self) -> int:
+        """The RPC-served read: current beat count."""
+        with self._lock:
+            return self._n
+
+    def age_s(self) -> float:
+        with self._lock:
+            return time.monotonic() - self._t
+
+    def stalled(self, timeout_s: float) -> bool:
+        """True when no beat landed for `timeout_s` — the in-process
+        worker's dead-coordinator test."""
+        return self.age_s() > timeout_s
+
+    # -- background beater ---------------------------------------------------
+    def start_beating(self, interval_s: float = 1.0) -> "Heartbeat":
+        """Bump the counter from a daemon thread every `interval_s`.
+        Idempotent; `stop_beating` (or process exit) ends it."""
+        if self._beater is None:
+            self._beater_stop.clear()
+            self._beater = threading.Thread(
+                target=self._beat_loop, args=(interval_s,),
+                name="heartbeat-beater", daemon=True)
+            self._beater.start()
+        return self
+
+    def _beat_loop(self, interval_s: float):
+        while not self._beater_stop.wait(interval_s):
+            self.beat()
+
+    def stop_beating(self) -> None:
+        if self._beater is not None:
+            self._beater_stop.set()
+            self._beater.join(timeout=5.0)
+            self._beater = None
+
+
+class HeartbeatMonitor(threading.Thread):
+    """Watch a remote heartbeat over the worker's own probe connection.
+
+    Declares the peer dead when `ping` fails to advance for `timeout_s`
+    (transport errors count as no-advance: the monitor keeps retrying —
+    a restarting coordinator that comes back within the window is never
+    declared dead). `on_dead` runs exactly once, then the thread exits.
+    """
+
+    def __init__(self, address: str, *, interval_s: float = 1.0,
+                 timeout_s: float = 10.0, ns: str = "ctrl",
+                 on_dead: Optional[Callable[[], None]] = None):
+        super().__init__(name=f"heartbeat-monitor@{address}", daemon=True)
+        from repro.distributed.transport import RpcClient
+
+        self.address = address
+        self.interval_s = interval_s
+        self.timeout_s = timeout_s
+        self.dead = False
+        self._ns = ns
+        self._on_dead = on_dead
+        self._halt = threading.Event()
+        # short socket timeout: a wedged peer must not wedge the probe
+        self._client = RpcClient(address, timeout=max(2.0, interval_s),
+                                 connect_retries=1, retry_delay_s=0.05)
+
+    def run(self):
+        last_n: Optional[int] = None
+        last_advance = time.monotonic()
+        while not self._halt.is_set():
+            try:
+                n = self._client.call(f"{self._ns}.ping")
+                if n != last_n:
+                    last_n = n
+                    last_advance = time.monotonic()
+            except Exception:             # noqa: BLE001 — ANY probe failure
+                # (TransportError, RemoteError from a version-skewed peer
+                # without ctrl.ping, decode errors) counts as no-advance
+                # and is retried: the monitor thread must never die
+                # silently, or the worker loses wedge detection entirely
+                pass
+            if time.monotonic() - last_advance > self.timeout_s:
+                self.dead = True
+                try:
+                    if self._on_dead is not None:
+                        self._on_dead()
+                finally:
+                    self._client.close()
+                return
+            self._halt.wait(self.interval_s)
+        self._client.close()
+
+    def stop(self) -> None:
+        self._halt.set()
+
+
+def probe(address: str, *, timeout_s: float = 5.0, ns: str = "ctrl") -> bool:
+    """One-shot liveness check: True iff `ns.ping` answers within
+    `timeout_s`. The k8s exec-probe entrypoint."""
+    from repro.distributed.transport import RpcClient
+
+    client = RpcClient(address, timeout=timeout_s, connect_retries=1,
+                       retry_delay_s=0.05)
+    try:
+        client.call(f"{ns}.ping")
+        return True
+    except Exception:                            # noqa: BLE001 — probe is binary
+        return False
+    finally:
+        client.close()
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="liveness probe against a coordinator heartbeat")
+    ap.add_argument("address", help="coordinator host:port")
+    ap.add_argument("--timeout", type=float, default=5.0)
+    args = ap.parse_args()
+    addr = args.address.removeprefix("tcp://")
+    return 0 if probe(addr, timeout_s=args.timeout) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,17 +15,34 @@ client/server wrappers that mirror the in-process seam APIs exactly:
                           / update_params / ensure_model / evict_model
   * `DataServerClient`  — put / put_when_room / wait_ready / throughput
 
-Because every pytree that crosses the wire is freshly deserialized in the
-receiving process, a remote `pull` is a snapshot *by construction* — the
-donating-train-step aliasing hazards the in-process seams guard against
-with `snapshot_on_pull` cannot exist across a process boundary.
+Every pytree that crosses the wire is freshly deserialized in the
+receiving process, so a remote WRITER can never corrupt local buffers.
+Note the read-side contract did tighten with the param plane:
+`ModelPoolClient.pull` keeps a local version cache and returns it BY
+REFERENCE (read-only, like a `copy=False` local pull) — pass
+`copy=True` before feeding a remote pull to a donating train step,
+exactly as in-process callers must.
 
-Wire format: 8-byte big-endian length, then one msgpack (or pickle)
-message. Requests are `{"m": "ns.method", "a": [...], "k": {...}}`;
-replies `{"ok": result}` or `{"err": message, "tb": traceback}` — a
-remote exception re-raises client-side as `RemoteError` with the server
-traceback attached, and a dead peer raises `TransportError` (the
+Wire format: 1 codec byte + 8-byte big-endian length, then one msgpack
+(or pickle) message. Requests are `{"m": "ns.method", "a": [...], "k":
+{...}}`; replies `{"ok": result}` or `{"err": message, "tb": traceback}`
+— a remote exception re-raises client-side as `RemoteError` with the
+server traceback attached, and a dead peer raises `TransportError` (the
 killed-server path the transport tests exercise).
+
+**Streaming transfer (the param plane):** any ndarray leaf at or above
+`_CHUNK_THRESHOLD` bytes is NOT serialized into the msgpack frame.
+The frame carries a tiny `{"__nds__": [index, dtype, shape]}` stub
+(codec byte gains the 0x80 stream flag) and the raw leaf buffers follow
+the frame as length-prefixed blobs, sent and received in bounded
+`_CHUNK_BYTES` slices. A 100 MB pytree therefore never exists as one
+giant msgpack frame on either side: the sender streams the live array
+buffers (no serialization copy of the bulk data) and the receiver
+assembles each leaf zero-copy via `np.frombuffer` over its own
+bytearray. A peer that dies mid-blob raises `TransportError`, exactly
+like one that dies mid-frame. `chunking(...)` overrides the
+threshold/slice size per process (the param_plane benchmark's
+monolithic-vs-chunked axis); the pickle fallback codec never streams.
 
 `serve_league` is the one-call server: it namespaces one LeagueMgr (and
 its ModelPool, and optionally an InfServer) behind a single `RpcServer`
@@ -33,18 +50,25 @@ socket — the layout `launch/train.py --role coordinator` binds.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import socket
 import struct
 import threading
 import traceback
 from types import SimpleNamespace
-from typing import Any, Dict, Hashable, Optional, Tuple
+from typing import Any, Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.types import (FreezeGate, Hyperparam, MatchResult, ModelKey,
                               Task)
+from repro.params.cache import CachedPuller
+from repro.params.manifest import (NotModified, ParamDelta, ParamManifest,
+                                   apply_delta)  # noqa: F401 — apply_delta
+# is re-exported: delta consumers (benchmarks, tools) reach it as
+# transport.apply_delta next to the wire types it pairs with
+from repro.utils.pytree import tree_copy
 
 try:
     import msgpack
@@ -73,49 +97,98 @@ class RemoteError(RuntimeError):
 # tuple-ness — pytree treedefs survive), and the §3.3 message dataclasses.
 
 _DATACLASSES = {c.__name__: c for c in
-                (ModelKey, Hyperparam, FreezeGate, Task, MatchResult)}
+                (ModelKey, Hyperparam, FreezeGate, Task, MatchResult,
+                 ParamManifest, ParamDelta, NotModified)}
+
+# streaming-transfer knobs: ndarray leaves >= _CHUNK_THRESHOLD bytes ride
+# out-of-band after the frame, sent/received in _CHUNK_BYTES slices
+_CHUNK_THRESHOLD = 256 * 1024
+_CHUNK_BYTES = 1 << 20
+_STREAM_FLAG = 0x80
 
 
-def _encode(o):
-    if isinstance(o, tuple):
-        return {"__t__": list(o)}
-    if isinstance(o, np.ndarray):
-        return {"__nd__": [o.dtype.str, list(o.shape),
-                           np.ascontiguousarray(o).tobytes()]}
-    if isinstance(o, np.generic):
-        return o.item()
-    if dataclasses.is_dataclass(o) and type(o).__name__ in _DATACLASSES:
-        return {"__dc__": type(o).__name__,
-                "f": {f.name: getattr(o, f.name)
-                      for f in dataclasses.fields(o)}}
-    if hasattr(o, "__array__"):                  # jax.Array and friends
-        return _encode(np.asarray(o))
-    raise TypeError(f"cannot serialize {type(o)!r} over the league transport")
+@contextlib.contextmanager
+def chunking(threshold: Optional[int] = None, chunk_bytes: Optional[int] = None):
+    """Temporarily override the streaming knobs for THIS process's sends
+    (`threshold=None` keeps the current value; `threshold=0` streams
+    every leaf, a huge threshold forces monolithic frames). The
+    param_plane benchmark's chunked-vs-monolithic axis."""
+    global _CHUNK_THRESHOLD, _CHUNK_BYTES
+    old = (_CHUNK_THRESHOLD, _CHUNK_BYTES)
+    if threshold is not None:
+        _CHUNK_THRESHOLD = threshold
+    if chunk_bytes is not None:
+        _CHUNK_BYTES = chunk_bytes
+    try:
+        yield
+    finally:
+        _CHUNK_THRESHOLD, _CHUNK_BYTES = old
 
 
-def _decode(d):
-    if "__t__" in d and len(d) == 1:
-        return tuple(d["__t__"])
-    if "__nd__" in d and len(d) == 1:
-        dt, shape, buf = d["__nd__"]
-        return np.frombuffer(buf, dtype=np.dtype(dt)).reshape(shape).copy()
-    if "__dc__" in d:
-        return _DATACLASSES[d["__dc__"]](**d["f"])
-    return d
+def _make_encoder(blobs: Optional[List[np.ndarray]]):
+    """msgpack `default` hook; with a `blobs` collector, large ndarrays
+    are hoisted out of the frame and replaced by an index stub."""
+    def enc(o):
+        if isinstance(o, tuple):
+            return {"__t__": list(o)}
+        if isinstance(o, np.ndarray):
+            if blobs is not None and o.nbytes >= _CHUNK_THRESHOLD:
+                a = np.ascontiguousarray(o)
+                blobs.append(a)
+                return {"__nds__": [len(blobs) - 1, a.dtype.str,
+                                    list(a.shape)]}
+            return {"__nd__": [o.dtype.str, list(o.shape),
+                               np.ascontiguousarray(o).tobytes()]}
+        if isinstance(o, np.generic):
+            return o.item()
+        if dataclasses.is_dataclass(o) and type(o).__name__ in _DATACLASSES:
+            return {"__dc__": type(o).__name__,
+                    "f": {f.name: getattr(o, f.name)
+                          for f in dataclasses.fields(o)}}
+        if hasattr(o, "__array__"):              # jax.Array and friends
+            return enc(np.asarray(o))
+        raise TypeError(
+            f"cannot serialize {type(o)!r} over the league transport")
+    return enc
+
+
+def _make_decoder(blobs: Optional[List[bytearray]]):
+    def dec(d):
+        if "__t__" in d and len(d) == 1:
+            return tuple(d["__t__"])
+        if "__nd__" in d and len(d) == 1:
+            dt, shape, buf = d["__nd__"]
+            return np.frombuffer(buf, dtype=np.dtype(dt)).reshape(shape).copy()
+        if "__nds__" in d and len(d) == 1:
+            if blobs is None:
+                raise TransportError(
+                    "frame references streamed blobs but none followed")
+            i, dt, shape = d["__nds__"]
+            # zero-copy: the bytearray was recv'd directly into place and
+            # is owned exclusively by this message
+            return np.frombuffer(blobs[i], dtype=np.dtype(dt)).reshape(shape)
+        if "__dc__" in d:
+            return _DATACLASSES[d["__dc__"]](**d["f"])
+        return d
+    return dec
 
 
 _CODEC_MSGPACK, _CODEC_PICKLE = 1, 2
 _CODEC_ID = _CODEC_MSGPACK if CODEC == "msgpack" else _CODEC_PICKLE
 
 
-def packb(obj) -> bytes:
+def packb(obj, blobs: Optional[List[np.ndarray]] = None) -> bytes:
+    """Serialize one message. With a `blobs` list (msgpack codec only),
+    large ndarray leaves are appended to it instead of being copied into
+    the returned frame — the streaming path `send_msg` uses."""
     if CODEC == "msgpack":
-        return msgpack.packb(obj, default=_encode, strict_types=True,
-                             use_bin_type=True)
+        return msgpack.packb(obj, default=_make_encoder(blobs),
+                             strict_types=True, use_bin_type=True)
     return pickle.dumps(obj)
 
 
-def unpackb(buf: bytes, codec_id: Optional[int] = None):
+def unpackb(buf: bytes, codec_id: Optional[int] = None,
+            blobs: Optional[List[bytearray]] = None):
     """Decode with the codec the MESSAGE was packed with (every frame
     carries a codec byte), defaulting to this process's codec. A
     msgpack-encoded frame from a peer on a bare install (no msgpack) is a
@@ -127,8 +200,8 @@ def unpackb(buf: bytes, codec_id: Optional[int] = None):
             raise TransportError(
                 "peer sent a msgpack frame but msgpack is not installed "
                 "here (pip install msgpack, or run all peers bare)")
-        return msgpack.unpackb(buf, object_hook=_decode, raw=False,
-                               strict_map_key=False)
+        return msgpack.unpackb(buf, object_hook=_make_decoder(blobs),
+                               raw=False, strict_map_key=False)
     if codec_id == _CODEC_PICKLE:
         import pickle as _pickle
         return _pickle.loads(buf)
@@ -138,19 +211,43 @@ def unpackb(buf: bytes, codec_id: Optional[int] = None):
 # -- framing -----------------------------------------------------------------
 # 1-byte codec id + 8-byte big-endian length, then the payload. The codec
 # byte makes a mixed msgpack/pickle deployment either work (pickle frames
-# decode anywhere) or fail with a message that names the problem.
+# decode anywhere) or fail with a message that names the problem. The
+# 0x80 bit of the codec byte flags a streamed message: a 4-byte blob
+# count follows the payload, then each blob as 8-byte length + raw bytes.
 def send_msg(sock: socket.socket, obj) -> None:
-    payload = packb(obj)
+    blobs: Optional[List[np.ndarray]] = [] if CODEC == "msgpack" else None
+    payload = packb(obj, blobs)
+    streamed = bool(blobs)
     try:
-        sock.sendall(struct.pack(">BQ", _CODEC_ID, len(payload)) + payload)
+        sock.sendall(struct.pack(
+            ">BQ", _CODEC_ID | (_STREAM_FLAG if streamed else 0),
+            len(payload)) + payload)
+        if streamed:
+            sock.sendall(struct.pack(">I", len(blobs)))
+            for arr in blobs:
+                mv = memoryview(arr).cast("B")
+                sock.sendall(struct.pack(">Q", len(mv)))
+                # bounded slices: the bulk buffer is handed to the kernel
+                # piecewise, never serialized into one giant frame
+                for off in range(0, len(mv), _CHUNK_BYTES):
+                    sock.sendall(mv[off:off + _CHUNK_BYTES])
     except OSError as e:
         raise TransportError(f"send failed: {e}") from e
 
 
 def recv_msg(sock: socket.socket):
     header = _recv_exactly(sock, 9)
-    codec_id, n = struct.unpack(">BQ", header)
-    return unpackb(_recv_exactly(sock, n), codec_id)
+    codec_byte, n = struct.unpack(">BQ", header)
+    codec_id = codec_byte & ~_STREAM_FLAG
+    payload = _recv_exactly(sock, n)
+    blobs: Optional[List[bytearray]] = None
+    if codec_byte & _STREAM_FLAG:
+        (count,) = struct.unpack(">I", _recv_exactly(sock, 4))
+        blobs = []
+        for _ in range(count):
+            (ln,) = struct.unpack(">Q", _recv_exactly(sock, 8))
+            blobs.append(_recv_into(sock, ln))
+    return unpackb(payload, codec_id, blobs)
 
 
 def _recv_exactly(sock: socket.socket, n: int) -> bytes:
@@ -165,6 +262,25 @@ def _recv_exactly(sock: socket.socket, n: int) -> bytes:
         chunks.append(chunk)
         n -= len(chunk)
     return b"".join(chunks)
+
+
+def _recv_into(sock: socket.socket, n: int) -> bytearray:
+    """Receive exactly `n` raw bytes into one preallocated buffer in
+    bounded slices — the zero-copy landing pad for a streamed blob. A
+    peer that dies mid-blob surfaces as TransportError here."""
+    buf = bytearray(n)
+    mv = memoryview(buf)
+    off = 0
+    while off < n:
+        try:
+            k = sock.recv_into(mv[off:off + min(_CHUNK_BYTES, n - off)])
+        except OSError as e:
+            raise TransportError(f"recv failed mid-chunk: {e}") from e
+        if k == 0:
+            raise TransportError(
+                f"peer closed the connection mid-chunk ({off}/{n} bytes)")
+        off += k
+    return buf
 
 
 def parse_addr(addr: str) -> Tuple[str, int]:
@@ -337,6 +453,22 @@ class RpcClient:
         with self._lock:
             self.close_locked()
 
+    def abort(self) -> None:
+        """Force-close from ANOTHER thread: `shutdown` wakes a caller
+        blocked inside `recv` (it raises TransportError there), which a
+        plain `close` does not on Linux. Deliberately lock-free — the
+        blocked caller is holding the lock."""
+        sock = self._sock
+        if sock is not None:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+
 
 class _NamespaceClient:
     """Shared plumbing: bind an RpcClient (or address) to one namespace."""
@@ -351,18 +483,66 @@ class _NamespaceClient:
     def close(self) -> None:
         self._c.close()
 
+    def abort(self) -> None:
+        """Wake a blocked in-flight call with TransportError (see
+        `RpcClient.abort`)."""
+        self._c.abort()
+
 
 # -- seam wrappers -----------------------------------------------------------
 class ModelPoolClient(_NamespaceClient):
-    """Remote `repro.core.ModelPool`. Every pull deserializes into fresh
-    buffers, so remote pulls are snapshots by construction (`copy` is
-    accepted for signature compatibility and ignored)."""
+    """Remote `repro.core.ModelPool` with a LOCAL VERSION CACHE: `pull`
+    sends the cached version number, and the server answers with a
+    `NotModified` tag (cache hit — zero param bytes move), the changed
+    leaves only (grafted onto the cached copy), or the full pytree
+    (first pull / prehistoric cache). Callers written against the plain
+    pool API therefore get hash-gated delta pulls for free.
+
+    Cache-hit and delta pulls return the cached object BY REFERENCE —
+    read-only by contract, like a `copy=False` local pull. Pass
+    `copy=True` (the Learner's post-freeze adopt does) for a private
+    deep copy the caller may feed to a donating train step. Every array
+    that does cross the wire lands in fresh buffers, so corruption by a
+    remote writer remains impossible by construction."""
 
     def __init__(self, client, ns: str = "pool"):
         super().__init__(client, ns)
+        # the cache logic itself lives in CachedPuller (it drives our raw
+        # pull_if_changed below); this class only adds the lock and the
+        # copy-on-request semantics
+        self._puller = CachedPuller(self)
+        self._cache_lock = threading.Lock()
 
     def pull(self, key: ModelKey, copy: Optional[bool] = None):
-        return self._call("pull", key)
+        with self._cache_lock:
+            params = self._puller.get(key)
+        return tree_copy(params) if copy else params
+
+    def drop(self, key: ModelKey) -> None:
+        """Evict `key` from the local version cache (a model-sized
+        allocation): callers that pull a key once and then sync through
+        their own CachedPuller should drop it so two copies aren't
+        pinned for the process lifetime."""
+        with self._cache_lock:
+            self._puller.drop(key)
+
+    def clear_cache(self) -> None:
+        with self._cache_lock:
+            self._puller.clear()
+
+    def pull_if_changed(self, key: ModelKey,
+                        have_version: Optional[int] = None,
+                        copy: Optional[bool] = None):
+        """The raw protocol call (no client-side caching — `CachedPuller`
+        or `pull` own the cache). `copy` is accepted for signature
+        compatibility; remote arrays are fresh by construction."""
+        return self._call("pull_if_changed", key, have_version)
+
+    def manifest(self, key: ModelKey) -> ParamManifest:
+        return self._call("manifest", key)
+
+    def version(self, key: ModelKey) -> int:
+        return self._call("version", key)
 
     def push(self, key: ModelKey, params, step: int = 0) -> None:
         self._call("push", key, params, step=step)
@@ -506,14 +686,26 @@ class InfServerBackend:
     def flush(self) -> None:
         self._server.flush()
 
-    def update_params(self, params, key: Hashable = None) -> None:
-        self._server.update_params(params, key=key)
+    def update_params(self, params, key: Hashable = None,
+                      content_hash: Optional[str] = None,
+                      version: Optional[int] = None) -> None:
+        self._server.update_params(params, key=key,
+                                   content_hash=content_hash,
+                                   version=version)
 
-    def ensure_model(self, key: Hashable, params) -> None:
-        self._server.ensure_model(key, params)
+    def ensure_model(self, key: Hashable, params,
+                     content_hash: Optional[str] = None) -> None:
+        self._server.ensure_model(key, params, content_hash=content_hash)
 
-    def register_model(self, key: Hashable, params) -> None:
-        self._server.register_model(key, params)
+    def register_model(self, key: Hashable, params,
+                       content_hash: Optional[str] = None,
+                       version: Optional[int] = None) -> None:
+        self._server.register_model(key, params, content_hash=content_hash,
+                                    version=version)
+
+    def has_model(self, key: Hashable,
+                  content_hash: Optional[str] = None) -> bool:
+        return self._server.has_model(key, content_hash=content_hash)
 
     def evict_model(self, key: Hashable) -> bool:
         return self._server.evict_model(key)
@@ -545,14 +737,37 @@ class InfServerClient(_NamespaceClient):
     def flush(self) -> None:
         self._call("flush")
 
-    def update_params(self, params, key: Hashable = None) -> None:
-        self._call("update_params", params, key=key)
+    def update_params(self, params, key: Hashable = None,
+                      content_hash: Optional[str] = None,
+                      version: Optional[int] = None) -> None:
+        """Hash-gated hot-swap over RPC: with a `content_hash`, a cheap
+        `has_model` probe runs first and the params are NOT shipped when
+        the server already hosts that exact content — the common case
+        for every actor but the first to refresh a route."""
+        if content_hash is not None and self._call("has_model", key,
+                                                   content_hash):
+            return
+        self._call("update_params", params, key=key,
+                   content_hash=content_hash, version=version)
 
-    def ensure_model(self, key: Hashable, params) -> None:
-        self._call("ensure_model", key, params)
+    def ensure_model(self, key: Hashable, params,
+                     content_hash: Optional[str] = None) -> None:
+        """Idempotent route setup; with a `content_hash` the params only
+        cross the wire when the route is absent or stale."""
+        if content_hash is not None and self._call("has_model", key,
+                                                   content_hash):
+            return
+        self._call("ensure_model", key, params, content_hash=content_hash)
 
-    def register_model(self, key: Hashable, params) -> None:
-        self._call("register_model", key, params)
+    def register_model(self, key: Hashable, params,
+                       content_hash: Optional[str] = None,
+                       version: Optional[int] = None) -> None:
+        self._call("register_model", key, params, content_hash=content_hash,
+                   version=version)
+
+    def has_model(self, key: Hashable,
+                  content_hash: Optional[str] = None) -> bool:
+        return self._call("has_model", key, content_hash)
 
     def evict_model(self, key: Hashable) -> bool:
         return self._call("evict_model", key)

@@ -21,7 +21,12 @@ Design (this repo's data-plane rebuild):
   request shape.
 * **Param hot-swap** — `update_params`/`ensure_model` replace a model's
   pytree in place; params are traced arguments, so new weights never
-  recompile (only the stacked-params cache entry is invalidated).
+  recompile (only the stacked-params cache entry is invalidated). Swaps
+  are **hash-gated** (param plane): a refresh carrying the
+  `ParamManifest.tree_hash` the route already hosts is a no-op — no
+  re-upload, no mesh re-layout, no cache invalidation — and a refresh
+  whose pool version is older than the hosted one is dropped so a
+  straggler actor can't regress a route.
 * **Mesh-sharded execution** (`mesh=`) — hosted params are laid out over a
   `("data", "model")` mesh with the serving shardings from
   `repro.distributed.sharding`: tensor parallelism over 'model' for the
@@ -93,12 +98,21 @@ class InfServer:
         # one server while each role's Learner hot-swaps its theta route
         # concurrently (`get` may re-enter `flush`, hence reentrant)
         self._lock = threading.RLock()
-        # model registry: key -> params, with a version counter so the
-        # stacked-params cache knows when a hot-swap invalidated it
+        # model registry: key -> params, with a swap counter so the
+        # stacked-params cache knows when a hot-swap invalidated it, plus
+        # the param-plane identity of the hosted copy (content hash +
+        # pool version) so identical refreshes no-op instead of
+        # re-uploading (and, on the mesh path, re-sharding)
         self._models: Dict[Hashable, Any] = {}
         self._versions: Dict[Hashable, int] = {}
+        self._content_hashes: Dict[Hashable, str] = {}
+        self._pool_versions: Dict[Hashable, int] = {}
         self._default_key: Optional[Hashable] = None
         self._stack_cache: Dict[tuple, Any] = {}
+        # swap telemetry lives up here: the seed registration below counts
+        self.swaps = 0               # hot-swaps that actually (re)placed params
+        self.swap_noops = 0          # refreshes gated off by content hash
+        self.swap_stale_drops = 0    # refreshes dropped as version downgrades
         if params is not None:
             self.register_model(_DEFAULT, params)
         # request queue
@@ -164,38 +178,87 @@ class InfServer:
               else obs_batch_sharding(self.mesh, obs.shape[0]))
         return jax.device_put(obs, ns)
 
-    def register_model(self, key: Hashable, params) -> None:
-        """Host (or refresh) a model. The first registered model becomes the
-        default route for `submit(obs)` without an explicit model."""
+    def register_model(self, key: Hashable, params,
+                       content_hash: Optional[str] = None,
+                       version: Optional[int] = None) -> None:
+        """Host (or refresh) a model. The first registered model becomes
+        the default route for `submit(obs)` without an explicit model.
+
+        `content_hash`/`version` are the param-plane identity of the
+        incoming copy (the pulling consumer has both on its
+        `ParamManifest`). A refresh whose `content_hash` matches the
+        hosted route is a NO-OP: no re-upload, no mesh re-layout, no
+        stacked-cache invalidation — the hash-gated hot-swap. A refresh
+        whose `version` is OLDER than the hosted one is likewise dropped
+        (a straggler actor must not regress a route another actor
+        already advanced). Without a hash the swap is unconditional,
+        exactly the legacy behavior."""
         with self._lock:
             if self._default_key is None:
                 self._default_key = key
+            if key in self._models:
+                if (content_hash is not None
+                        and self._content_hashes.get(key) == content_hash):
+                    self.swap_noops += 1
+                    return
+                hosted_v = self._pool_versions.get(key)
+                if (version is not None and hosted_v is not None
+                        and version < hosted_v):
+                    self.swap_stale_drops += 1
+                    return
+            self.swaps += 1
             self._versions[key] = self._versions.get(key, -1) + 1
             self._models[key] = self._place(params)
+            if content_hash is not None:
+                self._content_hashes[key] = content_hash
+            else:
+                self._content_hashes.pop(key, None)
+            if version is not None:
+                self._pool_versions[key] = version
+            else:
+                self._pool_versions.pop(key, None)
             # entries containing this key can never match again (version
             # bumped) — drop them now so stale stacked copies don't pin
             # device memory; entries for other model sets stay warm
             self._stack_cache = {ck: v for ck, v in self._stack_cache.items()
                                  if all(k != key for k, _ in ck)}
 
-    def ensure_model(self, key: Hashable, params) -> None:
-        """Register if absent — the Actor-facing idempotent route setup."""
+    def ensure_model(self, key: Hashable, params,
+                     content_hash: Optional[str] = None) -> None:
+        """Register if absent — the Actor-facing idempotent route setup
+        (an existing route is never overwritten, whatever its hash)."""
         with self._lock:
             if key not in self._models:
-                self.register_model(key, params)
+                self.register_model(key, params, content_hash=content_hash)
 
-    def update_params(self, params, key: Hashable = None) -> None:
+    def has_model(self, key: Hashable,
+                  content_hash: Optional[str] = None) -> bool:
+        """Cheap route probe: is `key` hosted (and, with `content_hash`,
+        hosted at exactly that content)? The RPC client calls this before
+        shipping params so identical refreshes cost one tiny round trip."""
+        with self._lock:
+            if key not in self._models:
+                return False
+            return (content_hash is None
+                    or self._content_hashes.get(key) == content_hash)
+
+    def update_params(self, params, key: Hashable = None,
+                      content_hash: Optional[str] = None,
+                      version: Optional[int] = None) -> None:
         """Learner pushed new theta to the ModelPool -> hot-swap. Params are
         traced jit arguments, so no recompilation happens. Non-blocking
         (lock only); in-flight flushes finished under the old weights, the
         next flush sees the new ones. The pytree is hosted LIVE on the
         single-device path (callers pass snapshots) and re-laid-out via
-        device_put (its own copy) in sharded mode."""
+        device_put (its own copy) in sharded mode. With a `content_hash`
+        matching the hosted copy the swap is a no-op (see
+        `register_model`)."""
         with self._lock:
             if key is None:
                 # a paramless server gets a real default route, not key None
                 key = self._default_key if self._default_key is not None else _DEFAULT
-            self.register_model(key, params)
+            self.register_model(key, params, content_hash=content_hash,
+                                version=version)
 
     def evict_model(self, key: Hashable) -> bool:
         """Drop a route. Returns False (and keeps the route) when requests
@@ -206,6 +269,8 @@ class InfServer:
                 return False
             self._models.pop(key, None)
             self._versions.pop(key, None)
+            self._content_hashes.pop(key, None)
+            self._pool_versions.pop(key, None)
             self._stack_cache.clear()
             if key == self._default_key:
                 self._default_key = next(iter(self._models), None)
@@ -370,6 +435,9 @@ class InfServer:
             "mean_batch_latency_ms": 1e3 * self._latency_sum / batches,
             "last_batch_latency_ms": 1e3 * self.last_batch_latency_s,
             "last_batch_models": self.last_batch_models,
+            "swaps": self.swaps,
+            "swap_noops": self.swap_noops,
+            "swap_stale_drops": self.swap_stale_drops,
             "models_hosted": len(self._models),
             "queue_depth": self.queue_depth,
             "sharded": self.mesh is not None,

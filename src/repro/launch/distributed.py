@@ -42,12 +42,15 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.distributed.heartbeat import Heartbeat, HeartbeatMonitor
 from repro.distributed.transport import (DataServerClient, InfServerClient,
                                          LeagueMgrClient, RpcClient,
                                          RpcServer, TransportError,
                                          serve_league)
 
 _POLL_S = 0.05
+_HEARTBEAT_INTERVAL_S = 1.0
+DEFAULT_HEARTBEAT_TIMEOUT_S = 30.0
 
 
 class Ctrl:
@@ -55,7 +58,11 @@ class Ctrl:
     process-boundary replacement for the runtime's in-process Coordinator
     thread state. All methods are called over RPC from worker processes;
     the lock makes them linearizable (the RpcServer runs one thread per
-    connection)."""
+    connection). `ping` exposes the coordinator heartbeat — workers run a
+    `HeartbeatMonitor` against it so a WEDGED coordinator (stopped,
+    deadlocked, partitioned — sockets open, no progress) is
+    distinguished from a merely slow one and triggers clean shutdown
+    instead of an eternal blocked recv."""
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -64,6 +71,12 @@ class Ctrl:
         self._steps: Dict[str, int] = {}
         self._segments: Dict[str, int] = {}
         self._frames: Dict[str, int] = {}
+        self.heartbeat = Heartbeat()
+
+    # -- liveness -----------------------------------------------------------
+    def ping(self) -> int:
+        """Current beat count of the coordinator's beater thread."""
+        return self.heartbeat.ping()
 
     # -- stop flag ----------------------------------------------------------
     def stop(self) -> None:
@@ -118,8 +131,10 @@ def _wait_endpoint(ctrl: RpcClient, name: str, timeout: float = 60.0) -> str:
 
 def _coordinator_alive(connect: str) -> bool:
     """Probe the coordinator with a fresh connection (the cached client's
-    socket may be the thing that just died)."""
-    probe = RpcClient(connect, connect_retries=1, retry_delay_s=0.01)
+    socket may be the thing that just died). Short socket timeout: a
+    wedged coordinator that accepts but never answers counts as dead."""
+    probe = RpcClient(connect, timeout=3.0, connect_retries=1,
+                      retry_delay_s=0.01)
     try:
         probe.call("ctrl.should_stop")
         return True
@@ -127,6 +142,29 @@ def _coordinator_alive(connect: str) -> bool:
         return False
     finally:
         probe.close()
+
+
+def _start_monitor(connect: str, timeout_s: float, stop_event: threading.Event,
+                   clients) -> HeartbeatMonitor:
+    """Worker-side liveness: watch `ctrl.ping` on its own connection; on
+    a stalled heartbeat set the stop flag and close the worker's RPC
+    clients, turning any blocked in-flight `recv` into the
+    `TransportError` the worker loops already treat as shutdown."""
+    def _on_dead():
+        stop_event.set()
+        for c in clients:
+            try:
+                # abort, not close: the worker thread may be blocked in
+                # recv HOLDING the client lock — shutdown wakes it with a
+                # TransportError (close would deadlock/never wake it)
+                getattr(c, "abort", c.close)()
+            except Exception:            # noqa: BLE001 — best-effort unblock
+                pass
+
+    mon = HeartbeatMonitor(connect, interval_s=_HEARTBEAT_INTERVAL_S,
+                           timeout_s=timeout_s, on_dead=_on_dead)
+    mon.start()
+    return mon
 
 
 def _advertised(address: str) -> str:
@@ -188,6 +226,9 @@ def run_coordinator(spec, *, env_name: str = "rps",
                                max_batch=max(64, 16 * spec.num_actors_total),
                                mesh=_build_mesh(sharded))
     ctrl = Ctrl()
+    # the beater thread is the liveness signal: it advances even when the
+    # stop-condition loop below is busy, and stops only with the process
+    ctrl.heartbeat.start_beating(_HEARTBEAT_INTERVAL_S)
     host, port = parse_addr(bind)
     server = serve_league(league, inf_server, extra={"ctrl": ctrl},
                           host=host, port=port)
@@ -223,6 +264,7 @@ def run_coordinator(spec, *, env_name: str = "rps",
         return report
     finally:
         ctrl.stop()
+        ctrl.heartbeat.stop_beating()
         server.close()
 
 
@@ -233,12 +275,15 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
                 unroll_len: int = 8, ring_segments: int = 4,
                 data_bind: str = "127.0.0.1:0",
                 advertise: Optional[str] = None,
+                heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
                 verbose: bool = True) -> dict:
     """One role's Learner as a process: local DataServer (served to the
     role's actors over RPC), remote league protocol for everything else.
     `advertise` overrides the address registered for `data/<role>` —
     under k8s that is the learner's Service DNS name, which stays stable
-    across pod restarts."""
+    across pod restarts. A `HeartbeatMonitor` watches the coordinator:
+    `heartbeat_timeout_s` without a beat advance and this process shuts
+    down cleanly instead of blocking forever on a wedged socket."""
     from repro.configs import get_arch
     from repro.distributed.transport import parse_addr
     from repro.envs import make_env
@@ -250,24 +295,31 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
     league = LeagueMgrClient(connect)
     ctrl = _ctrl_client(connect)
     ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
+    coord_dead = threading.Event()
+    monitor = _start_monitor(connect, heartbeat_timeout_s, coord_dead,
+                             [ctrl, league])
     seg_frames = num_envs * env.spec.team_size * unroll_len
     ds = DataServer(capacity_frames=ring_segments * seg_frames, blocking=True)
     host, port = parse_addr(data_bind)
     data_srv = RpcServer({"data": ds}, host=host, port=port).start()
-    ctrl.call("ctrl.register_endpoint", f"data/{role_name}",
-              advertise or _advertised(data_srv.address))
-
-    opt = adamw(lr, clip_norm=1.0)
-    step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
     try:
+        ctrl.call("ctrl.register_endpoint", f"data/{role_name}",
+                  advertise or _advertised(data_srv.address))
+
+        opt = adamw(lr, clip_norm=1.0)
+        step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
         # warm-start from the role's CURRENT key, not version 0: a learner
         # process restarted mid-run (the k8s auto-restart path) must adopt
         # the lineage where it left off, not push seed weights over it
         current = league.agents[role_name].current
         learner = Learner(league, step, opt, league.model_pool.pull(current),
                           agent_id=role_name, data_server=ds)
+        # the Learner snapshotted the boot pull and syncs through its own
+        # CachedPuller from here on — drop the client cache's copy so a
+        # model-sized allocation isn't pinned for the process lifetime
+        league.model_pool.drop(current)
         period_steps, freezes = 0, 0
-        while not ctrl.call("ctrl.should_stop"):
+        while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
             reason = league.should_freeze(role_name, period_steps)
             if reason:
                 new_key = learner.end_learning_period(reason=reason)
@@ -287,24 +339,31 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
         # the coordinator owns the run's lifetime: once we were connected,
         # its disappearance IS the shutdown signal, not a failure (the stop
         # flag and the socket close race — a worker mid-poll sees whichever
-        # comes first). A *connect* failure still raises out of RpcClient.
+        # comes first; a heartbeat-timeout monitor closes our clients and
+        # lands here too). A *connect* failure still raises out of RpcClient.
         if verbose:
-            print(f"[learner/{role_name}] coordinator gone ({e}); "
+            why = "heartbeat timed out" if coord_dead.is_set() else str(e)
+            print(f"[learner/{role_name}] coordinator gone ({why}); "
                   "shutting down", flush=True)
         steps, freezes = -1, -1
     finally:
+        monitor.stop()
         data_srv.close()
-    return {"role": role_name, "steps": steps, "freezes": freezes}
+    return {"role": role_name, "steps": steps, "freezes": freezes,
+            "heartbeat_dead": coord_dead.is_set()}
 
 
 # -- actor -------------------------------------------------------------------
 def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
               env_name: str = "rps", arch: str = "tleague-policy-s",
               num_envs: int = 8, unroll_len: int = 8, seed: int = 0,
-              served: bool = False, verbose: bool = True) -> dict:
+              served: bool = False,
+              heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
+              verbose: bool = True) -> dict:
     """One Actor as a process: remote task/result protocol, remote
     DataServer put (with cross-process backpressure), and optionally the
-    shared serving mesh for every policy forward."""
+    shared serving mesh for every policy forward. A `HeartbeatMonitor`
+    watches the coordinator (see `run_learner`)."""
     from repro.actors import Actor
     from repro.configs import get_arch
     from repro.envs import make_env
@@ -316,22 +375,27 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
     ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
     actor_id = f"{role_name}/{actor_index}"
     segments = 0
+    coord_dead = threading.Event()
+    clients = [ctrl, league]
+    monitor = _start_monitor(connect, heartbeat_timeout_s, coord_dead, clients)
     try:
         data = DataServerClient(_wait_endpoint(ctrl, f"data/{role_name}"))
+        clients.append(data)
         inf = None
         if served:
             inf = InfServerClient(_wait_endpoint(ctrl, "inf/shared"))
+            clients.append(inf)
         actor = Actor(env, cfg, league, agent_id=role_name, num_envs=num_envs,
                       unroll_len=unroll_len,
                       seed=seed * 1000 + actor_index, inf_server=inf)
-        while not ctrl.call("ctrl.should_stop"):
+        while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
             traj, _task = actor.run_segment()
             # backpressure: the server blocks on the ring condition for the
             # whole timeout, so a LONG timeout means the segment is shipped
             # once and waits server-side — retrying at the poll interval
             # would re-serialize the full pytree 20x/s exactly when the
             # learner is already the bottleneck
-            while not ctrl.call("ctrl.should_stop"):
+            while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
                 if data.put_when_room(traj, timeout=2.0):
                     segments += 1
                     break
@@ -343,16 +407,20 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
         # — but this handler also guards calls to the learner's DataServer
         # and the InfServer, whose death with a live coordinator is a REAL
         # failure that must surface (nonzero exit -> k8s restarts the pod)
-        if _coordinator_alive(connect):
+        if not coord_dead.is_set() and _coordinator_alive(connect):
             raise
         if verbose:
-            print(f"[actor/{actor_id}] coordinator gone ({e}); "
+            why = "heartbeat timed out" if coord_dead.is_set() else str(e)
+            print(f"[actor/{actor_id}] coordinator gone ({why}); "
                   "shutting down", flush=True)
         frames = -1
+    finally:
+        monitor.stop()
     if verbose:
         print(f"[actor/{actor_id}] {segments} segments, "
               f"{frames} frames", flush=True)
-    return {"actor": actor_id, "segments": segments, "frames": frames}
+    return {"actor": actor_id, "segments": segments, "frames": frames,
+            "heartbeat_dead": coord_dead.is_set()}
 
 
 # -- standalone inference server ---------------------------------------------
@@ -360,6 +428,7 @@ def run_infserver(connect: str, *, env_name: str = "rps",
                   arch: str = "tleague-policy-s", seed: int = 0,
                   sharded: bool = False, max_batch: int = 256,
                   bind: str = "127.0.0.1:0", advertise: Optional[str] = None,
+                  heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
                   verbose: bool = True) -> dict:
     """A standalone serving process: host the grouped θ+φ forward
     (mesh-sharded over the local devices with `sharded=True`) and register
@@ -381,20 +450,23 @@ def run_infserver(connect: str, *, env_name: str = "rps",
     server = InfServer(cfg, env.spec.num_actions, seed=seed,
                        max_batch=max_batch, mesh=_build_mesh(sharded))
     ctrl = _ctrl_client(connect)
+    coord_dead = threading.Event()
+    monitor = _start_monitor(connect, heartbeat_timeout_s, coord_dead, [ctrl])
     host, port = parse_addr(bind)
     rpc = RpcServer({"inf": InfServerBackend(server)},
                     host=host, port=port).start()
-    ctrl.call("ctrl.register_endpoint", "inf/shared",
-              advertise or _advertised(rpc.address))
-    if verbose:
-        print(f"[infserver] serving at {rpc.address} "
-              f"(sharded={server.mesh is not None})", flush=True)
     try:
-        while not ctrl.call("ctrl.should_stop"):
+        ctrl.call("ctrl.register_endpoint", "inf/shared",
+                  advertise or _advertised(rpc.address))
+        if verbose:
+            print(f"[infserver] serving at {rpc.address} "
+                  f"(sharded={server.mesh is not None})", flush=True)
+        while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
             time.sleep(_POLL_S)
     except TransportError:
         pass                         # coordinator gone == shutdown signal
     finally:
+        monitor.stop()
         rpc.close()
     return server.stats()
 
@@ -419,6 +491,7 @@ def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
                      pbt: bool = False,
                      max_seconds: Optional[float] = None,
                      max_steps_per_role: Optional[int] = None,
+                     heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
                      verbose: bool = True) -> dict:
     """`train.py --workers N`: this process becomes the coordinator; one
     learner process per role plus `workers` actor processes (round-robin
@@ -455,7 +528,8 @@ def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
 
     common = ["--env", env_name, "--arch", arch, "--loss", loss,
               "--num-envs", str(num_envs), "--unroll-len", str(unroll_len),
-              "--lr", str(lr), "--seed", str(seed)]
+              "--lr", str(lr), "--seed", str(seed),
+              "--heartbeat-timeout", str(heartbeat_timeout_s)]
     if served:
         common.append("--served")
     children: List[subprocess.Popen] = []

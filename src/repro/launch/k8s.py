@@ -23,6 +23,14 @@ multiprocess league"):
   * inf-server:  `--role infserver --sharded` — the mesh-sharded grouped
     θ+φ forward over the node's accelerator mesh.
 
+Every pod carries liveness/readiness probes backed by the worker
+heartbeat plane (`repro.distributed.heartbeat`): roles that bind an RPC
+socket (coordinator / learner / inf-server) get tcpSocket probes on it,
+and the portless actor Deployment execs the heartbeat probe CLI
+(`python -m repro.distributed.heartbeat <coordinator> --timeout 5`) —
+the same channel the workers themselves use to tell a slow coordinator
+from a dead one (`--heartbeat-timeout`).
+
 The single-host determinism fallback (no cluster) is the same image with
 `--league-spec <path> --sync` — the bit-deterministic lockstep loop.
 On a TPU cloud the Learner block becomes a JobSet over the pod slice;
@@ -65,9 +73,43 @@ spec:
         resources:
           requests: {{cpu: "{cpus}"{accel}}}
           limits: {{cpu: "{cpus}"{accel}}}
-        env:
+{probes}        env:
         - {{name: LEAGUE_MGR_EP, value: "tcp://{signature}-coordinator:9003"}}
         - {{name: MODEL_POOL_EP, value: "tcp://{signature}-coordinator:9003"}}
+"""
+
+# roles that bind an RPC socket are probed on it (the accept loop IS the
+# worker's liveness); portless roles (actors) exec the heartbeat probe
+# CLI against the coordinator — an actor whose coordinator is gone or
+# wedged exits by heartbeat timeout anyway, and the probe makes kubelet
+# restart it promptly so the fleet reattaches when the coordinator
+# Service comes back
+_TCP_PROBES_TMPL = """\
+        readinessProbe:
+          tcpSocket: {{port: {port}}}
+          initialDelaySeconds: 5
+          periodSeconds: 10
+          timeoutSeconds: 5
+        livenessProbe:
+          tcpSocket: {{port: {port}}}
+          initialDelaySeconds: 20
+          periodSeconds: 10
+          timeoutSeconds: 5
+          failureThreshold: 3
+"""
+
+# timeoutSeconds must cover interpreter startup + the probe's own
+# --timeout 5 budget; k8s's 1s default would kill every slow-but-healthy
+# probe run and restart the whole actor fleet
+_EXEC_PROBE_TMPL = """\
+        livenessProbe:
+          exec:
+            command: ["python", "-m", "repro.distributed.heartbeat",
+                      "{coordinator}:9003", "--timeout", "5"]
+          initialDelaySeconds: 30
+          periodSeconds: 15
+          timeoutSeconds: 15
+          failureThreshold: 4
 """
 
 
@@ -96,6 +138,11 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
     def fmt(args: list) -> str:
         return "[" + ", ".join(f'"{a}"' for a in args) + "]"
 
+    def tcp_probes(port: int) -> str:
+        return _TCP_PROBES_TMPL.format(port=port)
+
+    exec_probe = _EXEC_PROBE_TMPL.format(coordinator=f"{signature}-coordinator")
+
     blocks = []
     # the coordinator must NOT get --served when dedicated inf-server
     # deployments exist: both would register the single `inf/shared`
@@ -107,7 +154,7 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
         module="repro.launch.train",
         args=fmt(["--role", "coordinator", "--league-spec", league_spec,
                   "--bind", "0.0.0.0:9003"] + base + coord_serve),
-        cpus=8, accel="", **common))
+        cpus=8, accel="", probes=tcp_probes(9003), **common))
     # ONE learner process per role: the lineage's params are single-writer
     # (see LeagueMgr.end_learning_period) — M_L-way data parallelism lives
     # INSIDE the learner's pjit'd train step over its node's mesh, not in
@@ -118,20 +165,22 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
         args=fmt(["--role", "learner", "--league-role", league_role,
                   "--lr", str(lr), "--bind", "0.0.0.0:9005",
                   "--advertise", f"{signature}-learner:9005"] + base),
-        cpus=16, accel=", " + learner_accel, **common))
+        cpus=16, accel=", " + learner_accel, probes=tcp_probes(9005),
+        **common))
     blocks.append(SERVICE_TMPL.format(
         role="inf-server", port=9006, replicas=inf_servers,
         node_pool="tpu-v5e", module="repro.launch.train",
         args=fmt(["--role", "infserver", "--sharded",
                   "--bind", "0.0.0.0:9006",
                   "--advertise", f"{signature}-inf-server:9006"] + base),
-        cpus=8, accel=", " + learner_accel, **common))
+        cpus=8, accel=", " + learner_accel, probes=tcp_probes(9006),
+        **common))
     blocks.append(SERVICE_TMPL.format(
         role="actor", port=9007, replicas=learners * actors_per_learner,
         node_pool="cpu", module="repro.launch.train",
         args=fmt(["--role", "actor", "--league-role", league_role]
                  + base + serve_flag),
-        cpus=actor_cpus, accel="", **common))
+        cpus=actor_cpus, accel="", probes=exec_probe, **common))
     return "".join(blocks)
 
 

@@ -197,7 +197,8 @@ def _main_distributed(args, spec):
             loss=args.loss, num_envs=args.num_envs,
             unroll_len=args.unroll_len, lr=args.lr, seed=args.seed,
             served=args.served, sharded=args.sharded, pbt=args.pbt,
-            max_seconds=args.max_seconds, max_steps_per_role=args.max_steps)
+            max_seconds=args.max_seconds, max_steps_per_role=args.max_steps,
+            heartbeat_timeout_s=args.heartbeat_timeout)
         print(json.dumps(report, indent=1, default=str))
         assert report["clean_shutdown"], (
             f"worker exit codes: {report['worker_exit_codes']}")
@@ -214,17 +215,20 @@ def _main_distributed(args, spec):
                          arch=args.arch, loss=args.loss, lr=args.lr,
                          seed=args.seed, num_envs=args.num_envs,
                          unroll_len=args.unroll_len, data_bind=args.bind,
-                         advertise=args.advertise)
+                         advertise=args.advertise,
+                         heartbeat_timeout_s=args.heartbeat_timeout)
     elif args.role == "actor":
         dist.run_actor(args.league_role, endpoint(),
                        actor_index=args.actor_index, env_name=args.env,
                        arch=args.arch, num_envs=args.num_envs,
                        unroll_len=args.unroll_len, seed=args.seed,
-                       served=args.served)
+                       served=args.served,
+                       heartbeat_timeout_s=args.heartbeat_timeout)
     elif args.role == "infserver":
         dist.run_infserver(endpoint(), env_name=args.env, arch=args.arch,
                            seed=args.seed, sharded=args.sharded,
-                           bind=args.bind, advertise=args.advertise)
+                           bind=args.bind, advertise=args.advertise,
+                           heartbeat_timeout_s=args.heartbeat_timeout)
 
 
 def main():
@@ -291,6 +295,10 @@ def main():
     ap.add_argument("--sharded", action="store_true",
                     help="with --served: shard the InfServer's grouped "
                          "forward over the local ('data','model') mesh")
+    ap.add_argument("--heartbeat-timeout", type=float, default=30.0,
+                    help="worker roles: seconds without a coordinator "
+                         "heartbeat advance before this process treats "
+                         "the coordinator as dead and shuts down cleanly")
     args = ap.parse_args()
 
     spec = LeagueSpec.from_json(args.league_spec) if args.league_spec else None

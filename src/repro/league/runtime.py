@@ -23,6 +23,13 @@ Freeze decisions are made by the coordinator but *executed* by the learner
 thread that owns the params — the request/execute split keeps every pytree
 single-writer, and the request->execute delay is the `freeze_latency_s`
 telemetry in the run report.
+
+Liveness: the coordinator beats a shared `Heartbeat` every loop; Actor
+and Learner workers treat a beat gap longer than `heartbeat_timeout_s`
+as "coordinator dead" and exit their loops cleanly instead of producing
+into a leaderless league forever — the in-process form of the worker
+heartbeat the multiprocess runtime runs over RPC
+(`repro.distributed.heartbeat`).
 """
 from __future__ import annotations
 
@@ -37,6 +44,7 @@ import jax
 from repro.actors import Actor
 from repro.configs import get_arch
 from repro.core import LeagueMgr, ModelKey
+from repro.distributed.heartbeat import Heartbeat
 from repro.envs import make_env
 from repro.infserver import InfServer
 from repro.league.roles import install_roles
@@ -72,20 +80,29 @@ class _Worker(threading.Thread):
 
 class ActorWorker(_Worker):
     def __init__(self, name: str, actor: Actor, data_server: DataServer,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05, heartbeat: Optional[Heartbeat] = None,
+                 heartbeat_timeout_s: float = 30.0):
         super().__init__(name)
         self.actor = actor
         self.data_server = data_server
         self.poll_s = poll_s
+        self.heartbeat = heartbeat
+        self.heartbeat_timeout_s = heartbeat_timeout_s
         self.segments = 0
+
+    def _coordinator_dead(self) -> bool:
+        return (self.heartbeat is not None
+                and self.heartbeat.stalled(self.heartbeat_timeout_s))
 
     def _loop(self):
         while not self.stop_event.is_set():
+            if self._coordinator_dead():
+                return                     # clean exit: nobody to freeze us
             traj, _task = self.actor.run_segment()
             # backpressure: never bury frames the learner has not consumed.
             # put_when_room holds the room predicate and the write under one
             # lock, so producers of the same role can't jointly overshoot.
-            while not self.stop_event.is_set():
+            while not self.stop_event.is_set() and not self._coordinator_dead():
                 if self.data_server.put_when_room(traj, timeout=self.poll_s):
                     self.segments += 1
                     break
@@ -93,11 +110,14 @@ class ActorWorker(_Worker):
 
 class LearnerWorker(_Worker):
     def __init__(self, name: str, learner: Learner, data_server: DataServer,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05, heartbeat: Optional[Heartbeat] = None,
+                 heartbeat_timeout_s: float = 30.0):
         super().__init__(name)
         self.learner = learner
         self.data_server = data_server
         self.poll_s = poll_s
+        self.heartbeat = heartbeat
+        self.heartbeat_timeout_s = heartbeat_timeout_s
         self.period_steps = 0               # steps since the last freeze
         self.total_steps = 0
         self.freezes: List[dict] = []
@@ -117,6 +137,9 @@ class LearnerWorker(_Worker):
     # -- loop ----------------------------------------------------------------
     def _loop(self):
         while not self.stop_event.is_set():
+            if (self.heartbeat is not None
+                    and self.heartbeat.stalled(self.heartbeat_timeout_s)):
+                return                     # coordinator dead: clean exit
             req = self._freeze_request
             if req is not None:
                 reason, t_req = req
@@ -153,7 +176,8 @@ class Coordinator(_Worker):
                  done_event: threading.Event, poll_s: float = 0.01,
                  max_freezes_per_role: Optional[int] = None,
                  max_steps_per_role: Optional[int] = None,
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None,
+                 heartbeat: Optional[Heartbeat] = None):
         super().__init__("league-coordinator")
         self.league = league
         self.roles = roles
@@ -162,6 +186,7 @@ class Coordinator(_Worker):
         self.max_freezes = max_freezes_per_role
         self.max_steps = max_steps_per_role
         self.deadline = deadline
+        self.heartbeat = heartbeat
 
     def _role_quota_met(self, role: RoleRuntime) -> bool:
         """True once every stop condition that was actually set is met."""
@@ -179,6 +204,8 @@ class Coordinator(_Worker):
 
     def _loop(self):
         while not self.stop_event.is_set():
+            if self.heartbeat is not None:
+                self.heartbeat.beat()      # liveness: workers watch this
             for role in self.roles:
                 lw = role.learner
                 if lw.freeze_pending:
@@ -209,11 +236,13 @@ class LeagueRuntime:
 
     def __init__(self, league: LeagueMgr, roles: List[RoleRuntime],
                  inf_server: Optional[InfServer] = None,
-                 coordinator_poll_s: float = 0.01):
+                 coordinator_poll_s: float = 0.01,
+                 heartbeat: Optional[Heartbeat] = None):
         self.league = league
         self.roles = roles
         self.inf_server = inf_server
         self.coordinator_poll_s = coordinator_poll_s
+        self.heartbeat = heartbeat
         self.done_event = threading.Event()
         self._coordinator: Optional[Coordinator] = None
 
@@ -233,11 +262,15 @@ class LeagueRuntime:
         deadline = (time.monotonic() + max_seconds
                     if max_seconds is not None else None)
         self.done_event.clear()
+        if self.heartbeat is not None:
+            self.heartbeat.beat()    # fresh epoch: a runtime built long ago
+                                     # must not look dead at worker start
         self._coordinator = Coordinator(
             self.league, self.roles, self.done_event,
             poll_s=self.coordinator_poll_s,
             max_freezes_per_role=max_freezes_per_role,
-            max_steps_per_role=max_steps_per_role, deadline=deadline)
+            max_steps_per_role=max_steps_per_role, deadline=deadline,
+            heartbeat=self.heartbeat)
         for w in self._workers():
             w.start()
 
@@ -317,12 +350,15 @@ def build_runtime(spec: LeagueSpec, *, env_name: str = "rps",
                   arch: str = "tleague-policy-s", loss: str = "ppo",
                   num_envs: int = 8, unroll_len: int = 8, lr: float = 3e-4,
                   seed: int = 0, served: bool = False, pbt: bool = False,
-                  ring_segments: Optional[int] = None) -> LeagueRuntime:
+                  ring_segments: Optional[int] = None,
+                  heartbeat_timeout_s: float = 30.0) -> LeagueRuntime:
     """Wire a LeagueRuntime from a LeagueSpec: per-role Actors + Learner +
     DataServer over one shared LeagueMgr/ModelPool/PayoffMatrix (and one
     shared InfServer when `served`). `ring_segments` sizes each role's ring
     in segments; default = 2x the role's actor count so every actor can
-    stay one segment ahead of the learner before backpressure bites."""
+    stay one segment ahead of the learner before backpressure bites.
+    `heartbeat_timeout_s` is how long workers keep running without a
+    coordinator beat before exiting cleanly."""
     env = make_env(env_name)
     cfg = get_arch(arch)
     rng = jax.random.PRNGKey(seed)
@@ -340,6 +376,7 @@ def build_runtime(spec: LeagueSpec, *, env_name: str = "rps",
     seg_rows = num_envs * n_learner_slots
     seg_frames = seg_rows * unroll_len
 
+    heartbeat = Heartbeat()
     roles: List[RoleRuntime] = []
     for i, role in enumerate(spec):
         segs = ring_segments or max(2, 2 * role.num_actors)
@@ -351,13 +388,17 @@ def build_runtime(spec: LeagueSpec, *, env_name: str = "rps",
                           seed=seed * 1000 + i * 100 + a,
                           inf_server=inf_server)
             actor_workers.append(ActorWorker(
-                f"actor/{role.name}/{a}", actor, ds))
+                f"actor/{role.name}/{a}", actor, ds, heartbeat=heartbeat,
+                heartbeat_timeout_s=heartbeat_timeout_s))
         step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
         learner = Learner(league, step, opt,
                           league.model_pool.pull(ModelKey(role.name, 0)),
                           agent_id=role.name, data_server=ds)
         roles.append(RoleRuntime(
             spec=role, actors=actor_workers,
-            learner=LearnerWorker(f"learner/{role.name}", learner, ds),
+            learner=LearnerWorker(f"learner/{role.name}", learner, ds,
+                                  heartbeat=heartbeat,
+                                  heartbeat_timeout_s=heartbeat_timeout_s),
             data_server=ds))
-    return LeagueRuntime(league, roles, inf_server=inf_server)
+    return LeagueRuntime(league, roles, inf_server=inf_server,
+                         heartbeat=heartbeat)

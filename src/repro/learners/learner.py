@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import LeagueMgr
 from repro.learners.replay import DataServer
+from repro.params import CachedPuller
 
 
 def _snapshot(params):
@@ -42,6 +43,14 @@ class Learner:
         # also the ModelPool's seed entry, and train_step donates its inputs
         self.params = _snapshot(init_params)
         self.opt_state = optimizer.init(self.params)
+        # version-cached pool pulls for the post-freeze adopt: an
+        # exploiter reset or PBT exploit ships only the changed leaves
+        # (and a remote pool sends zero param bytes when nothing changed).
+        # copy=False: the cache may alias the pool's live entry — safe
+        # because pool entries are replaced, never mutated, and the adopt
+        # below snapshots before the donating train step ever sees them —
+        # so adopting costs exactly ONE deep copy, as before
+        self._puller = CachedPuller(league.model_pool, copy=False)
         self.data_server = data_server or DataServer()
         self.publish_every = publish_every
         self.step_count = 0
@@ -76,13 +85,17 @@ class Learner:
         theta_{v+1} is re-pulled from the ModelPool rather than assumed to
         equal our live params: the LeagueMgr may have reset it to the seed
         (exploiter reset-on-freeze) or PBT-exploited the leader's weights —
-        either way the pool entry is authoritative. The pull is snapshotted
-        so our (donating) train step never shares buffers with the pool."""
+        either way the pool entry is authoritative. The pull rides the
+        param plane (`pull_if_changed` under a `CachedPuller`: changed
+        leaves only on a warm cache) and is then snapshotted, so our
+        (donating) train step never shares buffers with the pool OR the
+        puller's cache."""
+        old_key = self.current_key
         new_key = self.league.end_learning_period(
             self.agent_id, _snapshot(self.params), reason=reason)
-        # copy=True makes the pull itself the snapshot — exactly one deep
-        # copy whether or not the pool is snapshot_on_pull
-        self.params = self.league.model_pool.pull(new_key, copy=True)
+        self.params = _snapshot(self._puller.get(new_key))
+        if old_key != new_key:
+            self._puller.drop(old_key)       # one lineage key cached, ever
         self.opt_state = self.optimizer.init(self.params)   # fresh moments
         self.task = self.league.request_learner_task(self.agent_id)
         return new_key

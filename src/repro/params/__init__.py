@@ -1,0 +1,17 @@
+"""The param plane: versioned, content-addressed parameter distribution.
+
+One manifest per hosted pytree (`ParamManifest`: monotonic version +
+per-leaf content hashes), minted by `ModelPool.push`, lets every
+consumer synchronize by the cheapest sufficient means — `NotModified`
+tags, changed-leaf deltas, or hash-gated InfServer hot-swaps — instead
+of re-shipping the full pytree on every pull. See
+docs/architecture.md ("The param plane").
+"""
+from repro.params.cache import CachedPuller
+from repro.params.manifest import (NotModified, ParamDelta, ParamManifest,
+                                   apply_delta, build_manifest,
+                                   flatten_with_paths, leaf_hash)
+
+__all__ = ["CachedPuller", "NotModified", "ParamDelta", "ParamManifest",
+           "apply_delta", "build_manifest", "flatten_with_paths",
+           "leaf_hash"]

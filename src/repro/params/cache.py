@@ -1,0 +1,61 @@
+"""Version-cached parameter pulls: the consumer side of the param plane.
+
+`CachedPuller` wraps anything with the ModelPool pull surface — the
+in-process `repro.core.ModelPool`, the RPC `ModelPoolClient`, or any
+test double — and turns every `get` into the cheapest sufficient
+operation:
+
+* cache current  -> one `NotModified` tag crosses the seam, the cached
+  pytree is returned as-is (zero copies, zero bytes of params);
+* cache stale    -> only the changed leaves cross, grafted functionally
+  onto the cached copy (`apply_delta` never mutates the old object, so
+  a copy the caller handed elsewhere — e.g. hosted live by an
+  InfServer — is never written through);
+* cache empty / pool without `pull_if_changed` -> a plain full pull.
+
+The cached object is returned by reference: callers must treat it as
+immutable (every producer in this codebase does — the ModelPool replaces
+entries, never mutates them). Callers that feed a donating train step
+must snapshot first, exactly as they must after a plain `pull`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Hashable, Optional, Tuple
+
+from repro.params.manifest import NotModified, ParamManifest, apply_delta
+
+
+class CachedPuller:
+    def __init__(self, pool, copy: Optional[bool] = None):
+        self._pool = pool
+        self._copy = copy
+        self._cache: Dict[Hashable, Tuple[ParamManifest, Any]] = {}
+
+    def get(self, key) -> Any:
+        return self.get_with_manifest(key)[0]
+
+    def get_with_manifest(self, key) -> Tuple[Any, Optional[ParamManifest]]:
+        """Current params for `key` plus their manifest (None when the
+        pool predates the param plane and only `pull` exists)."""
+        pull_if_changed = getattr(self._pool, "pull_if_changed", None)
+        if pull_if_changed is None:
+            return self._pool.pull(key), None
+        ent = self._cache.get(key)
+        have = ent[0].version if ent is not None else None
+        r = pull_if_changed(key, have, copy=self._copy)
+        if isinstance(r, NotModified):
+            return ent[1], ent[0]
+        params = r.params if r.full else apply_delta(ent[1], r.leaves)
+        self._cache[key] = (r.manifest, params)
+        return params, r.manifest
+
+    def manifest(self, key) -> Optional[ParamManifest]:
+        """The cached manifest (None if `key` was never pulled)."""
+        ent = self._cache.get(key)
+        return ent[0] if ent is not None else None
+
+    def drop(self, key) -> None:
+        self._cache.pop(key, None)
+
+    def clear(self) -> None:
+        self._cache.clear()

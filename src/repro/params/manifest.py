@@ -1,0 +1,136 @@
+"""Versioned, content-addressed parameter manifests (the param plane).
+
+Every pytree the ModelPool hosts gets a `ParamManifest`: a monotonic
+per-key version plus one content hash per leaf (blake2b over
+dtype/shape/bytes), minted by the pool and shipped to every consumer.
+The manifest is what makes cheap synchronization possible everywhere
+else in the system:
+
+* **hash-gated pulls** — `ModelPool.pull_if_changed(key, have_version)`
+  answers `NotModified` when the caller is current, or a `ParamDelta`
+  carrying only the leaves whose hash changed (the full pytree only when
+  the caller's version is unknown to the server);
+* **hash-gated hot-swap** — the InfServer skips re-upload (and, on the
+  mesh path, re-sharding) when an incoming route refresh carries the
+  `tree_hash` it already hosts;
+* **bit-exact reconstruction** — `apply_delta` grafts changed leaves
+  onto the consumer's cached copy by leaf path; the result hashes to the
+  new manifest, which `CachedPuller` treats as the correctness oracle.
+
+Leaves are addressed by their `jax.tree_util.keystr` path, so manifests
+survive serialization (plain str->str dicts) and diff across processes.
+Hashing reads the raw host bytes (`np.asarray` is zero-copy for CPU jax
+arrays); manifests are minted lazily — a pool that is never asked for
+one (the in-process `--sync` loop) never pays for hashing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def leaf_hash(x) -> str:
+    """Content hash of one array leaf: dtype + shape + raw bytes. Hashes
+    through the buffer protocol — no byte-copy of the (possibly huge)
+    leaf, which matters because the ModelPool mints manifests under its
+    global lock."""
+    a = np.ascontiguousarray(np.asarray(x))
+    h = hashlib.blake2b(digest_size=16)
+    h.update(a.dtype.str.encode())
+    h.update(repr(a.shape).encode())
+    h.update(a.data)
+    return h.hexdigest()
+
+
+def flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    """(keystr-path, leaf) pairs in canonical flatten order."""
+    import jax
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamManifest:
+    """The version identity of one hosted pytree: per-leaf content
+    hashes keyed by leaf path, a whole-tree hash over them, and the
+    pool's monotonic per-key version counter."""
+    version: int
+    leaf_hashes: Dict[str, str]
+    tree_hash: str
+    nbytes: int
+
+    def changed_paths(self, old: "ParamManifest") -> Optional[List[str]]:
+        """Leaf paths whose hash differs from `old`. None means the leaf
+        SET itself changed (a reshaped/renamed pytree) — no delta exists
+        and the consumer needs a full pull."""
+        if set(self.leaf_hashes) != set(old.leaf_hashes):
+            return None
+        return [p for p, h in self.leaf_hashes.items()
+                if old.leaf_hashes[p] != h]
+
+    def __eq__(self, other):
+        return (isinstance(other, ParamManifest)
+                and self.version == other.version
+                and self.tree_hash == other.tree_hash)
+
+    def __hash__(self):
+        return hash((self.version, self.tree_hash))
+
+
+def build_manifest(params, version: int) -> ParamManifest:
+    leaves = flatten_with_paths(params)
+    hashes = {p: leaf_hash(x) for p, x in leaves}
+    nbytes = int(sum(np.asarray(x).nbytes for _, x in leaves))
+    top = hashlib.blake2b(digest_size=16)
+    for p in sorted(hashes):
+        top.update(p.encode())
+        top.update(hashes[p].encode())
+    return ParamManifest(version=version, leaf_hashes=hashes,
+                         tree_hash=top.hexdigest(), nbytes=nbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class NotModified:
+    """`pull_if_changed` answer when the caller's version is current:
+    nothing crosses the wire but this tag."""
+    version: int
+
+
+@dataclasses.dataclass
+class ParamDelta:
+    """`pull_if_changed` answer when the caller is stale. `full=True`
+    carries the whole pytree in `params` (caller's version unknown to
+    the server, or the leaf set changed); otherwise `leaves` maps the
+    changed leaf paths to their new arrays and the caller grafts them
+    onto its cached copy with `apply_delta`."""
+    manifest: ParamManifest
+    full: bool
+    params: Any = None
+    leaves: Optional[Dict[str, Any]] = None
+
+
+def apply_delta(base, leaves: Dict[str, Any]):
+    """Graft `leaves` (path -> new array) onto `base` FUNCTIONALLY: the
+    returned pytree shares every unchanged leaf with `base` and `base`
+    itself is never mutated — callers that handed their cached copy to
+    someone else (an InfServer hosting it live) stay safe."""
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(base)
+    out, seen = [], set()
+    for path, leaf in flat:
+        p = jax.tree_util.keystr(path)
+        if p in leaves:
+            out.append(leaves[p])
+            seen.add(p)
+        else:
+            out.append(leaf)
+    missing = set(leaves) - seen
+    if missing:
+        raise KeyError(f"delta carries leaves absent from the base pytree: "
+                       f"{sorted(missing)[:3]}...")
+    return jax.tree_util.tree_unflatten(treedef, out)

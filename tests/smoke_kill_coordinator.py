@@ -1,0 +1,118 @@
+"""CI smoke (ISSUE 5): wedge the coordinator mid-run and assert the
+worker processes exit CLEANLY via the heartbeat timeout instead of
+hanging.
+
+Not a pytest module (no `test_` prefix — the scenario takes ~30 s of
+wall clock and real SIGSTOP semantics): run as
+`PYTHONPATH=src python tests/smoke_kill_coordinator.py`.
+
+The scenario SIGSTOPs the coordinator rather than killing it — a
+stopped process keeps its sockets open and never sends RST, so the
+legacy TransportError path can never fire and only the heartbeat
+monitor (`ctrl.ping` stops advancing) can unblock the workers. Workers
+run with `--heartbeat-timeout 6`; the driver asserts both exit 0 within
+the deadline and that at least one of them says the heartbeat timed
+out.
+"""
+import os
+import pathlib
+import re
+import signal
+import subprocess
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SPEC = REPO / "examples" / "league_specs" / "main_minimax.json"
+ENV = dict(os.environ)
+ENV["PYTHONPATH"] = os.pathsep.join(
+    p for p in (str(REPO / "src"), os.environ.get("PYTHONPATH")) if p)
+
+COMMON = ["--env", "rps", "--num-envs", "4", "--unroll-len", "8"]
+
+
+def spawn(args, **kw):
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        env=ENV, cwd=REPO, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, **kw)
+
+
+def main() -> int:
+    coord = spawn(["--role", "coordinator", "--league-spec", str(SPEC),
+                   "--bind", "127.0.0.1:0", "--max-seconds", "300"] + COMMON)
+    # the coordinator prints its bound address once serving; a drainer
+    # thread scans for it (readline can't be bounded by a deadline from
+    # this thread) and KEEPS draining afterwards so a filled pipe never
+    # blocks coordinator prints mid-scenario
+    import threading
+
+    found = threading.Event()
+    box = {}
+
+    def drain():
+        for line in coord.stdout:
+            m = re.search(r"serving league at (\S+)", line)
+            if m and not found.is_set():
+                box["address"] = m.group(1)
+                found.set()
+
+    threading.Thread(target=drain, daemon=True).start()
+    assert found.wait(timeout=60), "coordinator never announced its address"
+    address = box["address"]
+    print(f"[smoke] coordinator at {address} (pid {coord.pid})", flush=True)
+
+    workers = {
+        "learner": spawn(["--role", "learner", "--league-role", "main",
+                          "--connect", address,
+                          "--heartbeat-timeout", "6"] + COMMON),
+        "actor": spawn(["--role", "actor", "--league-role", "main",
+                        "--connect", address,
+                        "--heartbeat-timeout", "6"] + COMMON),
+    }
+    time.sleep(15)                      # let the league make real progress
+    for name, p in workers.items():
+        assert p.poll() is None, f"{name} died before the fault injection"
+
+    print(f"[smoke] SIGSTOP coordinator (wedged: sockets open, no RST)",
+          flush=True)
+    os.kill(coord.pid, signal.SIGSTOP)
+
+    # heartbeat timeout is 6 s; allow generous slack for jit/env teardown
+    outs, codes = {}, {}
+    join_deadline = time.monotonic() + 120
+    try:
+        for name, p in workers.items():
+            try:
+                outs[name], _ = p.communicate(
+                    timeout=max(1.0, join_deadline - time.monotonic()))
+                codes[name] = p.returncode
+            except subprocess.TimeoutExpired:
+                p.kill()
+                outs[name], _ = p.communicate()
+                codes[name] = "HUNG"
+    finally:
+        os.kill(coord.pid, signal.SIGCONT)
+        coord.terminate()
+        try:
+            coord.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            coord.kill()
+
+    ok = True
+    for name in workers:
+        print(f"[smoke] {name}: exit={codes[name]}", flush=True)
+        tail = "\n".join(outs[name].splitlines()[-10:])
+        print(f"--- {name} output tail ---\n{tail}", flush=True)
+        if codes[name] != 0:
+            ok = False
+    if not any("heartbeat timed out" in outs[n] for n in workers):
+        print("[smoke] FAIL: no worker reported a heartbeat timeout",
+              flush=True)
+        ok = False
+    print(f"[smoke] {'PASS' if ok else 'FAIL'}", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

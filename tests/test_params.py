@@ -1,0 +1,304 @@
+"""The param plane (ISSUE 5): manifest identity, delta reconstruction,
+ModelPool version/manifest semantics under concurrent push + delta pull,
+CachedPuller behavior, the InfServer's hash-gated hot-swap, and the
+heartbeat liveness primitives."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.model_pool import ModelPool
+from repro.core.types import ModelKey
+from repro.distributed.heartbeat import Heartbeat, HeartbeatMonitor
+from repro.params import (CachedPuller, NotModified, apply_delta,
+                          build_manifest, leaf_hash)
+
+
+def _params(scale=1.0, n=3):
+    rng = np.random.default_rng(0)
+    return {f"layer{i}": {"w": (scale * rng.normal(size=(8, 8))).astype(np.float32),
+                          "b": np.full((8,), scale, np.float32)}
+            for i in range(n)}
+
+
+# -- manifest ----------------------------------------------------------------
+def test_leaf_hash_covers_dtype_shape_and_bytes():
+    a = np.arange(6, dtype=np.float32)
+    assert leaf_hash(a) == leaf_hash(a.copy())
+    assert leaf_hash(a) != leaf_hash(a.astype(np.float64))
+    assert leaf_hash(a) != leaf_hash(a.reshape(2, 3))
+    b = a.copy(); b[0] += 1
+    assert leaf_hash(a) != leaf_hash(b)
+
+
+def test_manifest_diff_and_tree_hash():
+    p = _params()
+    m0 = build_manifest(p, 0)
+    assert m0.nbytes == sum(x.nbytes for lyr in p.values() for x in lyr.values())
+    p2 = {k: dict(v) for k, v in p.items()}
+    p2["layer1"]["b"] = p["layer1"]["b"] + 1
+    m1 = build_manifest(p2, 1)
+    assert m1.tree_hash != m0.tree_hash
+    assert m1.changed_paths(m0) == ["['layer1']['b']"]
+    # same content, different version: hashes agree, zero changed paths
+    m0b = build_manifest(p, 5)
+    assert m0b.tree_hash == m0.tree_hash and m0b.changed_paths(m0) == []
+    # leaf-set change (new layer): no delta exists
+    p3 = dict(p2, layer9={"w": np.zeros((2, 2), np.float32)})
+    assert build_manifest(p3, 2).changed_paths(m0) is None
+
+
+def test_apply_delta_is_functional_and_bit_exact():
+    base = _params()
+    new_b = base["layer0"]["b"] + 3
+    out = apply_delta(base, {"['layer0']['b']": new_b})
+    assert out["layer0"]["b"] is new_b
+    assert out["layer2"]["w"] is base["layer2"]["w"]   # unchanged leaves shared
+    assert np.array_equal(base["layer0"]["b"], np.full((8,), 1, np.float32))
+    with pytest.raises(KeyError):
+        apply_delta(base, {"['nope']": new_b})
+
+
+# -- ModelPool versioning ----------------------------------------------------
+def test_pool_version_monotonic_and_membership_independent():
+    pool = ModelPool()
+    k = ModelKey("main", 0)
+    pool.push(k, _params())
+    assert pool.version(k) == 0 and pool.membership_version == 1
+    pool.push(k, _params(2.0))
+    assert pool.version(k) == 1 and pool.membership_version == 1  # same key set
+    k2 = ModelKey("main", 1)
+    pool.push(k2, _params())
+    assert pool.version(k2) == 0 and pool.membership_version == 2
+    assert pool.pull_attr(k)["version"] == 1
+
+
+def test_pull_if_changed_protocol():
+    pool = ModelPool()
+    k = ModelKey("main", 0)
+    pool.push(k, _params())
+    r = pool.pull_if_changed(k, None)
+    assert r.full and r.manifest.version == 0
+    assert isinstance(pool.pull_if_changed(k, 0), NotModified)
+    pool.push(k, dict(_params(), layer0={"w": _params()["layer0"]["w"],
+                                         "b": np.zeros((8,), np.float32)}))
+    d = pool.pull_if_changed(k, 0)
+    assert not d.full and set(d.leaves) == {"['layer0']['b']"}
+    # prehistoric / unknown versions fall back to a full pull
+    assert pool.pull_if_changed(k, 999).full
+    with pytest.raises(KeyError):
+        pool.pull_if_changed(ModelKey("ghost", 0), None)
+
+
+def test_frozen_key_pulls_are_noops_forever():
+    pool = ModelPool()
+    k = ModelKey("opp", 0)
+    pool.push(k, _params())
+    pool.freeze(k)
+    v = pool.version(k)
+    for _ in range(3):
+        assert isinstance(pool.pull_if_changed(k, v), NotModified)
+    with pytest.raises(ValueError):
+        pool.push(k, _params(2.0))
+
+
+def test_snapshot_on_pull_applies_to_delta_leaves():
+    """The aliasing guard carries over: delta leaves from a
+    snapshot_on_pull pool are private copies, so a consumer can never
+    corrupt (or be corrupted by) the stored entry."""
+    pool = ModelPool(snapshot_on_pull=True)
+    k = ModelKey("main", 0)
+    p = _params()
+    pool.push(k, p)
+    v0 = pool.version(k)
+    pool.pull_if_changed(k, None)                       # seed the history
+    p2 = {kk: dict(vv) for kk, vv in p.items()}
+    p2["layer0"]["b"] = p["layer0"]["b"] + 1
+    pool.push(k, p2)
+    d = pool.pull_if_changed(k, v0)
+    leaf = d.leaves["['layer0']['b']"]
+    leaf[:] = -99.0                                      # vandalize the copy
+    assert np.array_equal(pool.pull(k, copy=False)["layer0"]["b"],
+                          p["layer0"]["b"] + 1)
+    # copy=False opts out: the live stored leaf comes back
+    d2 = pool.pull_if_changed(k, v0, copy=False)
+    assert d2.leaves["['layer0']['b']"] is p2["layer0"]["b"]
+
+
+def test_concurrent_push_and_delta_pull_consistency():
+    """Pushers bump versions while pullers sync by version: every puller
+    observation must be internally consistent (the received params hash
+    to the received manifest) and versions must be monotonic per
+    observer."""
+    pool = ModelPool(snapshot_on_pull=True)
+    k = ModelKey("main", 0)
+    pool.push(k, _params(0.0))
+    stop = threading.Event()
+    errors = []
+
+    def pusher():
+        i = 0
+        while not stop.is_set():
+            i += 1
+            p = _params(float(i % 7))
+            p["layer1"]["b"] = np.full((8,), i, np.float32)
+            pool.push(k, p, step=i)
+
+    def puller():
+        try:
+            puller = CachedPuller(pool)
+            last_v = -1
+            for _ in range(50):
+                params, man = puller.get_with_manifest(k)
+                assert man.version >= last_v, "version went backwards"
+                last_v = man.version
+                got = build_manifest(params, man.version)
+                assert got.tree_hash == man.tree_hash, \
+                    "reconstructed params do not hash to their manifest"
+        except Exception as e:                       # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=pusher, daemon=True)] \
+        + [threading.Thread(target=puller) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads[1:]:
+        t.join(timeout=60.0)
+    stop.set()
+    threads[0].join(timeout=10.0)
+    assert not errors, errors[0]
+    assert pool.pull_stats["delta"] + pool.pull_stats["noop"] > 0
+
+
+# -- CachedPuller ------------------------------------------------------------
+def test_cached_puller_reuses_and_updates():
+    pool = ModelPool(snapshot_on_pull=True)
+    k = ModelKey("main", 0)
+    pool.push(k, _params())
+    pu = CachedPuller(pool)
+    a, ma = pu.get_with_manifest(k)
+    b, _ = pu.get_with_manifest(k)
+    assert a is b                              # NotModified: same object back
+    assert pool.pull_stats["noop"] == 1
+    pool.push(k, _params(3.0))
+    c, mc = pu.get_with_manifest(k)
+    assert mc.version == ma.version + 1
+    assert np.array_equal(c["layer0"]["w"], _params(3.0)["layer0"]["w"])
+    assert pu.manifest(k).version == mc.version
+
+
+def test_cached_puller_falls_back_without_pull_if_changed():
+    class LegacyPool:
+        def __init__(self):
+            self.pulls = 0
+        def pull(self, key):
+            self.pulls += 1
+            return {"w": np.ones((2,), np.float32)}
+
+    legacy = LegacyPool()
+    pu = CachedPuller(legacy)
+    p1, m1 = pu.get_with_manifest("k")
+    p2, _ = pu.get_with_manifest("k")
+    assert m1 is None and legacy.pulls == 2    # no versioning: plain pulls
+
+
+# -- InfServer hash-gated hot-swap -------------------------------------------
+@pytest.fixture(scope="module")
+def infserver_setup():
+    import jax
+
+    from repro.configs import get_arch
+    from repro.infserver import InfServer
+    from repro.models import init_params
+
+    cfg = get_arch("tleague-policy-s")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_infserver_hot_swap_noops_on_matching_hash(infserver_setup):
+    from repro.infserver import InfServer
+    from repro.params import build_manifest
+
+    cfg, params = infserver_setup
+    server = InfServer(cfg, 6, max_batch=16)
+    h = build_manifest(params, 0).tree_hash
+    server.register_model("theta", params, content_hash=h, version=0)
+    hosted = server._models["theta"]
+    assert server.swaps == 1
+    # identical refresh: gated off — no re-place, registry object untouched
+    server.update_params(params, key="theta", content_hash=h, version=0)
+    assert server.swap_noops == 1 and server._models["theta"] is hosted
+    assert server.has_model("theta", content_hash=h)
+    assert not server.has_model("theta", content_hash="deadbeef")
+    # a stale straggler (older pool version) must not regress the route
+    server.update_params(params, key="theta", content_hash="old", version=-1)
+    assert server.swap_stale_drops == 1 and server._models["theta"] is hosted
+    # genuinely new content swaps (and updates the hosted hash)
+    import jax
+    new = jax.tree.map(lambda x: x + 1, params)
+    h2 = build_manifest(new, 1).tree_hash
+    server.update_params(new, key="theta", content_hash=h2, version=1)
+    assert server.swaps == 2 and server._models["theta"] is not hosted
+    assert server.stats()["swap_noops"] == 1
+
+
+def test_infserver_hot_swap_noop_preserves_stack_cache(infserver_setup):
+    """The grouped-path stacked-params cache survives a gated refresh —
+    the exact waste the hash gate exists to avoid (on the mesh path the
+    same gate also skips the re-shard device_put)."""
+    from repro.infserver import InfServer
+    from repro.params import build_manifest
+
+    cfg, params = infserver_setup
+    server = InfServer(cfg, 6, max_batch=64)
+    h = build_manifest(params, 0).tree_hash
+    server.register_model("theta", params, content_hash=h)
+    server.register_model("phi", params, content_hash=h)
+    obs = np.zeros((2, 26), np.int32)
+    t1, t2 = server.submit(obs, model="theta"), server.submit(obs, model="phi")
+    server.flush()
+    server.get(t1), server.get(t2)
+    assert len(server._stack_cache) == 1
+    stacked = next(iter(server._stack_cache.values()))
+    server.update_params(params, key="theta", content_hash=h)   # gated off
+    assert next(iter(server._stack_cache.values()), None) is stacked
+    server.update_params(params, key="theta")                   # ungated swap
+    assert not server._stack_cache
+
+
+# -- heartbeat ---------------------------------------------------------------
+def test_heartbeat_beat_and_stall():
+    hb = Heartbeat()
+    assert hb.ping() == 0
+    hb.beat()
+    assert hb.ping() == 1 and not hb.stalled(5.0)
+    time.sleep(0.05)
+    assert hb.stalled(0.01)
+    hb.start_beating(0.02)
+    time.sleep(0.2)
+    hb.stop_beating()
+    assert hb.ping() > 1 and not hb.stalled(1.0)
+
+
+@pytest.mark.timeout(60)
+def test_heartbeat_monitor_detects_wedged_coordinator():
+    """A server that ANSWERS pings but whose heartbeat stops advancing is
+    wedged: the monitor must fire on_dead (the slow-vs-dead distinction —
+    pure transport errors could never catch this case)."""
+    from repro.distributed.transport import RpcServer
+
+    hb = Heartbeat()
+    hb.start_beating(0.02)
+    with RpcServer({"ctrl": hb}) as srv:
+        died = threading.Event()
+        mon = HeartbeatMonitor(srv.address, interval_s=0.05, timeout_s=0.6,
+                               on_dead=died.set)
+        mon.start()
+        time.sleep(0.4)
+        assert not mon.dead                   # beating: alive
+        hb.stop_beating()                     # wedge: pings answer, no advance
+        assert died.wait(timeout=10.0)
+        assert mon.dead
+        mon.join(timeout=5.0)

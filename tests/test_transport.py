@@ -75,14 +75,45 @@ def test_model_pool_seam_roundtrip(league, params):
         pool = tp.ModelPoolClient(srv.address)
         key = ModelKey("main", 0)
         pulled = pool.pull(key)
-        # remote pull is a snapshot by construction: fresh numpy buffers
+        # a first remote pull lands in fresh numpy buffers
         for a, b in zip(jax.tree.leaves(pulled), jax.tree.leaves(params)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b))
             assert isinstance(a, np.ndarray)
         pool.push(key, pulled, step=5)
-        assert pool.pull_attr(key) == {"step": 5, "frozen": False}
+        assert pool.pull_attr(key) == {"step": 5, "frozen": False,
+                                       "version": 1}
         assert key in pool and ModelKey("ghost", 9) not in pool
         assert pool.membership_version == league.model_pool.membership_version
+
+
+def test_model_pool_client_version_cache(league, params):
+    """The client's local version cache: a repeat pull costs the server a
+    NotModified answer (zero param bytes), a push in between costs a
+    changed-leaves delta — and both reconstruct the exact pool content."""
+    with tp.serve_league(league) as srv:
+        pool = tp.ModelPoolClient(srv.address)
+        key = ModelKey("main", 0)
+        server_pool = league.model_pool
+        p1 = pool.pull(key)
+        base_noop = server_pool.pull_stats["noop"]
+        p2 = pool.pull(key)
+        assert p2 is p1                      # cache hit, same object back
+        assert server_pool.pull_stats["noop"] == base_noop + 1
+        # a push invalidates: the next pull arrives as a delta
+        new = jax.tree.map(lambda x: np.asarray(x) + 1.0, p1)
+        server_pool.push(key, new, step=9)
+        base_delta = server_pool.pull_stats["delta"]
+        p3 = pool.pull(key)
+        assert server_pool.pull_stats["delta"] == base_delta + 1
+        for a, b in zip(jax.tree.leaves(p3), jax.tree.leaves(new)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # copy=True hands out a private copy, not the cache itself
+        p4 = pool.pull(key, copy=True)
+        assert p4 is not p3
+        # raw protocol surface
+        assert isinstance(pool.pull_if_changed(key, pool.version(key)),
+                          tp.NotModified)
+        assert pool.manifest(key).version == server_pool.version(key)
 
 
 def test_league_seam_roundtrip(league):
@@ -237,6 +268,148 @@ def test_rpc_server_concurrent_clients(league):
             t.join(timeout=30.0)
         ids = [tid for r in results for tid in r]
         assert len(ids) == len(set(ids)) == 40   # every task id unique
+
+
+# -- streaming transfer (param plane) ----------------------------------------
+def test_chunked_streaming_roundtrip_bit_exact():
+    """Leaves above the stream threshold ride out-of-band as bounded
+    chunks; the reassembled pytree must be bit-exact, mixed with small
+    (in-frame) leaves and protocol dataclasses."""
+    rng = np.random.default_rng(3)
+    big = rng.normal(size=(512, 600)).astype(np.float32)      # ~1.2 MB
+    msg = {"big": big, "small": np.arange(5, dtype=np.int64),
+           "key": ModelKey("main", 2), "t": (1, "two")}
+    pool = type("Echo", (), {"echo": staticmethod(lambda m: m)})()
+    with tp.RpcServer({"e": pool}) as srv:
+        c = tp.RpcClient(srv.address)
+        out = c.call("e.echo", msg)
+        c.close()
+    assert out["big"].dtype == big.dtype
+    np.testing.assert_array_equal(out["big"], big)
+    np.testing.assert_array_equal(out["small"], msg["small"])
+    assert out["key"] == msg["key"] and out["t"] == (1, "two")
+    # the frame itself really is small: the bulk bytes were hoisted out
+    blobs = []
+    frame = tp.packb(msg, blobs)
+    assert len(frame) < 4096 and sum(b.nbytes for b in blobs) == big.nbytes
+
+
+def test_chunking_override_is_scoped():
+    big = np.zeros((200_000,), np.float32)                    # 800 KB
+    with tp.chunking(threshold=1 << 62):
+        blobs = []
+        assert len(tp.packb({"x": big}, blobs)) > big.nbytes  # monolithic
+        assert not blobs
+    blobs = []
+    tp.packb({"x": big}, blobs)
+    assert len(blobs) == 1                                    # restored
+
+
+@pytest.mark.timeout(60)
+def test_killed_server_mid_chunk_raises_transport_error():
+    """A peer that dies halfway through a streamed blob must surface as
+    TransportError on the receiving side, not hang or return torn data."""
+    import socket
+    import struct
+
+    arr = np.zeros((300_000,), np.float32)                    # 1.2 MB blob
+    blobs = []
+    payload = tp.packb({"w": arr}, blobs)
+    assert len(blobs) == 1
+    raw = blobs[0].tobytes()
+    wire = (struct.pack(">BQ", tp._CODEC_ID | tp._STREAM_FLAG, len(payload))
+            + payload + struct.pack(">I", 1)
+            + struct.pack(">Q", len(raw)) + raw[:len(raw) // 2])  # truncated
+
+    lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+
+    def half_server():
+        conn, _ = lst.accept()
+        conn.sendall(wire)
+        conn.close()                        # dies mid-chunk
+
+    t = threading.Thread(target=half_server, daemon=True)
+    t.start()
+    client = socket.create_connection(lst.getsockname(), timeout=10.0)
+    try:
+        with pytest.raises(tp.TransportError, match="mid-chunk"):
+            tp.recv_msg(client)
+    finally:
+        client.close()
+        lst.close()
+        t.join(timeout=5.0)
+
+
+def test_infserver_client_hash_gated_hot_swap(cfg, params):
+    """`update_params(content_hash=...)` over RPC: the second refresh is
+    answered by the cheap `has_model` probe and the params are never
+    shipped — the server's swap counter must not move."""
+    from repro.params import build_manifest
+
+    server = InfServer(cfg, 6, max_batch=16)
+    league = LeagueMgr()
+    league.add_learning_agent("main", params)
+    h = build_manifest(params, 0).tree_hash
+    with tp.serve_league(league, server) as srv:
+        client = tp.InfServerClient(tp.RpcClient(srv.address))
+        client.update_params(params, key="theta", content_hash=h, version=0)
+        assert server.swaps == 1
+        client.update_params(params, key="theta", content_hash=h, version=0)
+        client.ensure_model("theta", params, content_hash=h)
+        assert server.swaps == 1             # both gated off server-side
+        assert client.has_model("theta", content_hash=h)
+        assert not client.has_model("phi")
+        stats = client.stats()
+        assert stats["swaps"] == 1 and stats["swap_noops"] == 0
+
+
+def test_concurrent_push_and_delta_pull_over_rpc(league):
+    """The param plane under cross-process-style concurrency: one client
+    keeps pushing while N cached clients pull — every pulled pytree must
+    hash to its own manifest (no torn deltas), versions monotonic."""
+    from repro.params import build_manifest
+
+    key = ModelKey("main", 0)
+    with tp.serve_league(league) as srv:
+        stop = threading.Event()
+        errors = []
+
+        def pusher():
+            c = tp.ModelPoolClient(srv.address)
+            i = 0
+            while not stop.is_set():
+                i += 1
+                c.push(key, {"w": np.full((64, 64), i, np.float32),
+                             "b": np.full((4,), i % 3, np.float32)}, step=i)
+            c.close()
+
+        def puller():
+            try:
+                c = tp.ModelPoolClient(srv.address)
+                last_v = -1
+                for _ in range(25):
+                    p = c.pull(key)
+                    man = c._puller.manifest(key)
+                    assert man.version >= last_v
+                    last_v = man.version
+                    assert build_manifest(p, man.version).tree_hash \
+                        == man.tree_hash, "torn delta"
+                c.close()
+            except Exception as e:           # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=pusher, daemon=True)] + \
+            [threading.Thread(target=puller) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads[1:]:
+            t.join(timeout=60.0)
+        stop.set()
+        threads[0].join(timeout=10.0)
+        assert not errors, errors[0]
+        assert league.model_pool.pull_stats["delta"] > 0
 
 
 # -- sharded serving parity --------------------------------------------------
