@@ -28,6 +28,14 @@ Prints ``name,us_per_call,derived`` CSV.
                         chunked path and >=50x no-op-vs-full; writes
                         BENCH_params.json. `--against FILE` re-runs and
                         fails on regression vs the stored record (CI).
+  collector_throughput— the collector plane: served-path frames/sec vs
+                        VectorEnv slot count (>=3x at 16 slots vs 1
+                        asserted), ticket coalescing across two
+                        collectors sharing one InfServer (batch
+                        occupancy must improve), and the uniform
+                        sampler's bit-identity to the pre-refactor
+                        DataServer draw; writes BENCH_collector.json.
+                        Supports `--against FILE` like param_plane.
 
 BENCH_*.json records are stamped with the git sha + UTC timestamp and
 written atomically (tmp file + rename), so the bench trajectory files stay
@@ -743,6 +751,139 @@ def _check_against(record: dict, prior: dict, label: str,
     _emit("params/regression_check", 0.0, f"ok_vs={label}")
 
 
+def collector_throughput(out_path: str | None = None,
+                         against: str | None = None):
+    """ISSUE 6 acceptance: the collector plane's three headline numbers.
+
+      * slot scaling   — served-path frames/sec at 1 / 4 / 16 VectorEnv
+                         slots against one InfServer; 16 slots must be
+                         >=3x the frames/sec of 1 slot (batched central
+                         inference amortizes the forward, §3.2)
+      * coalescing     — two collectors sharing one server, driven
+                         interleaved vs back-to-back: the shared ticket
+                         stream must produce denser batches (higher
+                         mean rows per batch, fewer batches, same rows)
+      * uniform parity — the pluggable `uniform` sampler draws the
+                         bit-identical slot stream the pre-refactor
+                         `DataServer._sample_idx` drew
+
+    Writes BENCH_collector.json; with `against`, compares to the stored
+    record and fails on regression (the CI mode)."""
+    from repro.actors import build_served_rollout
+    from repro.actors.collector import ServedCollector, collect_interleaved
+    from repro.configs import get_arch
+    from repro.envs import JaxVectorEnv, make_env
+    from repro.infserver import InfServer
+    from repro.learners import DataServer
+    from repro.models import init_params
+
+    prior = (json.loads(pathlib.Path(against).read_text())
+             if against else None)
+    env = make_env("rps")
+    cfg = get_arch("tleague-policy-s")
+    theta = init_params(jax.random.PRNGKey(0), cfg)
+    phi = init_params(jax.random.PRNGKey(1), cfg)
+    T = 16
+
+    def fresh_server():
+        srv = InfServer(cfg, env.spec.num_actions, max_batch=256)
+        srv.register_model("theta", theta)
+        srv.register_model("phi", phi)
+        return srv
+
+    # -- served-path frames/sec vs slot count ------------------------------
+    fps = {}
+    for E in (1, 4, 16):
+        server = fresh_server()
+        rollout, init_carry = build_served_rollout(env, num_envs=E,
+                                                   unroll_len=T)
+        carry = init_carry(jax.random.PRNGKey(2))
+        carry, _, _ = rollout(server, "theta", "phi", carry,
+                              jax.random.PRNGKey(3))   # compile
+        n_seg = 4
+        t0 = time.perf_counter()
+        for i in range(n_seg):
+            carry, traj, _ = rollout(server, "theta", "phi", carry,
+                                     jax.random.PRNGKey(4 + i))
+        dt = time.perf_counter() - t0
+        frames = n_seg * traj["obs"].shape[0] * T      # learner rows * T
+        fps[E] = frames / dt
+        _emit(f"collector/served_slots{E}", dt / n_seg * 1e6,
+              f"fps={fps[E]:.0f}")
+    scaling = fps[16] / max(fps[1], 1e-9)
+    assert scaling >= 3.0, (
+        f"16 slots only {scaling:.2f}x the frames/sec of 1 slot (<3x)")
+
+    # -- ticket coalescing: 2 collectors, one server -----------------------
+    E_c, n_cols = 8, 2
+
+    def run(interleave):
+        srv = fresh_server()
+        cols = [ServedCollector(JaxVectorEnv(env, E_c, jit=True),
+                                unroll_len=T) for _ in range(n_cols)]
+        jobs = [("theta", "phi",
+                 cols[i].init_carry(jax.random.PRNGKey(10 + i)),
+                 jax.random.PRNGKey(20 + i)) for i in range(n_cols)]
+        if interleave:
+            collect_interleaved(cols, srv, jobs)
+        else:
+            for c, job in zip(cols, jobs):
+                c.collect(srv, *job)
+        return srv.stats()
+
+    st_solo, st_shared = run(False), run(True)
+    assert st_shared["rows_served"] == st_solo["rows_served"]
+    batch_rows_x = (st_shared["mean_batch_rows"]
+                    / max(st_solo["mean_batch_rows"], 1e-9))
+    assert batch_rows_x > 1.5, (
+        f"coalescing only grew mean batch rows {batch_rows_x:.2f}x (<=1.5x)")
+    assert st_shared["batches_run"] < st_solo["batches_run"]
+    _emit("collector/coalesce2x8", 0.0,
+          f"batch_rows_x={batch_rows_x:.2f};"
+          f"occupancy={st_shared['occupancy']:.4f}")
+
+    # -- uniform sampler bit-identity vs the pre-refactor draw -------------
+    seed, k = 7, 64
+    ds = DataServer(seed=seed, blocking=False, prefetch=False,
+                    capacity_frames=24 * T, sampler="uniform")
+    for i in range(5):
+        ds.put({"obs": np.full((4, T, 2), i, np.int32),
+                "done": np.zeros((4, T), bool)}, source="bench")
+    ref_rng = np.random.default_rng(seed)
+    idx = ds.sampler.sample(k)
+    ref = (ds._head - ds._size + ref_rng.integers(ds._size, size=k)) \
+        % ds._row_slots
+    uniform_ok = bool(np.array_equal(idx, ref))
+    assert uniform_ok, "uniform sampler diverged from pre-refactor stream"
+
+    record = {
+        "env": "rps",
+        "arch": "tleague-policy-s",
+        "unroll_len": T,
+        "served_fps_slots1": round(fps[1], 1),
+        "served_fps_slots4": round(fps[4], 1),
+        "served_fps_slots16": round(fps[16], 1),
+        "slots16_vs_1_speedup_x": round(scaling, 2),
+        "coalesce_collectors": n_cols,
+        "coalesce_slots_each": E_c,
+        "solo_mean_batch_rows": st_solo["mean_batch_rows"],
+        "shared_mean_batch_rows": st_shared["mean_batch_rows"],
+        "coalesce_batch_rows_x": round(batch_rows_x, 3),
+        "solo_occupancy": round(st_solo["occupancy"], 4),
+        "shared_occupancy": round(st_shared["occupancy"], 4),
+        "uniform_sampler_bit_identical": uniform_ok,
+    }
+    path = (pathlib.Path(out_path) if out_path
+            else _REPO / "BENCH_collector.json")
+    _write_bench(path, record)
+    _emit("collector/bench_written", 0.0, f"wrote={path.name}")
+    if prior is not None:
+        _check_against(record, prior, against,
+                       floors={"slots16_vs_1_speedup_x": (3.0, 0.5),
+                               "coalesce_batch_rows_x": (1.5, 0.5)})
+    return record
+
+
 def kernels():
     from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
     k = jax.random.PRNGKey(0)
@@ -765,14 +906,18 @@ def kernels():
 
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "infserver_throughput", "learner_throughput", "league_throughput",
-           "sharded_serving", "param_plane", "kernels", "fig4_winrate",
-           "table12_league_eval")
+           "sharded_serving", "param_plane", "collector_throughput",
+           "kernels", "fig4_winrate", "table12_league_eval")
+
+# benches whose record supports the `--against FILE` regression gate
+_AGAINST_BENCHES = ("param_plane", "collector_throughput")
 
 
 def main() -> None:
     """`python benchmarks/run.py [bench ...]` — no args runs everything.
-    `--against FILE` (with a bench that supports it, e.g. param_plane)
-    re-runs and fails on regression vs the stored record."""
+    `--against FILE` (with a bench that supports it: param_plane or
+    collector_throughput) re-runs and fails on regression vs the stored
+    record."""
     argv = list(sys.argv[1:])
     against = None
     if "--against" in argv:
@@ -780,15 +925,16 @@ def main() -> None:
         assert i + 1 < len(argv), "--against needs a FILE argument"
         against = argv[i + 1]
         del argv[i:i + 2]
-        assert "param_plane" in argv, \
-            "--against is only supported with an explicit param_plane bench"
+        assert any(n in argv for n in _AGAINST_BENCHES), \
+            "--against needs an explicit bench that supports it " \
+            f"(one of {_AGAINST_BENCHES})"
     chosen = argv or list(BENCHES)
     unknown = [n for n in chosen if n not in BENCHES]
     assert not unknown, f"unknown benches {unknown}; pick from {BENCHES}"
     print("name,us_per_call,derived", flush=True)
     for name in chosen:
-        if name == "param_plane" and against:
-            param_plane(against=against)
+        if name in _AGAINST_BENCHES and against:
+            globals()[name](against=against)
         else:
             globals()[name]()
     if argv:

@@ -1,3 +1,5 @@
 from repro.actors.policy import make_obs_policy
+from repro.actors.collector import (JitCollector, ServedCollector,
+                                    collect_interleaved)
 from repro.actors.rollout import build_rollout, build_served_rollout
 from repro.actors.actor import Actor

@@ -1,0 +1,311 @@
+"""Collector: owns N VectorEnv slots, drives acting, assembles segments.
+
+The collector plane splits what `build_rollout`/`build_served_rollout`
+used to fuse: the `VectorEnv` steps slots, the Collector decides *where
+actions come from* (local params vs. InfServer tickets) and emits the
+`(carry, traj, episodes)` segment contract everything downstream
+(`Actor`, `ActorWorker`, the `--sync` oracle, `DataServer`) already
+speaks.
+
+* **JitCollector** — local-params acting compiled into one scan. The
+  step body is the exact sequence the old `build_rollout` traced
+  (identical rng split order, identical autoreset select), so its
+  output is bit-identical to the pre-collector driver.
+* **ServedCollector** — SEED-style acting through an InfServer ticket
+  stream. Exposed as a *phase-split* machine (`begin` /
+  `submit_step` / `complete_step` / `submit_bootstrap` / `finish`) so
+  many collectors can interleave their submits into one server and
+  coalesce into dense batches; `collect(...)` runs the phases
+  back-to-back for the solo case. With ``coalesce=True`` (default) the
+  collector never calls `server.flush()` — the first `get()` of an
+  unresolved ticket flushes *everything pending on the server*, so
+  whoever reads first drains every collector's tickets in one grouped
+  forward. ``coalesce=False`` restores the old eager per-step flush.
+
+`collect_interleaved` drives K collectors over one server in lockstep
+(step t of every collector submits before any of them completes), which
+is both the throughput layout and the deterministic harness the
+coalescing benchmark uses.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.actors.policy import make_obs_policy
+from repro.envs.vector import VectorEnv
+
+
+def _resolve_slots(spec, learner_slots):
+    learner_slots = tuple(learner_slots if learner_slots is not None
+                          else range(spec.team_size))
+    opp_slots = tuple(i for i in range(spec.num_agents)
+                      if i not in learner_slots)
+    return learner_slots, opp_slots
+
+
+class JitCollector:
+    """Local-params collector: one jitted scan over `unroll_len` steps.
+
+    ``collect(learner_params, opponent_params, carry, rng)`` is a pure
+    function with `build_rollout`'s exact signature and rng discipline —
+    `Actor` uses it unchanged via the `build_rollout` wrapper.
+    """
+
+    def __init__(self, venv: VectorEnv, cfg, *, unroll_len: int,
+                 learner_slots: Sequence[int] | None = None, jit: bool = True):
+        assert venv.jittable, "JitCollector needs a jittable VectorEnv " \
+            "(use ServedCollector / HostVectorEnv for host-loop envs)"
+        spec = venv.spec
+        self.venv = venv
+        self.unroll_len = unroll_len
+        self.learner_slots, self.opp_slots = _resolve_slots(spec, learner_slots)
+        policy = make_obs_policy(cfg, spec.num_actions)
+        n_l = len(self.learner_slots)
+        E = venv.num_envs
+        learner_slots, opp_slots = self.learner_slots, self.opp_slots
+
+        def _act(params, rng, obs_slots):
+            E_, k, L0 = obs_slots.shape
+            a, logp, v = policy.act(params, rng, obs_slots.reshape(E_ * k, L0))
+            return (a.reshape(E_, k), logp.reshape(E_, k), v.reshape(E_, k))
+
+        def collect(learner_params, opponent_params, carry, rng):
+            def step_fn(c, rng_t):
+                states, obs = c
+                r_l, r_o, r_env, r_reset = jax.random.split(rng_t, 4)
+                acts = jnp.zeros((E, spec.num_agents), jnp.int32)
+                a_l, logp_l, v_l = _act(learner_params, r_l,
+                                        obs[:, list(learner_slots)])
+                acts = acts.at[:, list(learner_slots)].set(a_l)
+                if opp_slots:
+                    a_o, _, _ = _act(opponent_params, r_o,
+                                     obs[:, list(opp_slots)])
+                    acts = acts.at[:, list(opp_slots)].set(a_o)
+
+                states2, obs2, rewards, done, info = venv.step(states, acts,
+                                                               r_env)
+                # auto-reset finished slots (fresh keys: r_env was consumed)
+                states3, obs3 = venv.reset(r_reset)
+                states_n, obs_n = venv.autoreset(done, states3, obs3,
+                                                 states2, obs2)
+                rec = {
+                    "obs": obs[:, list(learner_slots)],        # (E, k, L)
+                    "actions": a_l,
+                    "behavior_logp": logp_l,
+                    "behavior_values": v_l,
+                    "rewards": rewards[:, list(learner_slots)],
+                    "done": done,
+                    "outcome": info.get("outcome",
+                                        jnp.zeros((E,), jnp.int32)),
+                }
+                return (states_n, obs_n), rec
+
+            ks = jax.random.split(rng, unroll_len + 1)
+            carry, recs = jax.lax.scan(step_fn, carry, ks[:-1])
+            # bootstrap value of the final observation (fresh subkey, not
+            # the segment rng already split for the scan)
+            _, final_obs = carry
+            _, _, v_boot = _act(learner_params, ks[-1],
+                                final_obs[:, list(learner_slots)])
+
+            # reshape (T, E, k, ...) -> (E*k, T, ...)
+            def to_bt(x):
+                x = jnp.moveaxis(x, 0, 1)                      # (E, T, k, ...)
+                if x.ndim >= 3 and x.shape[2] == n_l:
+                    x = jnp.moveaxis(x, 2, 1)                  # (E, k, T, ...)
+                    return x.reshape((E * n_l, unroll_len) + x.shape[3:])
+                return x
+
+            done_bt = jnp.repeat(jnp.moveaxis(recs["done"], 0, 1), n_l,
+                                 axis=0)                       # (E*k, T)
+            traj = {
+                "obs": to_bt(recs["obs"]),
+                "actions": to_bt(recs["actions"]),
+                "behavior_logp": to_bt(recs["behavior_logp"]),
+                "behavior_values": to_bt(recs["behavior_values"]),
+                "rewards": to_bt(recs["rewards"]),
+                "done": done_bt,
+                "bootstrap_value": v_boot.reshape(E * n_l),
+            }
+            episodes = {"done": recs["done"], "outcome": recs["outcome"]}
+            return carry, traj, episodes
+
+        self.collect = jax.jit(collect) if jit else collect
+
+    def init_carry(self, rng):
+        return self.venv.reset(rng)
+
+
+class ServedCollector:
+    """Ticket-stream collector: policy forwards go through an InfServer.
+
+    Phase-split per step so K collectors can interleave on one server:
+
+        c.begin(carry, rng)
+        for t in range(unroll_len):
+            c.submit_step(server, theta_key, phi_key)   # enqueue tickets
+            c.complete_step(server)                     # resolve + step env
+        c.submit_bootstrap(server, theta_key)
+        carry, traj, episodes = c.finish(server)
+
+    `complete_step`'s first `server.get()` flushes every pending ticket
+    on the server — including other collectors' — so interleaved drivers
+    get one dense grouped forward per step instead of one per collector.
+    """
+
+    def __init__(self, venv: VectorEnv, *, unroll_len: int,
+                 learner_slots: Sequence[int] | None = None,
+                 coalesce: bool = True):
+        spec = venv.spec
+        self.venv = venv
+        self.unroll_len = unroll_len
+        self.coalesce = coalesce
+        self.learner_slots, self.opp_slots = _resolve_slots(spec, learner_slots)
+        self.n_l, self.n_o = len(self.learner_slots), len(self.opp_slots)
+        self._phase = "idle"
+
+    # -- phase machine ------------------------------------------------------
+    def begin(self, carry, rng):
+        assert self._phase in ("idle",), f"begin() in phase {self._phase}"
+        self._states, self._obs = carry
+        self._rng = rng
+        self._t = 0
+        self._recs = []
+        self._pending = None
+        self._phase = "submit"
+
+    def submit_step(self, server, theta_key, phi_key):
+        assert self._phase == "submit", f"submit_step() in phase {self._phase}"
+        E, n_l, n_o = self.venv.num_envs, self.n_l, self.n_o
+        obs_np = np.asarray(self._obs)
+        tkt_l = server.submit(
+            obs_np[:, list(self.learner_slots)].reshape(E * n_l, -1),
+            model=theta_key)
+        tkt_o = None
+        if self.opp_slots:
+            tkt_o = server.submit(
+                obs_np[:, list(self.opp_slots)].reshape(E * n_o, -1),
+                model=phi_key)
+        if not self.coalesce:
+            server.flush()                     # eager: θ and φ share one forward
+        self._pending = (obs_np, tkt_l, tkt_o)
+        self._phase = "complete"
+
+    def complete_step(self, server):
+        assert self._phase == "complete", \
+            f"complete_step() in phase {self._phase}"
+        E, n_l, n_o = self.venv.num_envs, self.n_l, self.n_o
+        spec = self.venv.spec
+        obs_np, tkt_l, tkt_o = self._pending
+        self._pending = None
+        # get() self-flushes anything still pending on the server — in the
+        # interleaved layout this is the single grouped forward per step
+        a_l, logp_l, v_l = (x.reshape(E, n_l) for x in server.get(tkt_l))
+        acts = np.zeros((E, spec.num_agents), np.int32)
+        acts[:, list(self.learner_slots)] = a_l
+        if tkt_o is not None:
+            acts[:, list(self.opp_slots)] = \
+                server.get(tkt_o)[0].reshape(E, n_o)
+
+        r_env, r_reset = jax.random.split(jax.random.fold_in(self._rng,
+                                                             self._t))
+        self._states, self._obs, rewards, done, outcome = \
+            self.venv.step_autoreset(self._states, jnp.asarray(acts),
+                                     r_env, r_reset)
+        rewards = np.asarray(rewards)
+        self._recs.append({
+            "obs": obs_np[:, list(self.learner_slots)],
+            "actions": a_l,
+            "behavior_logp": logp_l,
+            "behavior_values": v_l,
+            "rewards": rewards[:, list(self.learner_slots)],
+            "done": np.asarray(done),
+            "outcome": np.asarray(outcome),
+        })
+        self._t += 1
+        self._phase = "submit" if self._t < self.unroll_len else "bootstrap"
+
+    def submit_bootstrap(self, server, theta_key):
+        assert self._phase == "bootstrap", \
+            f"submit_bootstrap() in phase {self._phase}"
+        E, n_l = self.venv.num_envs, self.n_l
+        final_obs = np.asarray(self._obs)
+        self._boot_tkt = server.submit(
+            final_obs[:, list(self.learner_slots)].reshape(E * n_l, -1),
+            model=theta_key)
+        if not self.coalesce:
+            server.flush()
+        self._phase = "finish"
+
+    def finish(self, server):
+        assert self._phase == "finish", f"finish() in phase {self._phase}"
+        E, n_l = self.venv.num_envs, self.n_l
+        T = self.unroll_len
+        v_boot = server.get(self._boot_tkt)[2]
+        recs = self._recs
+
+        def to_bt(name):
+            x = np.stack([r[name] for r in recs], axis=1)   # (E, T, k, ...)
+            if x.ndim >= 3 and x.shape[2] == n_l:
+                x = np.moveaxis(x, 2, 1)                     # (E, k, T, ...)
+                return x.reshape((E * n_l, T) + x.shape[3:])
+            return x
+
+        done_te = np.stack([r["done"] for r in recs], axis=0)     # (T, E)
+        traj = {
+            "obs": to_bt("obs"),
+            "actions": to_bt("actions"),
+            "behavior_logp": to_bt("behavior_logp"),
+            "behavior_values": to_bt("behavior_values"),
+            "rewards": to_bt("rewards"),
+            "done": np.repeat(done_te.T, n_l, axis=0),            # (E*k, T)
+            "bootstrap_value": v_boot.reshape(E * n_l),
+        }
+        episodes = {"done": done_te,
+                    "outcome": np.stack([r["outcome"] for r in recs], axis=0)}
+        self._recs, self._boot_tkt = [], None
+        self._phase = "idle"
+        return (self._states, self._obs), traj, episodes
+
+    # -- solo driver --------------------------------------------------------
+    def collect(self, server, theta_key, phi_key, carry, rng):
+        """`build_served_rollout`-compatible: run all phases back-to-back."""
+        self.begin(carry, rng)
+        for _ in range(self.unroll_len):
+            self.submit_step(server, theta_key, phi_key)
+            self.complete_step(server)
+        self.submit_bootstrap(server, theta_key)
+        return self.finish(server)
+
+    def init_carry(self, rng):
+        return self.venv.reset(rng)
+
+
+def collect_interleaved(collectors: Sequence[ServedCollector], server,
+                        jobs: Sequence[Tuple]) -> list:
+    """Drive K ServedCollectors over one shared server in lockstep.
+
+    ``jobs[i] = (theta_key, phi_key, carry, rng)`` for ``collectors[i]``.
+    Every collector submits its step-t tickets before any of them
+    completes, so each step runs as one dense grouped forward over all
+    K collectors' slots. All collectors must share one `unroll_len`.
+    Returns ``[(carry, traj, episodes), ...]`` in collector order.
+    """
+    assert len(collectors) == len(jobs) and collectors
+    T = collectors[0].unroll_len
+    assert all(c.unroll_len == T for c in collectors), \
+        "interleaved collectors must share unroll_len"
+    for c, (theta, phi, carry, rng) in zip(collectors, jobs):
+        c.begin(carry, rng)
+    for _ in range(T):
+        for c, (theta, phi, _, _) in zip(collectors, jobs):
+            c.submit_step(server, theta, phi)
+        for c in collectors:
+            c.complete_step(server)
+    for c, (theta, _, _, _) in zip(collectors, jobs):
+        c.submit_bootstrap(server, theta)
+    return [c.finish(server) for c in collectors]

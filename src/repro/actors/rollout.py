@@ -1,110 +1,33 @@
-"""Jitted vectorized rollout: the Actor's Env-Agt interaction loop (§3.2).
+"""Rollout builders: thin wrappers over the collector plane (§3.2).
 
-One call steps `num_envs` environments for `unroll_len` steps (the paper's
-trajectory segment length L, eq. 1) with the learning agent on
-`learner_slots` and the sampled opponent phi on the rest. Auto-resets on
-done; emits the learner-side trajectory segment plus episode outcomes for
-LeagueMgr reporting. Pure function of (theta, phi, carry, rng) — the
-TPU-native ("Anakin") adaptation of TLeague's CPU actor fleet; the same
-function also serves host-CPU actors feeding a device learner.
+Historically this module held two full drivers — a jitted scan
+(`build_rollout`) and a SEED-style ticket loop (`build_served_rollout`)
+— that duplicated env stepping, acting, and segment assembly. Both are
+now one-line compositions of `repro.envs.vector` (slot-vectorized env)
+and `repro.actors.collector` (acting + assembly); the public signatures
+and the `(carry, traj, episodes)` contract are unchanged, and the jitted
+path is bit-identical to the pre-collector implementation (same rng
+split order, same scan body — asserted by tests/test_collector.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple
+from typing import Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.actors.policy import make_obs_policy
+from repro.actors.collector import JitCollector, ServedCollector
 from repro.envs.base import MultiAgentEnv
+from repro.envs.vector import JaxVectorEnv
 
 
 def build_rollout(env: MultiAgentEnv, cfg, *, num_envs: int, unroll_len: int,
                   learner_slots: Sequence[int] | None = None, jit: bool = True):
-    spec = env.spec
-    learner_slots = tuple(learner_slots if learner_slots is not None
-                          else range(spec.team_size))
-    opp_slots = tuple(i for i in range(spec.num_agents) if i not in learner_slots)
-    policy = make_obs_policy(cfg, spec.num_actions)
-    n_l = len(learner_slots)
-
-    v_reset = jax.vmap(env.reset)
-    v_step = jax.vmap(env.step, in_axes=(0, 0, 0))
-
-    def init_carry(rng):
-        states, obs = v_reset(jax.random.split(rng, num_envs))
-        return states, obs
-
-    def _act(params, rng, obs_slots):
-        """obs_slots: (E, k, L) -> actions/logp/values (E, k)."""
-        E, k, L0 = obs_slots.shape
-        a, logp, v = policy.act(params, rng, obs_slots.reshape(E * k, L0))
-        return (a.reshape(E, k), logp.reshape(E, k), v.reshape(E, k))
-
-    def rollout(learner_params, opponent_params, carry, rng):
-        def step_fn(c, rng_t):
-            states, obs = c
-            r_l, r_o, r_env, r_reset = jax.random.split(rng_t, 4)
-            acts = jnp.zeros((num_envs, spec.num_agents), jnp.int32)
-            a_l, logp_l, v_l = _act(learner_params, r_l, obs[:, list(learner_slots)])
-            acts = acts.at[:, list(learner_slots)].set(a_l)
-            if opp_slots:
-                a_o, _, _ = _act(opponent_params, r_o, obs[:, list(opp_slots)])
-                acts = acts.at[:, list(opp_slots)].set(a_o)
-
-            states2, obs2, rewards, done, info = v_step(states, acts,
-                                                        jax.random.split(r_env, num_envs))
-            # auto-reset finished envs (fresh keys: r_env was consumed by v_step)
-            states3, obs3 = v_reset(jax.random.split(r_reset, num_envs))
-            sel = lambda a, b: jnp.where(
-                done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
-            states_n = jax.tree.map(sel, states3, states2)
-            obs_n = jax.tree.map(sel, obs3, obs2)
-
-            rec = {
-                "obs": obs[:, list(learner_slots)],            # (E, k, L)
-                "actions": a_l,
-                "behavior_logp": logp_l,
-                "behavior_values": v_l,
-                "rewards": rewards[:, list(learner_slots)],
-                "done": done,
-                "outcome": info.get("outcome", jnp.zeros((num_envs,), jnp.int32)),
-            }
-            return (states_n, obs_n), rec
-
-        ks = jax.random.split(rng, unroll_len + 1)
-        carry, recs = jax.lax.scan(step_fn, carry, ks[:-1])
-        # bootstrap value of the final observation (fresh subkey, not the
-        # segment rng already split for the scan)
-        _, final_obs = carry
-        _, _, v_boot = _act(learner_params, ks[-1], final_obs[:, list(learner_slots)])
-
-        # reshape (T, E, k, ...) -> (E*k, T, ...)
-        def to_bt(x):
-            x = jnp.moveaxis(x, 0, 1)                          # (E, T, k, ...)
-            if x.ndim >= 3 and x.shape[2] == n_l:
-                x = jnp.moveaxis(x, 2, 1)                      # (E, k, T, ...)
-                return x.reshape((num_envs * n_l, unroll_len) + x.shape[3:])
-            return x
-
-        done_bt = jnp.repeat(jnp.moveaxis(recs["done"], 0, 1), n_l, axis=0)  # (E*k, T)
-        traj = {
-            "obs": to_bt(recs["obs"]),
-            "actions": to_bt(recs["actions"]),
-            "behavior_logp": to_bt(recs["behavior_logp"]),
-            "behavior_values": to_bt(recs["behavior_values"]),
-            "rewards": to_bt(recs["rewards"]),
-            "done": done_bt,
-            "bootstrap_value": v_boot.reshape(num_envs * n_l),
-        }
-        episodes = {"done": recs["done"], "outcome": recs["outcome"]}  # (T, E)
-        return carry, traj, episodes
-
-    if jit:
-        rollout = jax.jit(rollout)
-    return rollout, init_carry
+    """Local-params rollout: `rollout(theta, phi, carry, rng) -> (carry,
+    traj, episodes)`, one jitted scan over `unroll_len` steps with
+    auto-reset — the TPU-native ("Anakin") adaptation of TLeague's CPU
+    actor fleet."""
+    venv = JaxVectorEnv(env, num_envs, jit=False)
+    col = JitCollector(venv, cfg, unroll_len=unroll_len,
+                       learner_slots=learner_slots, jit=jit)
+    return col.collect, col.init_carry
 
 
 def build_served_rollout(env: MultiAgentEnv, *, num_envs: int, unroll_len: int,
@@ -117,88 +40,7 @@ def build_served_rollout(env: MultiAgentEnv, *, num_envs: int, unroll_len: int,
     carry, rng)` matches `build_rollout`'s (carry, traj, episodes) contract
     so the Learner-side data path is identical for both actor modes.
     """
-    spec = env.spec
-    learner_slots = tuple(learner_slots if learner_slots is not None
-                          else range(spec.team_size))
-    opp_slots = tuple(i for i in range(spec.num_agents) if i not in learner_slots)
-    n_l, n_o = len(learner_slots), len(opp_slots)
-    E = num_envs
-
-    v_reset = jax.jit(jax.vmap(env.reset))
-    v_step = jax.jit(jax.vmap(env.step, in_axes=(0, 0, 0)))
-
-    @jax.jit
-    def _autoreset(done, reset_state, reset_obs, state, obs):
-        sel = lambda a, b: jnp.where(
-            done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
-        return (jax.tree.map(sel, reset_state, state),
-                jax.tree.map(sel, reset_obs, obs))
-
-    def init_carry(rng):
-        return v_reset(jax.random.split(rng, num_envs))
-
-    def rollout(server, theta_key, phi_key, carry, rng):
-        states, obs = carry
-        recs = []
-        for t in range(unroll_len):
-            r_env, r_reset = jax.random.split(jax.random.fold_in(rng, t))
-            obs_np = np.asarray(obs)
-            tkt_l = server.submit(
-                obs_np[:, list(learner_slots)].reshape(E * n_l, -1),
-                model=theta_key)
-            tkt_o = None
-            if opp_slots:
-                tkt_o = server.submit(
-                    obs_np[:, list(opp_slots)].reshape(E * n_o, -1),
-                    model=phi_key)
-            server.flush()                     # θ and φ share one forward
-            a_l, logp_l, v_l = (x.reshape(E, n_l) for x in server.get(tkt_l))
-            acts = np.zeros((E, spec.num_agents), np.int32)
-            acts[:, list(learner_slots)] = a_l
-            if tkt_o is not None:
-                acts[:, list(opp_slots)] = server.get(tkt_o)[0].reshape(E, n_o)
-
-            states2, obs2, rewards, done, info = v_step(
-                states, jnp.asarray(acts), jax.random.split(r_env, num_envs))
-            states3, obs3 = v_reset(jax.random.split(r_reset, num_envs))
-            states, obs = _autoreset(done, states3, obs3, states2, obs2)
-            rewards = np.asarray(rewards)
-            recs.append({
-                "obs": obs_np[:, list(learner_slots)],
-                "actions": a_l,
-                "behavior_logp": logp_l,
-                "behavior_values": v_l,
-                "rewards": rewards[:, list(learner_slots)],
-                "done": np.asarray(done),
-                "outcome": np.asarray(info.get(
-                    "outcome", jnp.zeros((num_envs,), jnp.int32))),
-            })
-
-        final_obs = np.asarray(obs)
-        tkt = server.submit(final_obs[:, list(learner_slots)].reshape(E * n_l, -1),
-                            model=theta_key)
-        server.flush()
-        v_boot = server.get(tkt)[2]
-
-        def to_bt(name):
-            x = np.stack([r[name] for r in recs], axis=1)   # (E, T, k, ...)
-            if x.ndim >= 3 and x.shape[2] == n_l:
-                x = np.moveaxis(x, 2, 1)                     # (E, k, T, ...)
-                return x.reshape((E * n_l, unroll_len) + x.shape[3:])
-            return x
-
-        done_te = np.stack([r["done"] for r in recs], axis=0)     # (T, E)
-        traj = {
-            "obs": to_bt("obs"),
-            "actions": to_bt("actions"),
-            "behavior_logp": to_bt("behavior_logp"),
-            "behavior_values": to_bt("behavior_values"),
-            "rewards": to_bt("rewards"),
-            "done": np.repeat(done_te.T, n_l, axis=0),            # (E*k, T)
-            "bootstrap_value": v_boot.reshape(E * n_l),
-        }
-        episodes = {"done": done_te,
-                    "outcome": np.stack([r["outcome"] for r in recs], axis=0)}
-        return (states, obs), traj, episodes
-
-    return rollout, init_carry
+    venv = JaxVectorEnv(env, num_envs, jit=True)
+    col = ServedCollector(venv, unroll_len=unroll_len,
+                          learner_slots=learner_slots)
+    return col.collect, col.init_carry

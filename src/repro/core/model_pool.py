@@ -65,7 +65,9 @@ class ModelPool:
         self.membership_version = 0          # bumps when the key set changes
         self.read_counts = [0] * self.num_replicas  # replica load-balance bookkeeping
         # param-plane telemetry: how pulls were actually served
-        self.pull_stats = {"full": 0, "delta": 0, "noop": 0}
+        # ("cross_key" counts answers where content addressing let some
+        # leaves ride as hash references instead of bytes)
+        self.pull_stats = {"full": 0, "delta": 0, "noop": 0, "cross_key": 0}
 
     def _pick_replica(self) -> int:
         r = self._rng.randrange(self.num_replicas)
@@ -112,7 +114,8 @@ class ModelPool:
 
     def pull_if_changed(self, key: ModelKey,
                         have_version: Optional[int] = None,
-                        copy: Optional[bool] = None
+                        copy: Optional[bool] = None,
+                        have_hashes=None
                         ) -> Union[NotModified, ParamDelta]:
         """The hash-gated pull. With `have_version` equal to the current
         version the answer is a `NotModified` tag (nothing else moves).
@@ -121,7 +124,15 @@ class ModelPool:
         whenever the caller obtained that version through this method);
         the full pytree when the caller's version is unknown, prehistoric,
         or the leaf set itself changed. Copy semantics of the returned
-        arrays match `pull`. Raises KeyError for unknown keys."""
+        arrays match `pull`. Raises KeyError for unknown keys.
+
+        `have_hashes` (an iterable of leaf content hashes the caller
+        holds — under ANY key) enables cross-key content addressing:
+        leaves whose hash the caller advertised are answered as
+        path->hash references (`ParamDelta.by_hash`) instead of bytes,
+        on both the delta path and the would-be-full path. An exploiter
+        reset that re-mints the seed pytree under a fresh key thus ships
+        nothing to a consumer that ever held the seed."""
         with self._lock:
             self._pick_replica()
             params = self._params[key]          # KeyError for unknown keys
@@ -130,16 +141,39 @@ class ModelPool:
                 self.pull_stats["noop"] += 1
                 return NotModified(version=man.version)
             snap = self.snapshot_on_pull if copy is None else copy
+            have = frozenset(have_hashes) if have_hashes else frozenset()
+
+            def split(paths, by_path):
+                """Partition into shipped bytes vs hash references."""
+                ship, by_hash = {}, {}
+                for p in paths:
+                    h = man.leaf_hashes[p]
+                    if h in have:
+                        by_hash[p] = h
+                    else:
+                        ship[p] = (tree_copy(by_path[p]) if snap
+                                   else by_path[p])
+                return ship, (by_hash or None)
+
             old = (self._history.get(key, {}).get(have_version)
                    if have_version is not None else None)
             if old is not None:
                 changed = man.changed_paths(old)
                 if changed is not None:
                     self.pull_stats["delta"] += 1
-                    by_path = dict(flatten_with_paths(params))
-                    leaves = {p: (tree_copy(by_path[p]) if snap else by_path[p])
-                              for p in changed}
-                    return ParamDelta(manifest=man, full=False, leaves=leaves)
+                    leaves, by_hash = split(changed,
+                                            dict(flatten_with_paths(params)))
+                    if by_hash:
+                        self.pull_stats["cross_key"] += 1
+                    return ParamDelta(manifest=man, full=False,
+                                      leaves=leaves, by_hash=by_hash)
+            if have:
+                leaves, by_hash = split(list(man.leaf_hashes),
+                                        dict(flatten_with_paths(params)))
+                if by_hash:      # at least one leaf rides as a reference
+                    self.pull_stats["cross_key"] += 1
+                    return ParamDelta(manifest=man, full=False,
+                                      leaves=leaves, by_hash=by_hash)
             self.pull_stats["full"] += 1
             return ParamDelta(manifest=man, full=True,
                               params=tree_copy(params) if snap else params)

@@ -532,11 +532,17 @@ class ModelPoolClient(_NamespaceClient):
 
     def pull_if_changed(self, key: ModelKey,
                         have_version: Optional[int] = None,
-                        copy: Optional[bool] = None):
+                        copy: Optional[bool] = None, have_hashes=None):
         """The raw protocol call (no client-side caching — `CachedPuller`
         or `pull` own the cache). `copy` is accepted for signature
-        compatibility; remote arrays are fresh by construction."""
-        return self._call("pull_if_changed", key, have_version)
+        compatibility; remote arrays are fresh by construction.
+        `have_hashes` rides through to the pool's cross-key content
+        addressing: leaves the caller already holds (under any key) come
+        back as hash references instead of bytes."""
+        if have_hashes is None:
+            return self._call("pull_if_changed", key, have_version)
+        return self._call("pull_if_changed", key, have_version,
+                          have_hashes=sorted(have_hashes))
 
     def manifest(self, key: ModelKey) -> ParamManifest:
         return self._call("manifest", key)
@@ -801,6 +807,16 @@ class DataServerClient(_NamespaceClient):
 
     def throughput(self) -> dict:
         return self._call("throughput")
+
+    def last_sample_info(self):
+        return self._call("last_sample_info")
+
+    def update_priorities(self, slots, priorities, gen=None) -> int:
+        """Prioritized-replay write-back over the wire: a remote learner
+        (or a priority-computing sidecar) echoes the sampled slots and
+        generations back with fresh priorities; the server drops updates
+        for rows the ring has overwritten since."""
+        return self._call("update_priorities", slots, priorities, gen=gen)
 
 
 # -- one-call league server ---------------------------------------------------

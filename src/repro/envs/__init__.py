@@ -1,2 +1,4 @@
 from repro.envs.base import EnvSpec, MultiAgentEnv, ENVS, make_env
+from repro.envs.vector import (VectorEnv, JaxVectorEnv, HostVectorEnv,
+                               make_vector_env)
 from repro.envs import matrix_games, pommerman_lite, duel  # noqa: F401 (registration)

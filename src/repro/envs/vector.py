@@ -1,0 +1,186 @@
+"""VectorEnv: batched env slots behind one interface (the collector plane).
+
+A `VectorEnv` owns N independent instances ("slots") of one
+`MultiAgentEnv` and exposes batched `reset`/`step`/`autoreset` over slot
+arrays — the env-stepping layer the Collector drives, extracted from the
+rollout drivers so env vectorization, acting, and segment assembly are
+separate seams.
+
+Two adapters implement the interface:
+
+* **JaxVectorEnv** — pure-JAX envs: `vmap` over slots, usable both
+  *inside* an outer jit/scan (the Anakin-style jitted rollout —
+  construct with ``jit=False`` so the ops inline into the caller's
+  trace) and as host calls (``jit=True`` compiles each batched op once
+  and the driver loops in Python, the served-rollout layout).
+* **HostVectorEnv** — the host-loop seam for future envs whose
+  reset/step are plain Python (an external simulator, a C++ binding):
+  slots are stepped one by one on the host and stacked with NumPy.
+  Same interface, `jittable=False`, so a Collector can refuse to build
+  a jitted scan over it while the served (host-loop) path works
+  unchanged.
+
+RNG contract (bit-compatibility with the pre-collector rollouts): a
+single key goes in, the adapter splits it into one key per slot —
+`reset(rng)` == ``vmap(env.reset)(split(rng, N))`` and `step(...,rng)`
+== ``vmap(env.step)(states, actions, split(rng, N))`` exactly.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.envs.base import EnvSpec, MultiAgentEnv
+
+
+class VectorEnv:
+    """Interface + shared combinators. Subclasses provide `reset`,
+    `step` and set `jittable`."""
+
+    jittable: bool = False
+
+    def __init__(self, env: MultiAgentEnv, num_envs: int):
+        assert num_envs >= 1, "a VectorEnv needs at least one slot"
+        self.env = env
+        self.num_envs = num_envs
+
+    @property
+    def spec(self) -> EnvSpec:
+        return self.env.spec
+
+    # -- batched protocol ---------------------------------------------------
+    def reset(self, rng) -> Tuple[Any, Any]:
+        """rng -> (states, obs) with a leading (num_envs,) slot axis."""
+        raise NotImplementedError
+
+    def step(self, states, actions, rng):
+        """(states, actions (E, A), rng) -> (states, obs, rewards, done,
+        info), everything carrying the slot axis."""
+        raise NotImplementedError
+
+    def autoreset(self, done, reset_states, reset_obs, states, obs):
+        """Select per slot: the fresh (reset) state where `done`, the
+        stepped state elsewhere. Pure where-select — works under jit."""
+        sel = lambda a, b: jnp.where(
+            done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+        return (jax.tree.map(sel, reset_states, states),
+                jax.tree.map(sel, reset_obs, obs))
+
+    def step_autoreset(self, states, actions, step_rng, reset_rng):
+        """One collector step: step every slot, auto-reset finished ones.
+        Returns (states, obs, rewards, done, outcome) — `outcome` is the
+        env's per-slot episode outcome (zeros when the env reports
+        none), pulled out of `info` so host-loop adapters need not stack
+        arbitrary info dicts."""
+        states2, obs2, rewards, done, info = self.step(states, actions,
+                                                       step_rng)
+        states3, obs3 = self.reset(reset_rng)
+        states_n, obs_n = self.autoreset(done, states3, obs3, states2, obs2)
+        outcome = info.get("outcome",
+                           jnp.zeros((self.num_envs,), jnp.int32))
+        return states_n, obs_n, rewards, done, outcome
+
+
+class JaxVectorEnv(VectorEnv):
+    """Slot-vectorized pure-JAX env: `vmap` over the slot axis.
+
+    ``jit=False`` (default) leaves the batched ops untraced so they
+    inline into an outer `lax.scan` (the jitted rollout); ``jit=True``
+    compiles `reset`/`step`/`step_autoreset` once each for host-loop
+    drivers (the served rollout), replacing the per-callsite jits the
+    old `build_served_rollout` carried."""
+
+    jittable = True
+
+    def __init__(self, env: MultiAgentEnv, num_envs: int, *, jit: bool = False):
+        super().__init__(env, num_envs)
+        v_reset = jax.vmap(env.reset)
+        v_step = jax.vmap(env.step, in_axes=(0, 0, 0))
+        E = num_envs
+
+        def reset(rng):
+            return v_reset(jax.random.split(rng, E))
+
+        def step(states, actions, rng):
+            return v_step(states, actions, jax.random.split(rng, E))
+
+        self._reset, self._step = reset, step
+        if jit:
+            self._reset = jax.jit(reset)
+            self._step = jax.jit(step)
+            self._step_autoreset = jax.jit(
+                lambda s, a, ks, kr: VectorEnv.step_autoreset(self, s, a,
+                                                              ks, kr))
+        else:
+            self._step_autoreset = None
+
+    def reset(self, rng):
+        return self._reset(rng)
+
+    def step(self, states, actions, rng):
+        return self._step(states, actions, rng)
+
+    def step_autoreset(self, states, actions, step_rng, reset_rng):
+        if self._step_autoreset is not None:
+            return self._step_autoreset(states, actions, step_rng, reset_rng)
+        return super().step_autoreset(states, actions, step_rng, reset_rng)
+
+
+class HostVectorEnv(VectorEnv):
+    """Host-loop adapter: slots stepped one at a time in Python, results
+    stacked with NumPy. For envs that cannot trace (external simulators);
+    pure-JAX envs also run (each slot eagerly), which is what the tests
+    drive it with. States are a per-slot list — opaque to callers, as the
+    interface requires."""
+
+    jittable = False
+
+    def reset(self, rng):
+        keys = jax.random.split(rng, self.num_envs)
+        pairs = [self.env.reset(k) for k in keys]
+        states = [s for s, _ in pairs]
+        obs = np.stack([np.asarray(o) for _, o in pairs])
+        return states, obs
+
+    def step(self, states, actions, rng):
+        keys = jax.random.split(rng, self.num_envs)
+        outs = [self.env.step(states[i], jnp.asarray(actions[i]), keys[i])
+                for i in range(self.num_envs)]
+        new_states = [o[0] for o in outs]
+        obs = np.stack([np.asarray(o[1]) for o in outs])
+        rewards = np.stack([np.asarray(o[2]) for o in outs])
+        done = np.array([bool(o[3]) for o in outs])
+        infos = [o[4] for o in outs]
+        info = {}
+        if infos and "outcome" in infos[0]:
+            info["outcome"] = np.array([int(i["outcome"]) for i in infos],
+                                       np.int32)
+        return new_states, obs, rewards, done, info
+
+    def autoreset(self, done, reset_states, reset_obs, states, obs):
+        done = np.asarray(done)
+        states_n = [reset_states[i] if done[i] else states[i]
+                    for i in range(self.num_envs)]
+        obs_n = np.where(done.reshape((-1,) + (1,) * (np.asarray(obs).ndim - 1)),
+                         np.asarray(reset_obs), np.asarray(obs))
+        return states_n, obs_n
+
+    def step_autoreset(self, states, actions, step_rng, reset_rng):
+        states2, obs2, rewards, done, info = self.step(states, actions,
+                                                       step_rng)
+        states3, obs3 = self.reset(reset_rng)
+        states_n, obs_n = self.autoreset(done, states3, obs3, states2, obs2)
+        outcome = info.get("outcome", np.zeros((self.num_envs,), np.int32))
+        return states_n, obs_n, rewards, done, outcome
+
+
+def make_vector_env(env: MultiAgentEnv, num_envs: int, *,
+                    host: bool = False, jit: bool = False) -> VectorEnv:
+    """Adapter selection: every in-repo env is pure JAX, so the default
+    is `JaxVectorEnv`; `host=True` opts into the host-loop seam."""
+    if host:
+        return HostVectorEnv(env, num_envs)
+    return JaxVectorEnv(env, num_envs, jit=jit)

@@ -56,7 +56,8 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
                         unroll_len=16, periods=2, steps_per_period=16,
                         num_actors=1, num_exploiters=0, pbt=False,
                         lr=3e-4, seed=0, log_every=8, checkpoint_dir=None,
-                        served=False, verbose=True, league_spec=None):
+                        served=False, verbose=True, league_spec=None,
+                        sampler="uniform"):
     """`served=True` runs the SEED-style actor mode (ROADMAP next step):
     every Actor routes its policy forwards through ONE shared
     continuous-batching InfServer instead of per-actor jitted forwards —
@@ -66,7 +67,11 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
     role matchmaking and reset-on-freeze policies apply, while freezing
     stays on the fixed `periods x steps_per_period` schedule (the `--sync`
     determinism path). Without a spec, the legacy main+N-exploiters layout
-    is used."""
+    is used.
+
+    `sampler` picks the replay strategy per `repro.learners.samplers`;
+    non-uniform samplers run each DataServer off-policy (blocking=False)
+    so old rows stay sampleable."""
     env = make_env(env_name)
     cfg = get_arch(arch)
     rng = jax.random.PRNGKey(seed)
@@ -110,7 +115,9 @@ def run_league_training(*, env_name="pommerman_lite", arch="tleague-policy-s",
                   for a in range(n_act)]
         step = build_env_train_step(cfg, env.spec.num_actions, opt, loss=loss)
         learner = Learner(league, step, opt, params, agent_id=aid,
-                          data_server=DataServer())
+                          data_server=DataServer(
+                              sampler=sampler,
+                              blocking=(sampler == "uniform")))
         agents[aid] = (actors, learner)
 
     history = []
@@ -156,14 +163,16 @@ def run_league_training_async(spec, *, env_name="pommerman_lite",
                               num_envs=16, unroll_len=16, lr=3e-4, seed=0,
                               served=False, pbt=False, max_seconds=None,
                               max_freezes_per_role=None,
-                              max_steps_per_role=None, verbose=True):
+                              max_steps_per_role=None, verbose=True,
+                              sampler="uniform"):
     """The event-driven league runtime: one thread per Actor and per
     Learner, a coordinator applying the spec's freeze gates. Returns
     (league, runtime, report); raises if any worker failed, so a normal
     return IS the clean-shutdown certificate."""
     runtime = build_runtime(spec, env_name=env_name, arch=arch, loss=loss,
                             num_envs=num_envs, unroll_len=unroll_len, lr=lr,
-                            seed=seed, served=served, pbt=pbt)
+                            seed=seed, served=served, pbt=pbt,
+                            sampler=sampler)
     report = runtime.run(max_seconds=max_seconds,
                          max_freezes_per_role=max_freezes_per_role,
                          max_steps_per_role=max_steps_per_role)
@@ -238,6 +247,14 @@ def main():
     ap.add_argument("--game-mgr", default="sp_pfsp", choices=sorted(GAME_MGRS))
     ap.add_argument("--loss", default="ppo", choices=["ppo", "vtrace"])
     ap.add_argument("--num-envs", type=int, default=16)
+    ap.add_argument("--collector-slots", type=int, default=None,
+                    help="env slots per collector (the collector plane's "
+                         "name for --num-envs; overrides it when given)")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=["uniform", "prioritized", "episode"],
+                    help="replay sampling strategy "
+                         "(repro.learners.samplers); non-uniform samplers "
+                         "run the DataServer off-policy")
     ap.add_argument("--unroll-len", type=int, default=16)
     ap.add_argument("--periods", type=int, default=2)
     ap.add_argument("--steps", type=int, default=16)
@@ -300,6 +317,8 @@ def main():
                          "heartbeat advance before this process treats "
                          "the coordinator as dead and shuts down cleanly")
     args = ap.parse_args()
+    if args.collector_slots is not None:
+        args.num_envs = args.collector_slots
 
     spec = LeagueSpec.from_json(args.league_spec) if args.league_spec else None
     if args.workers is not None or args.role is not None:
@@ -310,7 +329,8 @@ def main():
             spec, env_name=args.env, arch=args.arch, loss=args.loss,
             num_envs=args.num_envs, unroll_len=args.unroll_len, lr=args.lr,
             seed=args.seed, served=args.served, pbt=args.pbt,
-            max_seconds=args.max_seconds, max_freezes_per_role=args.max_freezes)
+            max_seconds=args.max_seconds, max_freezes_per_role=args.max_freezes,
+            sampler=args.sampler)
         print(json.dumps(report, indent=1))
         return
     league, _, _ = run_league_training(
@@ -319,7 +339,7 @@ def main():
         periods=args.periods, steps_per_period=args.steps,
         num_actors=args.actors, num_exploiters=args.exploiters, pbt=args.pbt,
         lr=args.lr, seed=args.seed, checkpoint_dir=args.checkpoint_dir,
-        served=args.served, league_spec=spec)
+        served=args.served, league_spec=spec, sampler=args.sampler)
     print(json.dumps(league.league_state(), indent=1))
 
 

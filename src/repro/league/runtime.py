@@ -330,6 +330,9 @@ class LeagueRuntime:
                 "freezes": list(r.learner.freezes),
                 "rfps": round(tp["rfps"], 1),
                 "cfps": round(tp["cfps"], 1),
+                "rfps_window": round(tp["rfps_window"], 1),
+                "cfps_window": round(tp["cfps_window"], 1),
+                "sampler": r.data_server.sampler.name,
             }
         return {
             "wall_s": round(wall_s, 3),
@@ -351,14 +354,18 @@ def build_runtime(spec: LeagueSpec, *, env_name: str = "rps",
                   num_envs: int = 8, unroll_len: int = 8, lr: float = 3e-4,
                   seed: int = 0, served: bool = False, pbt: bool = False,
                   ring_segments: Optional[int] = None,
-                  heartbeat_timeout_s: float = 30.0) -> LeagueRuntime:
+                  heartbeat_timeout_s: float = 30.0,
+                  sampler: str = "uniform") -> LeagueRuntime:
     """Wire a LeagueRuntime from a LeagueSpec: per-role Actors + Learner +
     DataServer over one shared LeagueMgr/ModelPool/PayoffMatrix (and one
     shared InfServer when `served`). `ring_segments` sizes each role's ring
     in segments; default = 2x the role's actor count so every actor can
     stay one segment ahead of the learner before backpressure bites.
     `heartbeat_timeout_s` is how long workers keep running without a
-    coordinator beat before exiting cleanly."""
+    coordinator beat before exiting cleanly. `sampler` picks each role's
+    replay strategy (`repro.learners.samplers`); non-uniform samplers run
+    the DataServer off-policy (blocking=False) since their whole point is
+    revisiting old rows."""
     env = make_env(env_name)
     cfg = get_arch(arch)
     rng = jax.random.PRNGKey(seed)
@@ -380,7 +387,8 @@ def build_runtime(spec: LeagueSpec, *, env_name: str = "rps",
     roles: List[RoleRuntime] = []
     for i, role in enumerate(spec):
         segs = ring_segments or max(2, 2 * role.num_actors)
-        ds = DataServer(capacity_frames=segs * seg_frames, blocking=True)
+        ds = DataServer(capacity_frames=segs * seg_frames,
+                        blocking=(sampler == "uniform"), sampler=sampler)
         actor_workers = []
         for a in range(role.num_actors):
             actor = Actor(env, cfg, league, agent_id=role.name,

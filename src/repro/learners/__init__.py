@@ -1,3 +1,6 @@
 from repro.learners.replay import DataServer
+from repro.learners.samplers import (SAMPLERS, Sampler, SegmentTree,
+                                     UniformSampler, PrioritizedSampler,
+                                     EpisodeSampler, make_sampler)
 from repro.learners.steps import build_env_train_step, build_seq_train_step, build_mlm_train_step
 from repro.learners.learner import Learner

@@ -29,11 +29,21 @@ class Learner:
     def __init__(self, league: LeagueMgr, train_step: Callable, optimizer,
                  init_params, *, agent_id: str = "main",
                  publish_every: int = 1, data_server: Optional[DataServer] = None,
-                 device_feed: bool = True):
+                 device_feed: bool = True,
+                 priority_fn: Optional[Callable] = None):
         """`device_feed` routes minibatches through the DataServer's
         double-buffered `sample_to_device` path (host->device copies overlap
         the train step); falls back to host `sample` for data servers
-        without that path."""
+        without that path.
+
+        `priority_fn(traj, metrics) -> per-row priorities` closes the
+        prioritized-replay loop: after each train step it is called with
+        the consumed minibatch and the step metrics, and its result is
+        written back through `data_server.update_priorities` against the
+        slots/generations the server recorded for that batch (stale rows
+        — overwritten since the sample — are dropped server-side). Don't
+        combine with a batch-donating train step: the traj buffers must
+        outlive the step."""
         self.league = league
         self.agent_id = agent_id
         self.train_step = train_step
@@ -52,6 +62,7 @@ class Learner:
         # so adopting costs exactly ONE deep copy, as before
         self._puller = CachedPuller(league.model_pool, copy=False)
         self.data_server = data_server or DataServer()
+        self.priority_fn = priority_fn
         self.publish_every = publish_every
         self.step_count = 0
         self.task = league.request_learner_task(agent_id)
@@ -70,8 +81,18 @@ class Learner:
                 traj = self.data_server.sample_to_device()
             else:
                 traj = self.data_server.sample()
-            self.params, self.opt_state, last_metrics = self.train_step(
-                self.params, self.opt_state, traj)
+            if self.priority_fn is None:
+                self.params, self.opt_state, last_metrics = self.train_step(
+                    self.params, self.opt_state, traj)
+            else:
+                info = self.data_server.last_sample_info() \
+                    if hasattr(self.data_server, "last_sample_info") else None
+                self.params, self.opt_state, last_metrics = self.train_step(
+                    self.params, self.opt_state, traj)
+                if info is not None and info.get("slots") is not None:
+                    self.data_server.update_priorities(
+                        info["slots"], self.priority_fn(traj, last_metrics),
+                        gen=info.get("gen"))
             self.step_count += 1
             if self.step_count % self.publish_every == 0:
                 self.league.model_pool.push(self.current_key,

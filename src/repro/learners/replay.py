@@ -35,11 +35,14 @@ from typing import List, Optional
 import jax
 import numpy as np
 
+from repro.learners.samplers import make_sampler
+
 
 class DataServer:
     def __init__(self, *, capacity_frames: Optional[int] = None, seed: int = 0,
                  blocking: bool = True, capacity_segments: int = 64,
-                 prefetch: bool = True, device=None):
+                 prefetch: bool = True, device=None, sampler="uniform",
+                 sampler_kwargs: Optional[dict] = None):
         """`capacity_frames` bounds the buffer in frames (rows * unroll_len).
         When omitted, the legacy `capacity_segments` bound is translated to
         frames at first `put` (segments * frames-per-segment). Keyword-only:
@@ -49,10 +52,17 @@ class DataServer:
 
         `prefetch` enables the double-buffered `sample_to_device` staging;
         `device` pins transfers to a specific jax device (default: the
-        backend's first device)."""
+        backend's first device).
+
+        `sampler` selects the off-policy sampling strategy — a name from
+        `repro.learners.samplers.SAMPLERS` ("uniform" | "prioritized" |
+        "episode", kwargs via `sampler_kwargs`) or a `Sampler` instance.
+        The blocking-mode newest-segment fast path is independent of it."""
         self.capacity_frames = capacity_frames
         self.capacity_segments = capacity_segments
         self.rng = np.random.default_rng(seed)
+        self.sampler = make_sampler(sampler, **(sampler_kwargs or {}))
+        self.sampler.bind(self)
         # producer/consumer concurrency: every mutation runs under one
         # reentrant lock; the condition signals both directions — `put`
         # wakes learners blocked in `wait_ready`, consumption wakes actors
@@ -67,8 +77,17 @@ class DataServer:
         self.prefetch_misses = 0
         self.frames_received = 0
         self.frames_consumed = 0
-        self._t0 = time.monotonic()
+        # lifetime rates start at the FIRST put, not construction — else
+        # rfps/cfps average over pre-first-put idle time; the window
+        # trackers feed the since-last-`throughput()`-call rates
+        self._t0: Optional[float] = None
+        self._win_t: Optional[float] = None
+        self._win_rx = 0
+        self._win_cx = 0
         self._unconsumed = 0
+        self._last_sample: Optional[dict] = None
+        self._slot_gen: Optional[np.ndarray] = None   # overwrite generations
+        self._write_seq = 0
         # ring state, allocated lazily from the first segment's structure
         self._treedef = None
         self._buffers: List[np.ndarray] = []
@@ -106,10 +125,24 @@ class DataServer:
         self._row_shapes = [leaf.shape[1:] for leaf in leaves]
         self._buffers = [np.zeros((self._row_slots,) + s, dtype=leaf.dtype)
                          for s, leaf in zip(self._row_shapes, leaves)]
+        self._slot_gen = np.zeros(self._row_slots, np.int64)
+        self.sampler.on_allocate(self._row_slots)
+
+    @staticmethod
+    def _row_done(traj) -> Optional[np.ndarray]:
+        """Per-row terminal flags for episode-aware samplers: True where
+        any frame of the row finished an episode; None when the payload
+        carries no done signal."""
+        if isinstance(traj, dict) and "done" in traj:
+            d = np.asarray(traj["done"])
+            return d.reshape(d.shape[0], -1).any(axis=1)
+        return None
 
     # -- actor side --------------------------------------------------------------
-    def _write_rows(self, leaves) -> None:
+    def _write_rows(self, leaves, row_done=None, source=None) -> None:
         """Ring write + accounting + prefetch staging; caller holds the lock."""
+        if self._t0 is None:
+            self._t0 = self._win_t = time.monotonic()
         rows = leaves[0].shape[0]
         frames = rows * self._frames_per_row
         cap = self._row_slots
@@ -125,6 +158,10 @@ class DataServer:
         self._last_rows = (start + np.arange(rows)) % cap
         self._head = (start + rows) % cap
         self._size = min(self._size + rows, cap)
+        self._write_seq += 1
+        self._slot_gen[self._last_rows] = self._write_seq
+        self.sampler.on_write(self._last_rows, row_done=row_done,
+                              source=source)
         self.frames_received += frames
         self._unconsumed += frames
         if self.prefetch and self.blocking:
@@ -133,17 +170,26 @@ class DataServer:
             self._stage(self._last_rows, None)
         self._cond.notify_all()
 
-    def put(self, traj) -> None:
+    def put(self, traj, source=None) -> None:
         """Unconditional ring write: never blocks (lock only) and never
         fails for capacity — old rows are overwritten, which in blocking
         (on-policy) mode can bury frames the learner never saw. Producers
         that must not lose frames use `put_when_room`. The segment is
         COPIED into the preallocated ring (np.copyto), so the caller's
-        arrays stay the caller's."""
-        with self._cond:
-            self._write_rows(self._leaves(traj))
+        arrays stay the caller's.
 
-    def put_when_room(self, traj, timeout: Optional[float] = None) -> bool:
+        `source` identifies the producer for episode-granularity
+        samplers (rows of consecutive segments from one source chain
+        into episodes); it defaults to the calling thread, which matches
+        the league runtime's one-thread-per-actor layout."""
+        with self._cond:
+            self._write_rows(self._leaves(traj),
+                             row_done=self._row_done(traj),
+                             source=threading.get_ident()
+                             if source is None else source)
+
+    def put_when_room(self, traj, timeout: Optional[float] = None,
+                      source=None) -> bool:
         """`put` with TOCTOU-safe backpressure: the room predicate (the
         segment fits without burying frames the learner has not consumed)
         and the ring write happen under ONE lock hold, so concurrent
@@ -163,7 +209,9 @@ class DataServer:
                 return cap is None or self._unconsumed + frames <= cap
             if not self._cond.wait_for(room, timeout=timeout):
                 return False
-            self._write_rows(leaves)
+            self._write_rows(leaves, row_done=self._row_done(traj),
+                             source=threading.get_ident()
+                             if source is None else source)
             return True
 
     def wait_for_room(self, frames: int, timeout: Optional[float] = None) -> bool:
@@ -191,11 +239,22 @@ class DataServer:
 
     def _sample_idx(self, batch_rows: Optional[int]) -> np.ndarray:
         if self.blocking and batch_rows is None:
-            return self._last_rows
+            return self._last_rows                # freshness contract, not
         k = batch_rows if batch_rows is not None else len(self._last_rows)
-        idx = self.rng.integers(self._size, size=k)
-        # map logical (oldest..newest) onto ring slots
-        return (self._head - self._size + idx) % self._row_slots
+        return self.sampler.sample(k)             # ... a sampling strategy
+
+    def _record_sample(self, idx) -> None:
+        """Remember the batch just served (slots + overwrite generations
+        + IS weights) so the learner can push priorities back after its
+        train step — `update_priorities` uses the generations to drop
+        updates for slots the ring has since overwritten."""
+        idx = np.asarray(idx)
+        self._last_sample = {
+            "slots": idx.copy(),
+            "gen": None if self._slot_gen is None
+            else self._slot_gen[idx].copy(),
+            "weights": self.sampler.weights(idx),
+        }
 
     def _consume(self, num_rows: int) -> None:
         frames = num_rows * self._frames_per_row
@@ -213,6 +272,7 @@ class DataServer:
         with self._cond:
             assert self._size > 0, "DataServer empty"
             idx = self._sample_idx(batch_rows)
+            self._record_sample(idx)
             out_leaves = [buf[idx] for buf in self._buffers]
             self._consume(len(idx))
             return jax.tree_util.tree_unflatten(self._treedef, out_leaves)
@@ -250,12 +310,44 @@ class DataServer:
                 leaves = [jax.device_put(buf[idx], self.device)
                           for buf in self._buffers]
                 self.prefetch_misses += 1
+            self._record_sample(idx)
             self._consume(len(idx))
             if self.prefetch and not self.blocking:
                 # off-policy: the next uniform gather is known now — stage it
                 # (blocking mode stages at `put`, when the next segment exists)
                 self._stage(self._sample_idx(batch_rows), batch_rows)
             return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    # -- prioritized-replay consumer loop -----------------------------------------
+    def last_sample_info(self) -> Optional[dict]:
+        """Slots/generations/IS-weights of the most recent `sample`/
+        `sample_to_device` batch (None before the first). The learner
+        echoes slots+gen back through `update_priorities` after it knows
+        the batch's TD errors."""
+        with self._lock:
+            return self._last_sample
+
+    def update_priorities(self, slots, priorities, gen=None) -> int:
+        """Consumer-side priority write-back. `gen` (from
+        `last_sample_info`) guards against the ring moving on: updates
+        for slots overwritten since the sample are dropped, not applied
+        to whatever unrelated row lives there now. Returns the number of
+        rows actually updated. No-op (0 rows still validated) under
+        samplers that carry no priorities."""
+        with self._cond:
+            slots = np.asarray(slots, np.int64).reshape(-1)
+            priorities = np.asarray(priorities, np.float64).reshape(-1)
+            assert slots.shape == priorities.shape, \
+                "one priority per sampled row"
+            if gen is not None and self._slot_gen is not None:
+                valid = self._slot_gen[slots] == np.asarray(gen).reshape(-1)
+                slots, priorities = slots[valid], priorities[valid]
+            if len(slots):
+                self.sampler.update_priorities(slots, priorities)
+                if (self._staged is not None
+                        and getattr(self.sampler, "reweights", False)):
+                    self._staged = None   # staged draw used stale priorities
+            return int(len(slots))
 
     # -- introspection ------------------------------------------------------------
     @property
@@ -280,11 +372,27 @@ class DataServer:
 
     # -- telemetry (paper Table 3) ----------------------------------------------
     def throughput(self) -> dict:
-        dt = max(time.monotonic() - self._t0, 1e-9)
-        return {
-            "rfps": self.frames_received / dt,
-            "cfps": self.frames_consumed / dt,
-            "repeat_ratio": self.frames_consumed / max(self.frames_received, 1),
-            "prefetch_hits": self.prefetch_hits,
-            "prefetch_misses": self.prefetch_misses,
-        }
+        """Lifetime rates (since the first `put` — construction-time idle
+        is not averaged in) plus windowed rates over the interval since
+        the previous `throughput()` call: the steady-state numbers a
+        periodic telemetry poll actually wants."""
+        with self._lock:
+            now = time.monotonic()
+            t0 = now if self._t0 is None else self._t0
+            dt = max(now - t0, 1e-9)
+            win_t = now if self._win_t is None else self._win_t
+            wdt = max(now - win_t, 1e-9)
+            rx_w = self.frames_received - self._win_rx
+            cx_w = self.frames_consumed - self._win_cx
+            self._win_t = now
+            self._win_rx = self.frames_received
+            self._win_cx = self.frames_consumed
+            return {
+                "rfps": self.frames_received / dt,
+                "cfps": self.frames_consumed / dt,
+                "rfps_window": rx_w / wdt,
+                "cfps_window": cx_w / wdt,
+                "repeat_ratio": self.frames_consumed / max(self.frames_received, 1),
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_misses": self.prefetch_misses,
+            }

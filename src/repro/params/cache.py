@@ -13,6 +13,16 @@ operation:
   InfServer — is never written through);
 * cache empty / pool without `pull_if_changed` -> a plain full pull.
 
+On top of the per-key version cache sits a CROSS-KEY hash store: every
+cached leaf is indexed by its content hash, the set of held hashes is
+advertised with each `pull_if_changed` (pools that predate the protocol
+just ignore the extra keyword, via a TypeError retry), and a delta whose
+`by_hash` references held content is resolved locally — so a fresh key
+whose content the cache already holds under another key (an exploiter
+reset to the seed, a PBT exploit of the leader) costs zero param bytes.
+Hash-resolved leaves alias the cache's own arrays, which is exactly the
+read-only-by-reference contract cached objects already carry.
+
 The cached object is returned by reference: callers must treat it as
 immutable (every producer in this codebase does — the ModelPool replaces
 entries, never mutates them). Callers that feed a donating train step
@@ -22,7 +32,8 @@ from __future__ import annotations
 
 from typing import Any, Dict, Hashable, Optional, Tuple
 
-from repro.params.manifest import NotModified, ParamManifest, apply_delta
+from repro.params.manifest import (NotModified, ParamManifest, apply_delta,
+                                   flatten_with_paths)
 
 
 class CachedPuller:
@@ -30,6 +41,8 @@ class CachedPuller:
         self._pool = pool
         self._copy = copy
         self._cache: Dict[Hashable, Tuple[ParamManifest, Any]] = {}
+        self._hashes: Dict[str, Any] = {}    # content hash -> cached leaf
+        self._cross_key_supported = True     # cleared on TypeError retry
 
     def get(self, key) -> Any:
         return self.get_with_manifest(key)[0]
@@ -42,12 +55,61 @@ class CachedPuller:
             return self._pool.pull(key), None
         ent = self._cache.get(key)
         have = ent[0].version if ent is not None else None
-        r = pull_if_changed(key, have, copy=self._copy)
+        r = None
+        if self._hashes and self._cross_key_supported:
+            try:
+                r = pull_if_changed(key, have, copy=self._copy,
+                                    have_hashes=sorted(self._hashes))
+            except TypeError:                # legacy pool / test double
+                self._cross_key_supported = False
+        if r is None:
+            r = pull_if_changed(key, have, copy=self._copy)
         if isinstance(r, NotModified):
             return ent[1], ent[0]
-        params = r.params if r.full else apply_delta(ent[1], r.leaves)
+        params = self._reconstruct(r, ent)
+        if params is None:
+            # unresolvable (hash store raced an eviction, or a cross-key
+            # delta with no structural scaffold): take the full answer,
+            # re-asking WITHOUT have_hashes so it cannot divert again
+            r = pull_if_changed(key, None, copy=self._copy)
+            params = r.params
         self._cache[key] = (r.manifest, params)
+        self._reindex()
         return params, r.manifest
+
+    def _reconstruct(self, r, ent) -> Optional[Any]:
+        """Params for a ParamDelta answer; None when it cannot be built
+        from local state (caller falls back to a full pull)."""
+        if r.full:
+            return r.params
+        leaves = dict(r.leaves or {})
+        for p, h in (getattr(r, "by_hash", None) or {}).items():
+            leaf = self._hashes.get(h)
+            if leaf is None:
+                return None
+            leaves[p] = leaf
+        if ent is not None:
+            return apply_delta(ent[1], leaves)
+        # cross-key answer with no same-key base: every leaf must be in
+        # hand, grafted onto any cached entry with the same leaf-path
+        # set (the structural scaffold — values all come from `leaves`)
+        want = set(r.manifest.leaf_hashes)
+        if set(leaves) != want:
+            return None
+        for man2, params2 in self._cache.values():
+            if set(man2.leaf_hashes) == want:
+                return apply_delta(params2, leaves)
+        return None
+
+    def _reindex(self) -> None:
+        """Rebuild the content-hash index from live cache entries (old
+        versions' leaves drop out here — the store never outgrows the
+        cache)."""
+        self._hashes = {
+            man.leaf_hashes[p]: leaf
+            for man, params in self._cache.values()
+            for p, leaf in flatten_with_paths(params)
+        }
 
     def manifest(self, key) -> Optional[ParamManifest]:
         """The cached manifest (None if `key` was never pulled)."""
@@ -55,7 +117,9 @@ class CachedPuller:
         return ent[0] if ent is not None else None
 
     def drop(self, key) -> None:
-        self._cache.pop(key, None)
+        if self._cache.pop(key, None) is not None:
+            self._reindex()
 
     def clear(self) -> None:
         self._cache.clear()
+        self._hashes.clear()

@@ -106,11 +106,19 @@ class ParamDelta:
     carries the whole pytree in `params` (caller's version unknown to
     the server, or the leaf set changed); otherwise `leaves` maps the
     changed leaf paths to their new arrays and the caller grafts them
-    onto its cached copy with `apply_delta`."""
+    onto its cached copy with `apply_delta`.
+
+    `by_hash` is the cross-key content-addressing channel: leaf paths
+    whose content the caller advertised it already holds (under ANY key
+    — `pull_if_changed(..., have_hashes=...)`) map to their content
+    hash instead of shipping bytes; the caller resolves them from its
+    own hash store. An exploiter reset-on-freeze back to the seed
+    pytree therefore costs zero param bytes for a warm consumer."""
     manifest: ParamManifest
     full: bool
     params: Any = None
     leaves: Optional[Dict[str, Any]] = None
+    by_hash: Optional[Dict[str, str]] = None
 
 
 def apply_delta(base, leaves: Dict[str, Any]):

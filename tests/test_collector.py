@@ -1,0 +1,379 @@
+"""The collector plane (ISSUE 6): VectorEnv slots, Collector drivers,
+ticket coalescing across collectors, pluggable replay samplers, and the
+prioritized/episode semantics those samplers pin."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.actors import build_rollout, build_served_rollout
+from repro.actors.collector import ServedCollector, collect_interleaved
+from repro.configs import get_arch
+from repro.envs import HostVectorEnv, JaxVectorEnv, make_env
+from repro.learners import (DataServer, EpisodeSampler, PrioritizedSampler,
+                            SegmentTree, UniformSampler)
+from repro.models import init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    env = make_env("rps")
+    cfg = get_arch("tleague-policy-s")
+    theta = init_params(jax.random.PRNGKey(0), cfg)
+    phi = init_params(jax.random.PRNGKey(1), cfg)
+    return env, cfg, theta, phi
+
+
+# -- reference: the pre-collector build_rollout, verbatim ---------------------
+def _reference_rollout(env, cfg, *, num_envs, unroll_len):
+    """The scan-based driver exactly as it existed before the collector
+    extraction — the bit-identity oracle for the jitted path."""
+    from repro.actors.policy import make_obs_policy
+    spec = env.spec
+    learner_slots = tuple(range(spec.team_size))
+    opp_slots = tuple(i for i in range(spec.num_agents)
+                      if i not in learner_slots)
+    policy = make_obs_policy(cfg, spec.num_actions)
+    n_l = len(learner_slots)
+    v_reset = jax.vmap(env.reset)
+    v_step = jax.vmap(env.step, in_axes=(0, 0, 0))
+
+    def init_carry(rng):
+        return v_reset(jax.random.split(rng, num_envs))
+
+    def _act(params, rng, obs_slots):
+        E, k, L0 = obs_slots.shape
+        a, logp, v = policy.act(params, rng, obs_slots.reshape(E * k, L0))
+        return (a.reshape(E, k), logp.reshape(E, k), v.reshape(E, k))
+
+    @jax.jit
+    def rollout(learner_params, opponent_params, carry, rng):
+        def step_fn(c, rng_t):
+            states, obs = c
+            r_l, r_o, r_env, r_reset = jax.random.split(rng_t, 4)
+            acts = jnp.zeros((num_envs, spec.num_agents), jnp.int32)
+            a_l, logp_l, v_l = _act(learner_params, r_l,
+                                    obs[:, list(learner_slots)])
+            acts = acts.at[:, list(learner_slots)].set(a_l)
+            if opp_slots:
+                a_o, _, _ = _act(opponent_params, r_o, obs[:, list(opp_slots)])
+                acts = acts.at[:, list(opp_slots)].set(a_o)
+            states2, obs2, rewards, done, info = v_step(
+                states, acts, jax.random.split(r_env, num_envs))
+            states3, obs3 = v_reset(jax.random.split(r_reset, num_envs))
+            sel = lambda a, b: jnp.where(
+                done.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+            states_n = jax.tree.map(sel, states3, states2)
+            obs_n = jax.tree.map(sel, obs3, obs2)
+            rec = {"obs": obs[:, list(learner_slots)], "actions": a_l,
+                   "behavior_logp": logp_l, "behavior_values": v_l,
+                   "rewards": rewards[:, list(learner_slots)], "done": done,
+                   "outcome": info.get("outcome",
+                                       jnp.zeros((num_envs,), jnp.int32))}
+            return (states_n, obs_n), rec
+
+        ks = jax.random.split(rng, unroll_len + 1)
+        carry, recs = jax.lax.scan(step_fn, carry, ks[:-1])
+        _, final_obs = carry
+        _, _, v_boot = _act(learner_params, ks[-1],
+                            final_obs[:, list(learner_slots)])
+
+        def to_bt(x):
+            x = jnp.moveaxis(x, 0, 1)
+            if x.ndim >= 3 and x.shape[2] == n_l:
+                x = jnp.moveaxis(x, 2, 1)
+                return x.reshape((num_envs * n_l, unroll_len) + x.shape[3:])
+            return x
+
+        done_bt = jnp.repeat(jnp.moveaxis(recs["done"], 0, 1), n_l, axis=0)
+        traj = {"obs": to_bt(recs["obs"]), "actions": to_bt(recs["actions"]),
+                "behavior_logp": to_bt(recs["behavior_logp"]),
+                "behavior_values": to_bt(recs["behavior_values"]),
+                "rewards": to_bt(recs["rewards"]), "done": done_bt,
+                "bootstrap_value": v_boot.reshape(num_envs * n_l)}
+        episodes = {"done": recs["done"], "outcome": recs["outcome"]}
+        return carry, traj, episodes
+
+    return rollout, init_carry
+
+
+def test_jit_collector_bit_identical_to_pre_refactor(setup):
+    env, cfg, theta, phi = setup
+    r_new, ic_new = build_rollout(env, cfg, num_envs=4, unroll_len=6)
+    r_ref, ic_ref = _reference_rollout(env, cfg, num_envs=4, unroll_len=6)
+    c_n, c_r = ic_new(jax.random.PRNGKey(2)), ic_ref(jax.random.PRNGKey(2))
+    for seg in range(3):                       # carry threads across segments
+        rng = jax.random.PRNGKey(100 + seg)
+        c_n, t_n, e_n = r_new(theta, phi, c_n, rng)
+        c_r, t_r, e_r = r_ref(theta, phi, c_r, rng)
+        for k in t_r:
+            assert np.array_equal(np.asarray(t_n[k]), np.asarray(t_r[k])), k
+        for k in e_r:
+            assert np.array_equal(np.asarray(e_n[k]), np.asarray(e_r[k])), k
+        for a, b in zip(jax.tree.leaves(c_n), jax.tree.leaves(c_r)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vector_env_host_adapter_matches_jax_shapes(setup):
+    env, *_ = setup
+    jv, hv = JaxVectorEnv(env, 3), HostVectorEnv(env, 3)
+    s_j, o_j = jv.reset(jax.random.PRNGKey(0))
+    s_h, o_h = hv.reset(jax.random.PRNGKey(0))
+    assert np.asarray(o_j).shape == np.asarray(o_h).shape
+    assert np.array_equal(np.asarray(o_j), np.asarray(o_h))  # same per-slot keys
+    acts = np.zeros((3, env.spec.num_agents), np.int32)
+    out_j = jv.step_autoreset(s_j, jnp.asarray(acts), jax.random.PRNGKey(1),
+                              jax.random.PRNGKey(2))
+    out_h = hv.step_autoreset(s_h, acts, jax.random.PRNGKey(1),
+                              jax.random.PRNGKey(2))
+    for a, b in zip(out_j[1:], out_h[1:]):     # obs, rewards, done, outcome
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_interleaved_collectors_coalesce_into_denser_batches(setup):
+    """Two collectors sharing one InfServer, driven in lockstep: each
+    step's tickets resolve in ONE grouped forward, so rows per batch
+    doubles and batches run halves versus solo collectors."""
+    from repro.infserver import InfServer
+    env, cfg, theta, phi = setup
+    E, T = 4, 5
+
+    def fresh_server():
+        srv = InfServer(cfg, env.spec.num_actions, max_batch=256)
+        srv.register_model("theta", theta)
+        srv.register_model("phi", phi)
+        return srv
+
+    # solo: each collector drives its own full segment (old layout)
+    solo = fresh_server()
+    for i in range(2):
+        c = ServedCollector(JaxVectorEnv(env, E, jit=True), unroll_len=T)
+        c.collect(solo, "theta", "phi",
+                  c.init_carry(jax.random.PRNGKey(10 + i)),
+                  jax.random.PRNGKey(20 + i))
+    # interleaved: same work, one ticket stream
+    shared = fresh_server()
+    cols = [ServedCollector(JaxVectorEnv(env, E, jit=True), unroll_len=T)
+            for _ in range(2)]
+    jobs = [("theta", "phi",
+             cols[i].init_carry(jax.random.PRNGKey(10 + i)),
+             jax.random.PRNGKey(20 + i)) for i in range(2)]
+    outs = collect_interleaved(cols, shared, jobs)
+    for carry, traj, episodes in outs:
+        assert traj["obs"].shape == (E, T, env.spec.obs_len)
+        assert episodes["done"].shape == (T, E)
+    st_solo, st_shared = solo.stats(), shared.stats()
+    assert st_shared["rows_served"] == st_solo["rows_served"]
+    assert st_shared["batches_run"] < st_solo["batches_run"]
+    assert st_shared["mean_batch_rows"] > 1.5 * st_solo["mean_batch_rows"]
+
+
+def test_served_collector_phase_misuse_raises(setup):
+    env, cfg, theta, phi = setup
+    c = ServedCollector(JaxVectorEnv(env, 2, jit=True), unroll_len=3)
+    with pytest.raises(AssertionError):
+        c.complete_step(None)                  # never began
+    c.begin(c.init_carry(jax.random.PRNGKey(0)), jax.random.PRNGKey(1))
+    with pytest.raises(AssertionError):
+        c.finish(None)                         # no bootstrap submitted
+
+
+# -- samplers -----------------------------------------------------------------
+def _traj(seed, rows=4, t=8, obs_len=3, done_rows=()):
+    """Segment with a controllable per-row terminal pattern."""
+    rng = np.random.default_rng(seed)
+    done = np.zeros((rows, t), bool)
+    for r in done_rows:
+        done[r, -1] = True
+    return {
+        "obs": rng.normal(size=(rows, t, obs_len)).astype(np.float32),
+        "actions": rng.integers(0, 5, size=(rows, t)).astype(np.int32),
+        "rewards": rng.normal(size=(rows, t)).astype(np.float32),
+        "done": done,
+    }
+
+
+def test_uniform_sampler_bit_identical_to_pre_refactor_stream():
+    """The uniform slot stream must be exactly the old DataServer's:
+    same generator, same integers() calls, same ring mapping — the
+    `--sync` oracle's determinism rests on this."""
+    seed = 123
+    ds = DataServer(seed=seed, blocking=False, capacity_frames=6 * 8,
+                    prefetch=False)
+    for i in range(4):                         # wraps: 16 rows through 6 slots
+        ds.put(_traj(i))
+    assert isinstance(ds.sampler, UniformSampler)
+    # reference: replay the old _sample_idx against an independent rng
+    ref_rng = np.random.default_rng(seed)
+    head, size, slots = ds._head, ds._size, ds._row_slots
+    for k in (2, 5, 3):
+        got = ds.sampler.sample(k)
+        ref = (head - size + ref_rng.integers(size, size=k)) % slots
+        assert np.array_equal(got, ref)
+
+
+def test_prioritized_sampler_tianshou_semantics():
+    """Pinned to tianshou's PrioritizedReplayBuffer: init at
+    max_prio**alpha, IS weights (w/min_prio)**-beta, updates set
+    (|p|+eps)**alpha and widen the max/min trackers."""
+    alpha, beta = 0.6, 0.4
+    ds = DataServer(seed=0, blocking=False, capacity_frames=8 * 8,
+                    prefetch=False, sampler="prioritized",
+                    sampler_kwargs=dict(alpha=alpha, beta=beta))
+    ds.put(_traj(0, rows=4))
+    s = ds.sampler
+    slots = np.arange(4)
+    # init_weight: every fresh row at max_prio ** alpha == 1
+    assert np.allclose(np.asarray(s._tree[slots]), 1.0)
+    assert np.allclose(s.weights(slots), 1.0)
+    # update: |p| + eps, alpha-annealed, trackers widen
+    eps = np.finfo(np.float32).eps.item()
+    ds.update_priorities(np.array([0, 1]), np.array([4.0, -0.25]))
+    assert np.allclose(np.asarray(s._tree[[0, 1]]),
+                       [(4.0 + eps) ** alpha, (0.25 + eps) ** alpha])
+    assert s._max_prio == pytest.approx(4.0 + eps)
+    assert s._min_prio == pytest.approx(0.25 + eps)
+    # IS weights: (tree value / min_prio) ** (-beta)
+    expect = (np.asarray(s._tree[slots]) / s._min_prio) ** (-beta)
+    assert np.allclose(s.weights(slots), expect)
+    # proportional sampling: a dominant priority dominates the draw
+    ds.update_priorities(np.array([2]), np.array([1e6]))
+    drawn = s.sample(512)
+    assert (drawn == 2).mean() > 0.95
+    # a near-zero priority slot still has eps mass (never starves forever)
+    ds.update_priorities(np.array([2]), np.array([0.0]))
+    assert float(s._tree[[2]][0]) > 0.0
+
+
+def test_segment_tree_prefix_sum_exact():
+    t = SegmentTree(4)
+    t[np.arange(4)] = np.array([1.0, 2.0, 3.0, 4.0])
+    assert t.reduce() == 10.0
+    # prefix sums: [0,1), [1,3), [3,6), [6,10)
+    got = t.get_prefix_sum_idx(np.array([0.0, 0.99, 1.0, 2.99, 3.0, 9.99]))
+    assert np.array_equal(got, [0, 0, 1, 1, 2, 3])
+
+
+def test_update_priorities_drops_stale_generations():
+    """A priority update for a slot the ring has overwritten since the
+    sample must be dropped, not applied to the unrelated new row."""
+    ds = DataServer(seed=0, blocking=False, capacity_frames=4 * 8,
+                    prefetch=False, sampler="prioritized")
+    ds.put(_traj(0, rows=4))
+    ds.sample(2)
+    info = ds.last_sample_info()
+    assert info["weights"] is not None and len(info["slots"]) == 2
+    ds.put(_traj(1, rows=4))                   # overwrites all 4 slots
+    n = ds.update_priorities(info["slots"], np.full(2, 9.0),
+                             gen=info["gen"])
+    assert n == 0                              # all stale -> all dropped
+    assert np.allclose(np.asarray(ds.sampler._tree[info["slots"]]), 1.0)
+    ds.sample(3)
+    info2 = ds.last_sample_info()
+    n2 = ds.update_priorities(info2["slots"], np.full(3, 2.0),
+                              gen=info2["gen"])
+    assert n2 == 3                             # fresh -> applied
+
+
+def test_episode_sampler_reconstructs_across_ring_wrap():
+    """Rows chain into episodes per producer lane; an episode whose rows
+    straddle the ring wraparound still reconstructs in temporal order,
+    and overwritten episodes vanish instead of serving stale rows."""
+    ds = DataServer(seed=0, blocking=False, capacity_frames=6 * 8,
+                    prefetch=False, sampler="episode")
+    s = ds.sampler
+    assert isinstance(s, EpisodeSampler)
+    # 3 puts x 2 rows from ONE source; lane 0 finishes at put 1, lane 1 at put 2
+    ds.put(_traj(0, rows=2), source="actor0")
+    ds.put(_traj(1, rows=2, done_rows=(0,)), source="actor0")
+    ds.put(_traj(2, rows=2, done_rows=(1,)), source="actor0")   # wraps: 6 slots
+    eps = s.episodes()
+    assert len(eps) == 2
+    by_len = sorted(eps, key=len)
+    # lane 0: rows at slots 0 (put0) and 2 (put1); lane 1: slots 1, 3, 5
+    assert np.array_equal(by_len[0], [0, 2])
+    assert np.array_equal(by_len[1], [1, 3, 5])
+    # the slot-5 row wrapped the ring's write head (head reset to 0):
+    # temporal order is preserved by the chain, not by slot order
+    assert ds._head == 0 and ds._size == 6
+    # sampling returns whole-episode runs
+    got = s.sample(5)
+    assert len(got) == 5 and set(got) <= {0, 1, 2, 3, 5}
+    # overwrite slot 0 -> the [0, 2] episode is invalidated
+    ds.put(_traj(3, rows=1, done_rows=(0,)), source="actor1")
+    lens = sorted(len(e) for e in s.episodes())
+    assert lens == [1, 3]                      # [0,2] gone; new 1-row episode
+
+
+def test_episode_sampler_falls_back_uniform_before_first_episode():
+    ds = DataServer(seed=7, blocking=False, capacity_frames=8 * 8,
+                    prefetch=False, sampler="episode")
+    ds.put(_traj(0, rows=4))                   # no terminal rows yet
+    ref = np.random.default_rng(7)
+    got = ds.sampler.sample(3)
+    expect = (ds._head - ds._size + ref.integers(ds._size, size=3)) \
+        % ds._row_slots
+    assert np.array_equal(got, expect)
+
+
+def test_windowed_throughput_rates():
+    """Lifetime rates anchor at the FIRST put (no construction-idle
+    skew); windowed rates cover only the interval since the previous
+    throughput() call."""
+    ds = DataServer(blocking=False, capacity_frames=64 * 8, prefetch=False)
+    time.sleep(0.25)                           # idle before any data
+    ds.put(_traj(0))
+    tp1 = ds.throughput()
+    # 32 frames landed "instantly" after first put: construction idle must
+    # not be averaged in (the old bug would give ~32/0.25 ~ 128 fps here)
+    assert tp1["rfps"] > 1000
+    assert tp1["rfps_window"] > 1000
+    time.sleep(0.2)                            # idle window, no new frames
+    tp2 = ds.throughput()
+    assert tp2["rfps_window"] == 0.0           # windowed: sees the idle
+    assert tp2["rfps"] > 0.0                   # lifetime: still averaging
+    ds.put(_traj(1))
+    tp3 = ds.throughput()
+    assert tp3["rfps_window"] > 0.0
+    assert tp3["rfps"] < tp1["rfps"]           # lifetime decays with idle
+
+
+def test_priority_updates_over_rpc():
+    """DataServerClient round-trips last_sample_info + update_priorities:
+    the remote-learner prioritized loop."""
+    from repro.distributed.transport import DataServerClient, RpcServer
+    ds = DataServer(seed=0, blocking=False, capacity_frames=8 * 8,
+                    prefetch=False, sampler="prioritized")
+    with RpcServer({"data": ds}) as srv:
+        client = DataServerClient(srv.address)
+        client.put(_traj(0, rows=4))
+        assert client.ready()
+        ds.sample(3)
+        info = client.last_sample_info()
+        assert len(info["slots"]) == 3 and info["weights"] is not None
+        n = client.update_priorities(info["slots"], np.full(3, 5.0),
+                                     gen=info["gen"])
+        assert n == 3
+        eps = np.finfo(np.float32).eps.item()
+        assert np.allclose(np.asarray(ds.sampler._tree[info["slots"]]),
+                           (5.0 + eps) ** 0.6)
+        client.close()
+
+
+def test_sampler_threads_through_league_runtime_report():
+    """build_runtime(sampler=...) reaches each role's DataServer and the
+    telemetry report carries the windowed rates + sampler name."""
+    from repro.league import LeagueSpec, build_runtime
+    spec = LeagueSpec.from_dict({"roles": [
+        {"name": "main", "role": "main", "num_actors": 1}]})
+    rt = build_runtime(spec, env_name="rps", num_envs=2, unroll_len=4,
+                       sampler="prioritized")
+    ds = rt.roles[0].data_server
+    assert isinstance(ds.sampler, PrioritizedSampler) and not ds.blocking
+    report = rt.report(wall_s=1.0)
+    role = report["roles"]["main"]
+    assert {"rfps_window", "cfps_window", "sampler"} <= set(role)
+    assert role["sampler"] == "prioritized"

@@ -171,6 +171,92 @@ def test_concurrent_push_and_delta_pull_consistency():
     assert pool.pull_stats["delta"] + pool.pull_stats["noop"] > 0
 
 
+# -- cross-key content addressing --------------------------------------------
+def test_pull_if_changed_cross_key_references_held_leaves():
+    """A caller that advertises held content hashes gets hash references
+    instead of bytes — even on the would-be-full path for a key it never
+    pulled before."""
+    pool = ModelPool()
+    seed_params = _params()
+    k0, k1 = ModelKey("main", 0), ModelKey("exploiter", 0)
+    pool.push(k0, seed_params)
+    r0 = pool.pull_if_changed(k0, None)
+    assert r0.full
+    held = set(r0.manifest.leaf_hashes.values())
+    # same content under a brand-new key: every leaf rides as a reference
+    pool.push(k1, _params())
+    d = pool.pull_if_changed(k1, None, have_hashes=held)
+    assert not d.full and not d.leaves and len(d.by_hash) == 6
+    assert pool.pull_stats["cross_key"] == 1
+    # partial overlap: only the novel leaf ships bytes
+    p2 = _params()
+    p2["layer1"]["b"] = np.full((8,), 42.0, np.float32)
+    k2 = ModelKey("exploiter", 1)
+    pool.push(k2, p2)
+    d2 = pool.pull_if_changed(k2, None, have_hashes=held)
+    assert not d2.full and set(d2.leaves) == {"['layer1']['b']"}
+    assert len(d2.by_hash) == 5
+    # no overlap advertised: plain full answer
+    assert pool.pull_if_changed(k2, None, have_hashes={"nope"}).full
+
+
+def test_exploiter_reset_costs_nothing():
+    """The ROADMAP open item, end to end: an exploiter reset-on-freeze
+    re-mints the seed pytree under a fresh key; a CachedPuller that ever
+    held the seed reconstructs the new key from its hash store with ZERO
+    param bytes pulled — and the result is bit-exact."""
+    pool = ModelPool()
+    seed_params = _params()
+    k_seed = ModelKey("exploiter", 0)
+    pool.push(k_seed, seed_params)
+    pu = CachedPuller(pool)
+    pu.get(k_seed)                           # warm: cache now holds the seed
+    # lineage advances while training... then reset re-ships the seed
+    k_next = ModelKey("exploiter", 1)
+    pool.push(k_next, {kk: dict(vv) for kk, vv in seed_params.items()})
+    full_before = pool.pull_stats["full"]
+    got, man = pu.get_with_manifest(k_next)
+    assert pool.pull_stats["cross_key"] == 1
+    assert pool.pull_stats["full"] == full_before     # zero bytes shipped
+    assert man.version == 0 and man.tree_hash == build_manifest(
+        seed_params, 0).tree_hash
+    for lyr in seed_params:
+        for name in seed_params[lyr]:
+            assert np.array_equal(got[lyr][name], seed_params[lyr][name])
+    # the reconstructed entry itself re-seeds the hash store: dropping the
+    # original key keeps the content addressable
+    pu.drop(k_seed)
+    k3 = ModelKey("exploiter", 2)
+    pool.push(k3, {kk: dict(vv) for kk, vv in seed_params.items()})
+    got3, _ = pu.get_with_manifest(k3)
+    assert pool.pull_stats["cross_key"] == 2
+    assert np.array_equal(got3["layer0"]["w"], seed_params["layer0"]["w"])
+
+
+def test_cross_key_falls_back_cleanly_on_legacy_pools():
+    """Pools without the have_hashes keyword keep working: the puller
+    retries without it and never advertises again."""
+    class OldPool:
+        def __init__(self):
+            self._p = ModelPool()
+        def pull_if_changed(self, key, have_version=None, copy=None):
+            return self._p.pull_if_changed(key, have_version, copy=copy)
+        def push(self, *a, **k):
+            self._p.push(*a, **k)
+        def pull(self, key, copy=None):
+            return self._p.pull(key, copy=copy)
+
+    pool = OldPool()
+    k0, k1 = ModelKey("m", 0), ModelKey("m", 1)
+    pool.push(k0, _params())
+    pool.push(k1, _params())
+    pu = CachedPuller(pool)
+    pu.get(k0)
+    got = pu.get(k1)                         # TypeError retry path
+    assert not pu._cross_key_supported
+    assert np.array_equal(got["layer0"]["w"], _params()["layer0"]["w"])
+
+
 # -- CachedPuller ------------------------------------------------------------
 def test_cached_puller_reuses_and_updates():
     pool = ModelPool(snapshot_on_pull=True)

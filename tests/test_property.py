@@ -85,6 +85,45 @@ def test_moe_routing_invariants(N, E, k, seed):
     assert int(np.asarray(counts).sum()) == N * k
 
 
+@given(st.sampled_from(["uniform", "prioritized", "episode"]),
+       st.lists(st.tuples(st.integers(1, 5), st.booleans()),
+                min_size=1, max_size=12),
+       st.integers(1, 16), st.integers(0, 2 ** 31 - 1))
+@settings(**SET)
+def test_sampler_ring_wraparound_invariants(sampler, puts, k, seed):
+    """Variable-row segments wrapping a small ring, under every sampler:
+    every sampled slot addresses a live row (one some `put` actually
+    wrote), uniform reproduces the pre-refactor rng stream exactly, and
+    episode chains never reference overwritten slots."""
+    from repro.learners import DataServer
+    t = 4
+    ds = DataServer(seed=seed, blocking=False, prefetch=False,
+                    capacity_frames=7 * t, sampler=sampler)
+    written = set()
+    for i, (rows, terminal) in enumerate(puts):
+        rows = min(rows, 7)                    # a segment must fit the ring
+        done = np.zeros((rows, t), bool)
+        if terminal:
+            done[:, -1] = True
+        ds.put({"actions": np.full((rows, t), i, np.int32), "done": done},
+               source="p")
+        written.update(np.asarray(ds._last_rows).tolist())
+    ref_rng = np.random.default_rng(seed)
+    idx = ds.sampler.sample(k)
+    assert idx.shape == (k,)
+    assert set(idx.tolist()) <= written        # only rows a put wrote
+    live = set(((ds._head - ds._size + np.arange(ds._size))
+                % ds._row_slots).tolist())
+    assert set(idx.tolist()) <= live           # ... that are still live
+    if sampler == "uniform":
+        ref = (ds._head - ds._size + ref_rng.integers(ds._size, size=k)) \
+            % ds._row_slots
+        assert np.array_equal(idx, ref)        # bit-identical slot stream
+    if sampler == "episode":
+        for ep in ds.sampler.episodes():
+            assert set(ep.tolist()) <= live    # no stale boundaries
+
+
 @given(st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=10, deadline=None)
 def test_moe_apply_capacity_drop_keeps_finite(seed):
