@@ -36,6 +36,13 @@ Prints ``name,us_per_call,derived`` CSV.
                         sampler's bit-identity to the pre-refactor
                         DataServer draw; writes BENCH_collector.json.
                         Supports `--against FILE` like param_plane.
+  fault_recovery      — the robustness plane: task-lease re-issue
+                        latency after an actor dies holding a match,
+                        ModelPool pull availability while the primary
+                        pool server is killed (failover to a read
+                        replica), and actor-fleet frames/sec dip and
+                        recovery across a 2-of-4 actor kill; writes
+                        BENCH_fault.json. Supports `--against FILE`.
 
 BENCH_*.json records are stamped with the git sha + UTC timestamp and
 written atomically (tmp file + rename), so the bench trajectory files stay
@@ -884,6 +891,195 @@ def collector_throughput(out_path: str | None = None,
     return record
 
 
+def fault_recovery(out_path: str | None = None, against: str | None = None):
+    """ISSUE 7 acceptance: the robustness plane's three recovery numbers.
+
+      * lease re-issue latency — a task leased to an actor that never
+        reports is re-issued to the next requester; measured from issue
+        to the re-issued task landing in another actor's hands, under a
+        short TTL + a 1-ms reaper cadence (the distributed reaper runs
+        at 1 s; the latency scales with TTL + reap interval).
+      * pull availability — a ModelPoolClient reading across
+        [primary, replica] endpoints while the PRIMARY pool server is
+        killed mid-loop: the fraction of pulls that still answer
+        (failover to the read replica), plus the worst failover stall.
+      * fps dip/recovery — 4 actor threads produce frames; 2 are killed
+        mid-run and later replaced: frames/sec before, during the
+        2-actor gap, and after replacements join. Recovery ratio is the
+        headline (the fleet must come back to its baseline).
+
+    Writes BENCH_fault.json; with `against`, compares to the stored
+    record and fails on regression (the CI mode)."""
+    import threading
+
+    from repro.actors import Actor
+    from repro.configs import get_arch
+    from repro.core import LeagueMgr, MatchResult, ModelKey
+    from repro.core.model_pool import ModelPool, ModelPoolReplica
+    from repro.distributed import transport as tp
+    from repro.envs import make_env
+    from repro.models import init_params
+
+    prior = (json.loads(pathlib.Path(against).read_text())
+             if against else None)
+    rng = np.random.default_rng(3)
+
+    # -- (a) lease re-issue latency -----------------------------------------
+    ttl, rounds = 0.05, 5
+    league = LeagueMgr(lease_ttl_s=ttl)
+    league.add_learning_agent(
+        "main", {"w": rng.normal(size=(8,)).astype(np.float32)})
+    reissue_lat = []
+    for _ in range(rounds):
+        t_issue = time.monotonic()
+        league.request_task("main", actor_id="victim")   # never reported
+        while True:
+            league.reap_leases()                         # 1-ms reaper cadence
+            if league.lease_state()["reissue_queued"]:
+                t2 = league.request_task("main", actor_id="spare")
+                reissue_lat.append(time.monotonic() - t_issue)
+                # the spare finishes its match: complete the lease so only
+                # the victim's leases ever expire
+                league.report_result(MatchResult(
+                    learner_key=t2.learner_key,
+                    opponent_keys=t2.opponent_keys, outcome=1.0,
+                    episode_len=1, task_id=t2.task_id))
+                break
+            time.sleep(0.001)
+    lstate = league.lease_state()
+    assert lstate["reissued"] == rounds and lstate["reaped"] == rounds
+    lat_mean = float(np.mean(reissue_lat))
+    _emit("fault/lease_reissue", lat_mean * 1e6,
+          f"ttl_s={ttl};max_s={max(reissue_lat):.3f}")
+
+    # -- (b) pull availability across a primary kill ------------------------
+    params = {f"layer{i}": rng.normal(size=(256, 256)).astype(np.float32)
+              for i in range(4)}
+    pool = ModelPool()
+    key = ModelKey("bench", 0)
+    pool.push(key, params)
+    primary_srv = tp.RpcServer({"pool": pool}).start()
+    fast = tp.RetryPolicy(base_s=0.01, cap_s=0.05, deadline_s=1.0)
+    replica = ModelPoolReplica(
+        tp.ModelPoolClient(tp.RpcClient(primary_srv.address, retry=fast)),
+        sync_interval_s=0.05)
+    replica.sync_once()
+    replica.start_following()
+    replica_srv = tp.RpcServer({"pool": replica}).start()
+    client = tp.ModelPoolClient(tp.RpcClient(
+        [primary_srv.address, replica_srv.address], retry=fast, seed=0))
+    duration, kill_at = 2.0, 1.0
+    attempts = failures = 0
+    post_kill_ms = []
+    t0, killed = time.perf_counter(), False
+    try:
+        while time.perf_counter() - t0 < duration:
+            if not killed and time.perf_counter() - t0 >= kill_at:
+                primary_srv.close()                      # kill the primary
+                killed = True
+            t1 = time.perf_counter()
+            attempts += 1
+            try:
+                client.pull(key)
+            except tp.TransportError:
+                failures += 1
+            if killed:
+                post_kill_ms.append((time.perf_counter() - t1) * 1e3)
+            time.sleep(0.01)
+    finally:
+        client.close()
+        replica.stop()
+        replica_srv.close()
+        primary_srv.close()
+    availability = (attempts - failures) / max(attempts, 1)
+    failover_max_ms = max(post_kill_ms) if post_kill_ms else 0.0
+    assert availability >= 0.95, (
+        f"pull availability {availability:.3f} < 0.95 across primary kill")
+    _emit("fault/pull_availability", failover_max_ms * 1e3,
+          f"availability={availability:.3f};attempts={attempts}")
+
+    # -- (c) fps dip and recovery across a 2-of-4 actor kill ----------------
+    env = make_env("rps")
+    cfg = get_arch("tleague-policy-s")
+    league2 = LeagueMgr()
+    league2.add_learning_agent("main", init_params(jax.random.PRNGKey(0), cfg))
+    E, T, n_actors = 8, 8, 4
+    frames = [0] * (n_actors + 2)        # slot per thread, incl. replacements
+    stops = [threading.Event() for _ in range(n_actors + 2)]
+
+    def mk_actor(i):
+        return Actor(env, cfg, league2, num_envs=E, unroll_len=T, seed=100 + i)
+
+    def work(i, actor):
+        while not stops[i].is_set():
+            actor.run_segment()
+            frames[i] += E * T
+
+    actors = [mk_actor(i) for i in range(n_actors)]
+    spares = [mk_actor(10 + j) for j in range(2)]
+    for a in actors + spares:            # compile every actor off the clock
+        a.run_segment()
+    threads = [threading.Thread(target=work, args=(i, a), daemon=True)
+               for i, a in enumerate(actors)]
+    for th in threads:
+        th.start()
+
+    def window(seconds: float) -> float:
+        f0, t0 = sum(frames), time.perf_counter()
+        time.sleep(seconds)
+        return (sum(frames) - f0) / (time.perf_counter() - t0)
+
+    w = 1.0
+    fps_before = window(w)
+    for i in (2, 3):                     # kill 2 of 4
+        stops[i].set()
+    threads[2].join()
+    threads[3].join()
+    fps_during = window(w)
+    for j, a in enumerate(spares):       # prewarmed replacements join
+        th = threading.Thread(target=work, args=(n_actors + j, a), daemon=True)
+        threads.append(th)
+        th.start()
+    fps_after = window(w)
+    for s in stops:
+        s.set()
+    for th in threads:
+        th.join(timeout=10.0)
+    dip_ratio = fps_during / max(fps_before, 1e-9)
+    recovery_ratio = fps_after / max(fps_before, 1e-9)
+    _emit("fault/fps_recovery", 0.0,
+          f"before={fps_before:.0f};during={fps_during:.0f};"
+          f"after={fps_after:.0f};recovery_x={recovery_ratio:.2f}")
+
+    record = {
+        "lease_ttl_s": ttl,
+        "lease_reissue_rounds": rounds,
+        "lease_reissue_latency_s_mean": round(lat_mean, 4),
+        "lease_reissue_latency_s_max": round(max(reissue_lat), 4),
+        "pull_attempts": attempts,
+        "pull_failures": failures,
+        "pull_availability": round(availability, 4),
+        "pull_failover_max_ms": round(failover_max_ms, 2),
+        "replica_sync_cycles": replica.sync_stats["cycles"],
+        "actors": n_actors,
+        "actors_killed": 2,
+        "fps_before": round(fps_before, 1),
+        "fps_during_kill": round(fps_during, 1),
+        "fps_after_recovery": round(fps_after, 1),
+        "fps_dip_ratio": round(dip_ratio, 3),
+        "fps_recovery_ratio": round(recovery_ratio, 3),
+        "backend": jax.default_backend(),
+    }
+    path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_fault.json"
+    _write_bench(path, record)
+    _emit("fault/bench_written", 0.0, f"wrote={path.name}")
+    if prior is not None:
+        _check_against(record, prior, against,
+                       floors={"pull_availability": (0.95, 0.9),
+                               "fps_recovery_ratio": (0.5, 0.5)})
+    return record
+
+
 def kernels():
     from repro.kernels import flash_attention, reverse_discounted_scan, rmsnorm
     k = jax.random.PRNGKey(0)
@@ -907,10 +1103,10 @@ def kernels():
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "infserver_throughput", "learner_throughput", "league_throughput",
            "sharded_serving", "param_plane", "collector_throughput",
-           "kernels", "fig4_winrate", "table12_league_eval")
+           "fault_recovery", "kernels", "fig4_winrate", "table12_league_eval")
 
 # benches whose record supports the `--against FILE` regression gate
-_AGAINST_BENCHES = ("param_plane", "collector_throughput")
+_AGAINST_BENCHES = ("param_plane", "collector_throughput", "fault_recovery")
 
 
 def main() -> None:

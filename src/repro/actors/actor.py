@@ -39,9 +39,14 @@ from repro.params import CachedPuller
 class Actor:
     def __init__(self, env: MultiAgentEnv, cfg, league: LeagueMgr, *,
                  agent_id: str = "main", num_envs: int = 16, unroll_len: int = 16,
-                 learner_slots=None, seed: int = 0, inf_server=None):
+                 learner_slots=None, seed: int = 0, inf_server=None,
+                 actor_id: Optional[str] = None):
         self.env, self.cfg, self.league = env, cfg, league
         self.agent_id = agent_id
+        # lease identity: when set, request_task names this actor so the
+        # league can tie the lease to heartbeat liveness (and release the
+        # previous lease when the next segment starts)
+        self.actor_id = actor_id
         self.inf_server = inf_server
         if inf_server is None:
             self.rollout, self.init_carry = build_rollout(
@@ -68,7 +73,11 @@ class Actor:
 
     def run_segment(self):
         """One Task -> one unroll segment. Returns the learner trajectory."""
-        task = self.league.request_task(self.agent_id)
+        if self.actor_id is None:
+            task = self.league.request_task(self.agent_id)
+        else:
+            task = self.league.request_task(self.agent_id,
+                                            actor_id=self.actor_id)
         # the lineage advanced: drop the superseded theta's cache entry —
         # it is only ever pulled again if it froze into the pool and comes
         # back as somebody's φ (one full re-pull then). Opponent entries
@@ -146,4 +155,5 @@ class Actor:
                 learner_key=task.learner_key,
                 opponent_keys=task.opponent_keys,
                 outcome=int(outcome[t, e]),
-                episode_len=int(t) + 1))
+                episode_len=int(t) + 1,
+                task_id=task.task_id))

@@ -3,11 +3,11 @@
 from repro.core.types import (ModelKey, Task, MatchResult, Hyperparam,
                               FreezeGate)
 from repro.core.payoff import PayoffMatrix
-from repro.core.model_pool import ModelPool
+from repro.core.model_pool import ModelPool, ModelPoolReplica
 from repro.core.hyper_mgr import HyperMgr
 from repro.core.game_mgr import (
     GameMgr, UniformGameMgr, PFSPGameMgr, SelfPlayPFSPGameMgr,
     EloMatchGameMgr, ExploiterGameMgr, LeagueExploiterGameMgr,
     MinimaxExploiterGameMgr, GAME_MGRS,
 )
-from repro.core.league_mgr import LeagueMgr, LearningAgent, ROLES
+from repro.core.league_mgr import LeagueMgr, LearningAgent, ROLES, TaskLease

@@ -26,11 +26,12 @@ threads.
 """
 from __future__ import annotations
 
+import collections
 import itertools
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.game_mgr import GameMgr, SelfPlayPFSPGameMgr
 from repro.core.hyper_mgr import HyperMgr
@@ -55,11 +56,34 @@ class LearningAgent:
     seed_params: Any = None                # kept only when reset needs it
 
 
+@dataclass
+class TaskLease:
+    """One outstanding match: who holds it, and until when.
+
+    A lease is completed by the first `report_result` quoting its task_id,
+    released when the same actor requests its next task, or *reaped* when
+    its deadline passes / its actor is declared dead — in which case the
+    match template re-enters the matchmaking queue under a fresh task_id
+    (a new generation) and any late results quoting the old id are dropped."""
+    task_id: int
+    task: Task
+    agent_id: str
+    actor_id: Optional[str]
+    deadline: float
+    issued_t: float
+    reissue_of: Optional[int] = None
+
+
+# how many reaped task_ids we remember for the late-result generation guard
+_REAPED_MEMORY = 4096
+
+
 class LeagueMgr:
     def __init__(self, model_pool: Optional[ModelPool] = None,
                  hyper_mgr: Optional[HyperMgr] = None,
                  payoff: Optional[PayoffMatrix] = None,
-                 pbt: bool = False, seed: int = 0):
+                 pbt: bool = False, seed: int = 0,
+                 lease_ttl_s: Optional[float] = None):
         self.model_pool = model_pool or ModelPool()
         self.hyper_mgr = hyper_mgr or HyperMgr(seed=seed)
         self.payoff = payoff or PayoffMatrix()
@@ -76,6 +100,21 @@ class LeagueMgr:
         self._opp_cache: Tuple[ModelKey, ...] = ()
         self._opp_sig: Tuple[int, int] = (-1, -1)
         self.freeze_events: List[dict] = []     # telemetry: who froze, why, when
+        # -- lease plane (active only when lease_ttl_s is set) ----------------
+        # With lease_ttl_s=None the task_id counter still runs but no lease
+        # state is kept: legacy drivers keep the exact pre-lease behavior and
+        # memory profile. With a TTL, every request_task records a TaskLease;
+        # `reap_leases` (called by the coordinator, fed by heartbeat counters)
+        # expires them, re-queues the match, and arms the generation guard.
+        self.lease_ttl_s = lease_ttl_s
+        self._leases: Dict[int, TaskLease] = {}
+        self._actor_lease: Dict[str, int] = {}          # actor_id -> outstanding task_id
+        self._reaped: "collections.OrderedDict[int, float]" = collections.OrderedDict()
+        self._reissue: Dict[str, collections.deque] = {}  # agent_id -> Task templates
+        self.lease_stats = {
+            "issued": 0, "completed": 0, "released": 0, "reaped": 0,
+            "reissued": 0, "dropped_results": 0,
+        }
 
     # -- setup -------------------------------------------------------------------
     def add_learning_agent(self, agent_id: str, init_params: Any,
@@ -118,26 +157,88 @@ class LeagueMgr:
             self._opp_sig = sig
         return self._opp_cache
 
-    def request_task(self, agent_id: str = "main") -> Task:
+    def request_task(self, agent_id: str = "main",
+                     actor_id: Optional[str] = None) -> Task:
         """Actor-facing: sample an opponent and return a fresh Task. Holds
         the league lock only for the matchmaking draw — never blocks on
         anything else. The returned Task is an immutable value object
         (safe to ship across threads or the RPC transport); params are NOT
-        included — the Actor pulls them from the ModelPool by key."""
+        included — the Actor pulls them from the ModelPool by key.
+
+        When the lease plane is active, the Task is issued under a lease
+        with deadline `now + lease_ttl_s`; a reaped match waiting in the
+        re-issue queue wins over a fresh matchmaking draw (under a NEW
+        task_id — the old generation stays dead). An actor names itself
+        via `actor_id` so its previous lease is released on its next
+        request (one task in flight per actor) and so the reaper can tie
+        leases to heartbeat liveness."""
         with self._lock:
             ag = self.agents[agent_id]
-            opp = ag.game_mgr.get_opponent(ag.current, self._opponents())
-            return Task(learner_key=ag.current, opponent_keys=(opp,),
-                        hyperparam=self.hyper_mgr.get(ag.current),
-                        task_id=next(self._task_ids))
+            tid = next(self._task_ids)
+            task = self._pop_reissue(ag)
+            if task is not None:
+                self.lease_stats["reissued"] += 1
+                task = Task(learner_key=task.learner_key,
+                            opponent_keys=task.opponent_keys,
+                            hyperparam=task.hyperparam, task_id=tid)
+            else:
+                opp = ag.game_mgr.get_opponent(ag.current, self._opponents())
+                task = Task(learner_key=ag.current, opponent_keys=(opp,),
+                            hyperparam=self.hyper_mgr.get(ag.current),
+                            task_id=tid)
+            if self.lease_ttl_s is not None:
+                now = time.monotonic()
+                if actor_id is not None:
+                    self._release_actor(actor_id)
+                    self._actor_lease[actor_id] = tid
+                self._leases[tid] = TaskLease(
+                    task_id=tid, task=task, agent_id=agent_id,
+                    actor_id=actor_id, deadline=now + self.lease_ttl_s,
+                    issued_t=now)
+                self.lease_stats["issued"] += 1
+            return task
+
+    def _pop_reissue(self, ag: LearningAgent) -> Optional[Task]:
+        """Next reaped match template for this agent, skipping templates
+        whose learner key went stale (the lineage froze past them — the
+        fresh draw is strictly better evidence)."""
+        q = self._reissue.get(ag.agent_id)
+        while q:
+            t = q.popleft()
+            if t.learner_key == ag.current:
+                return t
+        return None
+
+    def _release_actor(self, actor_id: str):
+        """The actor moved on: its previous lease is done (released), not
+        reaped — no re-issue, and its late results stay acceptable."""
+        prev = self._actor_lease.pop(actor_id, None)
+        if prev is not None and self._leases.pop(prev, None) is not None:
+            self.lease_stats["released"] += 1
 
     def report_result(self, result: MatchResult):
         """Actor-facing: record an episode outcome on the shared payoff
         matrix (and the owning agent's matchmaker state). Non-blocking
         (lock only); safe to call from any worker thread at any rate —
         freeze gating reads the same payoff under the same lock, so a
-        result is visible to `should_freeze` as soon as this returns."""
+        result is visible to `should_freeze` as soon as this returns.
+
+        Generation guard: a result quoting a reaped lease is dropped with
+        telemetry (`lease_stats['dropped_results']`) — the match was
+        re-issued to someone else, and double-recording would corrupt the
+        payoff matrix. Results with task_id=-1 (legacy/eval traffic)
+        bypass the guard entirely."""
         with self._lock:
+            tid = getattr(result, "task_id", -1)
+            if tid in self._reaped:
+                self.lease_stats["dropped_results"] += 1
+                return
+            lease = self._leases.pop(tid, None) if tid >= 0 else None
+            if lease is not None:
+                self.lease_stats["completed"] += 1
+                if lease.actor_id is not None and \
+                        self._actor_lease.get(lease.actor_id) == tid:
+                    del self._actor_lease[lease.actor_id]
             self._results.append(result)
             for key in (result.learner_key, *result.opponent_keys):
                 if key not in self.payoff:
@@ -150,6 +251,60 @@ class LeagueMgr:
                 # already detached): record straight on the shared payoff
                 # matrix instead of minting a throwaway GameMgr per result
                 self.payoff.record(result)
+
+    # -- lease plane (coordinator API) -----------------------------------------
+    def touch_actor(self, actor_id: str, now: Optional[float] = None):
+        """Heartbeat feed: the actor is alive — push its outstanding
+        lease's deadline out to now + lease_ttl_s."""
+        with self._lock:
+            if self.lease_ttl_s is None:
+                return
+            tid = self._actor_lease.get(actor_id)
+            lease = self._leases.get(tid) if tid is not None else None
+            if lease is not None:
+                t = time.monotonic() if now is None else now
+                lease.deadline = t + self.lease_ttl_s
+
+    def reap_leases(self, now: Optional[float] = None,
+                    dead_actors: Iterable[str] = ()) -> List[TaskLease]:
+        """Coordinator-facing: expire leases past their deadline or held by
+        a dead actor. Each reaped match template re-enters its agent's
+        re-issue queue (served to the next `request_task` under a fresh
+        task_id) and the old task_id is remembered so late results from
+        the presumed-dead actor are dropped. Returns the reaped leases."""
+        with self._lock:
+            if not self._leases:
+                return []
+            t = time.monotonic() if now is None else now
+            dead = set(dead_actors)
+            reaped = [l for l in self._leases.values()
+                      if l.deadline <= t or
+                      (l.actor_id is not None and l.actor_id in dead)]
+            for lease in reaped:
+                del self._leases[lease.task_id]
+                if lease.actor_id is not None and \
+                        self._actor_lease.get(lease.actor_id) == lease.task_id:
+                    del self._actor_lease[lease.actor_id]
+                self._reaped[lease.task_id] = t
+                q = self._reissue.setdefault(lease.agent_id,
+                                             collections.deque())
+                q.append(lease.task)
+                self.lease_stats["reaped"] += 1
+            while len(self._reaped) > _REAPED_MEMORY:
+                self._reaped.popitem(last=False)
+            return reaped
+
+    def lease_state(self) -> dict:
+        """Lease-plane telemetry: counters plus current occupancy. The
+        chaos smoke asserts `dropped_results` here — the payoff matrix
+        never saw a reaped generation's outcome."""
+        with self._lock:
+            return {
+                **self.lease_stats,
+                "outstanding": len(self._leases),
+                "reissue_queued": sum(len(q) for q in self._reissue.values()),
+                "ttl_s": self.lease_ttl_s,
+            }
 
     # -- learner-facing API ------------------------------------------------------
     def request_learner_task(self, agent_id: str = "main") -> Task:

@@ -39,6 +39,7 @@ from __future__ import annotations
 import collections
 import random
 import threading
+import time
 from typing import Any, Dict, Optional, Union
 
 from repro.core.types import ModelKey
@@ -209,6 +210,40 @@ class ModelPool:
                     "frozen": self._frozen.get(key, False),
                     "version": self._versions.get(key, 0)}
 
+    def install(self, key: ModelKey, params: Any, version: int,
+                manifest: Optional[ParamManifest] = None, step: int = 0,
+                frozen: bool = False) -> bool:
+        """Replica-side adopt: store `params` AT an explicit version (the
+        primary's), so a replica answers `pull_if_changed` with versions
+        and hashes coherent with the primary — a client that cached v5
+        from the primary gets a valid v5→v7 delta from a replica at v7.
+
+        Monotonic guard: an install at or below the key's current version
+        is refused (returns False) — a lagging sync can never regress the
+        replica. Passing the primary's `manifest` skips local re-hashing
+        and seeds the delta history. `frozen` mirrors the primary's
+        write-bar only when set (never un-freezes)."""
+        with self._lock:
+            if key in self._params and version <= self._versions[key]:
+                return False
+            if key not in self._params:
+                self.membership_version += 1
+            self._params[key] = params
+            self._step[key] = step
+            self._versions[key] = version
+            if manifest is not None:
+                assert manifest.version == version, (manifest.version, version)
+                self._manifest[key] = manifest
+                hist = self._history.setdefault(key, collections.OrderedDict())
+                hist[version] = manifest
+                while len(hist) > _MANIFEST_HISTORY:
+                    hist.popitem(last=False)
+            else:
+                self._manifest.pop(key, None)
+            if frozen:
+                self._frozen[key] = True
+            return True
+
     def freeze(self, key: ModelKey) -> None:
         """Mark `key` immutable: later `push`es to it raise. Non-blocking;
         the params themselves are not copied — freezing is a write-bar,
@@ -230,3 +265,121 @@ class ModelPool:
 
     def __len__(self):
         return len(self._params)
+
+
+class ModelPoolReplica:
+    """A read replica: the paper's M_M ModelPool instances (§3.2), grown
+    from one primary via the existing manifest/delta protocol.
+
+    Wraps a *primary* (anything with the ModelPool pull surface — usually
+    a `ModelPoolClient` over RPC) and keeps a local `ModelPool` in sync:
+    each `sync_once` lists the primary's keys and runs every key through a
+    `CachedPuller`, so an unchanged key costs one `NotModified` tag and a
+    Learner publish arrives as a changed-leaves delta. Params are
+    installed at the PRIMARY's version with the primary's manifest
+    (`ModelPool.install`), so a consumer that cached v5 from the primary
+    and fails over here gets a version-coherent v5→v7 delta, and a
+    lagging replica can never regress below what it already serves.
+
+    The replica object itself exposes the READ half of the pool protocol
+    (serve it under the "pool" RPC namespace and `ModelPoolClient` works
+    unchanged); writes raise — learners must push to the primary.
+    """
+
+    def __init__(self, primary, sync_interval_s: float = 0.5):
+        from repro.params.cache import CachedPuller
+        self._primary = primary
+        self.pool = ModelPool(snapshot_on_pull=False)
+        self._puller = CachedPuller(primary, copy=False)
+        self.sync_interval_s = sync_interval_s
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.sync_stats = {"cycles": 0, "keys_installed": 0, "frozen_mirrored": 0,
+                           "errors": 0, "last_ok_t": None}
+
+    # -- follower ------------------------------------------------------------
+    def sync_once(self) -> int:
+        """One catch-up pass against the primary; returns how many keys
+        changed locally. Raises whatever the primary transport raises —
+        the follower loop counts and retries, one-shot callers decide."""
+        installed = 0
+        for key in self._primary.keys():
+            params, man = self._puller.get_with_manifest(key)
+            if man is None:
+                continue                      # primary predates the param plane
+            if self.pool.install(key, params, man.version, manifest=man):
+                installed += 1
+            attr = self._primary.pull_attr(key)
+            # freeze only once the final weights are in hand: a frozen key
+            # at an older local version keeps syncing until versions match
+            if attr.get("frozen") and self.pool.version(key) >= attr["version"] \
+                    and not self.pool.pull_attr(key)["frozen"]:
+                self.pool.freeze(key)
+                self.sync_stats["frozen_mirrored"] += 1
+        self.sync_stats["cycles"] += 1
+        self.sync_stats["keys_installed"] += installed
+        self.sync_stats["last_ok_t"] = time.monotonic()
+        return installed
+
+    def _follow(self):
+        while not self._stop.is_set():
+            try:
+                self.sync_once()
+            except Exception:
+                self.sync_stats["errors"] += 1
+            self._stop.wait(self.sync_interval_s)
+
+    def start_following(self) -> "ModelPoolReplica":
+        assert self._thread is None, "already following"
+        self._thread = threading.Thread(target=self._follow,
+                                        name="pool-replica-sync", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+
+    # -- read half of the pool protocol (servable under ns "pool") -----------
+    def pull(self, key, copy=None):
+        return self.pool.pull(key, copy=copy)
+
+    def pull_if_changed(self, key, have_version=None, copy=None,
+                        have_hashes=None):
+        return self.pool.pull_if_changed(key, have_version, copy=copy,
+                                         have_hashes=have_hashes)
+
+    def manifest(self, key):
+        return self.pool.manifest(key)
+
+    def version(self, key):
+        return self.pool.version(key)
+
+    def pull_attr(self, key):
+        return self.pool.pull_attr(key)
+
+    def keys(self):
+        return self.pool.keys()
+
+    @property
+    def membership_version(self):
+        return self.pool.membership_version
+
+    @property
+    def pull_stats(self):
+        return self.pool.pull_stats
+
+    def __contains__(self, key):
+        return key in self.pool
+
+    def __len__(self):
+        return len(self.pool)
+
+    # -- writes are refused: this is a READ replica ---------------------------
+    def push(self, key, params, step: int = 0):
+        raise ValueError("read replica: push refused — write to the primary")
+
+    def freeze(self, key):
+        raise ValueError("read replica: freeze refused — write to the primary")

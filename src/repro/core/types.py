@@ -88,9 +88,15 @@ class Task:
 
 @dataclass(frozen=True)
 class MatchResult:
-    """Episode outcome reported by an Actor at episode end."""
+    """Episode outcome reported by an Actor at episode end.
+
+    `task_id` echoes the Task the episode was played under; -1 marks
+    legacy/eval traffic that never held a lease. The LeagueMgr's lease
+    plane uses it as a generation guard: results quoting a reaped lease
+    are dropped instead of corrupting the payoff matrix."""
     learner_key: ModelKey
     opponent_keys: Tuple[ModelKey, ...]
     outcome: Outcome
     episode_len: int = 0
     info: Optional[Dict] = None
+    task_id: int = -1

@@ -21,6 +21,15 @@ partition — keeps its sockets open and workers block forever inside
 * **`probe`** / `python -m repro.distributed.heartbeat ADDR` — a
   one-shot liveness check (exit 0 alive / 1 dead) that the k8s renderer
   wires into pod liveness probes.
+* **`BeatRegistry`** — the coordinator-side inverse: per-WORKER beat
+  counters (actors beat through the ctrl plane on every segment and
+  while waiting out backpressure), classified into alive vs stale by
+  wall age. This is the signal that feeds the lease reaper: a stale
+  actor's outstanding task lease is reaped and re-issued, an alive
+  actor's lease deadline is pushed out. The same slow-vs-dead
+  discrimination as the monitor — a SIGSTOPped actor that resumes
+  beating goes back to alive (but any lease reaped during the stall
+  stays reaped: generations never un-reap).
 
 The same `Heartbeat` object doubles as the in-process channel: the
 league runtime's coordinator thread beats it, and worker threads call
@@ -30,7 +39,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class Heartbeat:
@@ -84,6 +93,46 @@ class Heartbeat:
             self._beater_stop.set()
             self._beater.join(timeout=5.0)
             self._beater = None
+
+
+class BeatRegistry:
+    """Per-worker beat counters, the coordinator-side liveness ledger.
+
+    `beat(name)` is cheap enough to ride every ctrl-plane report; `ages()`
+    snapshots wall age per worker; `split(stale_s)` partitions into
+    (alive, stale) name lists. A worker never beats itself out of the
+    registry — `forget(name)` removes one deliberately (e.g. after its
+    process was reaped and respawned under a new name)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._beats: Dict[str, Tuple[int, float]] = {}   # name -> (count, t)
+
+    def beat(self, name: str) -> int:
+        with self._lock:
+            n = self._beats.get(name, (0, 0.0))[0] + 1
+            self._beats[name] = (n, time.monotonic())
+            return n
+
+    def ages(self) -> Dict[str, float]:
+        now = time.monotonic()
+        with self._lock:
+            return {name: now - t for name, (_, t) in self._beats.items()}
+
+    def split(self, stale_s: float) -> Tuple[List[str], List[str]]:
+        """(alive, stale) worker names at the `stale_s` age threshold."""
+        alive, stale = [], []
+        for name, age in self.ages().items():
+            (alive if age <= stale_s else stale).append(name)
+        return alive, stale
+
+    def forget(self, name: str) -> None:
+        with self._lock:
+            self._beats.pop(name, None)
+
+    def __len__(self):
+        with self._lock:
+            return len(self._beats)
 
 
 class HeartbeatMonitor(threading.Thread):

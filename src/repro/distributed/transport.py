@@ -52,12 +52,17 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import fnmatch
+import json
+import os
+import random
 import socket
 import struct
 import threading
+import time
 import traceback
 from types import SimpleNamespace
-from typing import Any, Dict, Hashable, List, Optional, Tuple
+from typing import Any, Dict, Hashable, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -82,12 +87,54 @@ class TransportError(ConnectionError):
     """The peer is gone (refused, reset, or closed mid-message)."""
 
 
+class RetryableError(TransportError):
+    """A NON-idempotent call failed after the request may have reached the
+    server (`report_result`, `put_when_room`, ...): the transport cannot
+    know whether the side effect happened, so it refuses to blindly
+    resend. The caller resolves the ambiguity at the protocol layer —
+    lease/generation guards make a duplicate `report_result` harmless
+    (the reaped generation is dropped server-side), and a duplicated or
+    lost trajectory segment is just data. Subclasses TransportError so
+    legacy `except TransportError` shutdown paths keep working."""
+
+
 class RemoteError(RuntimeError):
     """The remote method raised; `.remote_tb` carries the server traceback."""
 
     def __init__(self, message: str, remote_tb: str = ""):
         super().__init__(message)
         self.remote_tb = remote_tb
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Jittered exponential backoff with a cap and a total deadline.
+
+    N actors respawned together against a restarting pool must not
+    thundering-herd it: each client's delay sequence is base * 2^i capped
+    at `cap_s`, each multiplied by an independent uniform jitter in
+    [0.5, 1.5], and the whole retry loop gives up once `deadline_s` of
+    wall time (or `max_attempts` attempts) is spent."""
+    base_s: float = 0.1
+    cap_s: float = 2.0
+    max_attempts: int = 50
+    deadline_s: Optional[float] = 5.0
+
+    def delays(self, rng: random.Random):
+        """Yield the sleep before each RE-attempt (attempt 0 is free);
+        exhaustion means give up. Deadline accounting includes the time
+        the attempts themselves burned (monotonic clock, not just the
+        sleeps)."""
+        t0 = time.monotonic()
+        for i in range(max(0, self.max_attempts - 1)):
+            d = min(self.cap_s, self.base_s * (2.0 ** i))
+            d *= rng.uniform(0.5, 1.5)
+            if self.deadline_s is not None:
+                left = self.deadline_s - (time.monotonic() - t0)
+                if left <= 0:
+                    return
+                d = min(d, left)
+            yield d
 
 
 # -- codec -------------------------------------------------------------------
@@ -289,6 +336,106 @@ def parse_addr(addr: str) -> Tuple[str, int]:
     return host or "127.0.0.1", int(port)
 
 
+# -- chaos harness ------------------------------------------------------------
+# Server-side fault injection for the chaos smoke and the fault_recovery
+# benchmark: a seeded FaultPlan decides, per incoming request, whether the
+# connection drops before dispatch (request lost), after dispatch (reply
+# lost — the ambiguity RetryableError models), gets delayed, or dies
+# mid-streamed-chunk. Deterministic given (rules, seed, request order per
+# rule); ships across process boundaries as JSON via REPRO_FAULT_PLAN.
+
+@dataclasses.dataclass
+class FaultRule:
+    """One injection rule. `match` is an fnmatch pattern over the wire
+    method name (`"pool.*"`, `"*.pull_if_changed"`, `"*"`); `kind` is
+    `drop` (close before dispatch), `drop_reply` (dispatch, then close
+    instead of replying), `delay` (sleep `delay_s`, then behave), or
+    `close_mid_chunk` (send a truncated reply — for streamed replies,
+    half of the first blob — then close). Fires with probability `p`, at
+    most `max_times` times."""
+    match: str
+    kind: str
+    p: float = 1.0
+    delay_s: float = 0.05
+    max_times: Optional[int] = None
+    fired: int = 0
+
+    _KINDS = ("drop", "drop_reply", "delay", "close_mid_chunk")
+
+    def __post_init__(self):
+        assert self.kind in self._KINDS, \
+            f"unknown fault kind {self.kind!r}; pick from {self._KINDS}"
+
+
+class FaultPlan:
+    """A seeded set of FaultRules a `RpcServer` consults per request."""
+
+    def __init__(self, rules: Iterable[FaultRule], seed: int = 0):
+        self.rules = list(rules)
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def decide(self, method: str) -> Optional[FaultRule]:
+        """First matching rule that fires for this request, else None."""
+        with self._lock:
+            for rule in self.rules:
+                if not fnmatch.fnmatchcase(method, rule.match):
+                    continue
+                if rule.max_times is not None and rule.fired >= rule.max_times:
+                    continue
+                if rule.p < 1.0 and self._rng.random() >= rule.p:
+                    continue
+                rule.fired += 1
+                return rule
+        return None
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {f"{r.match}:{r.kind}": r.fired for r in self.rules}
+
+    def to_json(self) -> str:
+        return json.dumps({"seed": self.seed, "rules": [
+            {"match": r.match, "kind": r.kind, "p": r.p,
+             "delay_s": r.delay_s, "max_times": r.max_times}
+            for r in self.rules]})
+
+    @classmethod
+    def from_json(cls, s: str) -> "FaultPlan":
+        d = json.loads(s)
+        return cls([FaultRule(**r) for r in d.get("rules", [])],
+                   seed=d.get("seed", 0))
+
+    @classmethod
+    def from_env(cls, var: str = "REPRO_FAULT_PLAN") -> Optional["FaultPlan"]:
+        """The cross-process seam: a parent (the chaos smoke) plants the
+        plan in the environment; `run_coordinator` installs it on its
+        server at startup."""
+        s = os.environ.get(var)
+        return cls.from_json(s) if s else None
+
+
+def _send_truncated(sock: socket.socket, obj) -> None:
+    """Send a deliberately incomplete reply (the close_mid_chunk fault):
+    for streamed messages, the header + payload + half of the first blob;
+    otherwise half of the frame itself. The peer sees TransportError
+    mid-message, exactly like a server dying mid-transfer."""
+    blobs: Optional[List[np.ndarray]] = [] if CODEC == "msgpack" else None
+    payload = packb(obj, blobs)
+    streamed = bool(blobs)
+    header = struct.pack(
+        ">BQ", _CODEC_ID | (_STREAM_FLAG if streamed else 0), len(payload))
+    if streamed:
+        sock.sendall(header + payload)
+        sock.sendall(struct.pack(">I", len(blobs)))
+        mv = memoryview(blobs[0]).cast("B")
+        sock.sendall(struct.pack(">Q", len(mv)))
+        sock.sendall(mv[:max(1, len(mv) // 2)])
+    else:
+        frame = header + payload
+        sock.sendall(frame[:max(9, len(frame) // 2)])
+
+
 # -- server ------------------------------------------------------------------
 class RpcServer:
     """Serve the public surface of named objects over one TCP socket.
@@ -302,8 +449,9 @@ class RpcServer:
     contract, exactly as they do for in-process threads."""
 
     def __init__(self, objects: Dict[str, Any], host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0, fault_plan: Optional[FaultPlan] = None):
         self._objects = {ns: o for ns, o in objects.items() if o is not None}
+        self.fault_plan = fault_plan
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -348,7 +496,20 @@ class RpcServer:
                     req = recv_msg(conn)
                 except TransportError:
                     return
+                rule = (self.fault_plan.decide(req.get("m", ""))
+                        if self.fault_plan is not None else None)
+                if rule is not None:
+                    if rule.kind == "drop":
+                        return                 # request lost, never dispatched
+                    if rule.kind == "delay":
+                        time.sleep(rule.delay_s)
                 reply = self._dispatch(req)
+                if rule is not None and rule.kind == "drop_reply":
+                    return                     # executed, reply lost
+                if rule is not None and rule.kind == "close_mid_chunk":
+                    with contextlib.suppress(OSError):
+                        _send_truncated(conn, reply)
+                    return
                 try:
                     send_msg(conn, reply)
                 except TransportError:
@@ -401,45 +562,112 @@ class RpcServer:
 # -- client ------------------------------------------------------------------
 class RpcClient:
     """One connection, serialized request/reply calls (thread-safe via a
-    lock — give each worker thread its own client for parallel calls)."""
+    lock — give each worker thread its own client for parallel calls).
 
-    def __init__(self, address: str, timeout: Optional[float] = None,
-                 connect_retries: int = 50, retry_delay_s: float = 0.1):
-        self.address = address
+    Failure handling (the robustness plane):
+
+    * `address` may be one endpoint, a comma-separated list, or a list —
+      a failed attempt rotates to the next endpoint, so a `ModelPoolClient`
+      handed `[replica, primary]` survives either dying.
+    * connect failures and IDEMPOTENT call failures retry under the
+      jittered-exponential-backoff `RetryPolicy` (pass `idempotent=True`
+      to `call` — the seam wrappers do for `pull_if_changed`,
+      `request_task`, `has_model`, `ping` and other pure reads).
+    * a NON-idempotent call that fails after the request was (possibly)
+      sent raises `RetryableError`: the side effect may have happened, so
+      the caller must resolve it at the protocol layer instead of the
+      transport resending blind.
+    * `abort()` (another thread) poisons the client: the in-flight call
+      wakes with TransportError and NO further retry — a heartbeat
+      monitor that declared the peer dead must not fight a 5s backoff.
+
+    `connect_retries`/`retry_delay_s` are the legacy knobs: they map onto
+    `RetryPolicy(max_attempts=connect_retries, base_s=retry_delay_s,
+    deadline_s=connect_retries * retry_delay_s)`, preserving the old
+    worst-case wait while replacing the fixed sleep with jittered
+    backoff."""
+
+    def __init__(self, address: Union[str, Iterable[str]],
+                 timeout: Optional[float] = None,
+                 connect_retries: int = 50, retry_delay_s: float = 0.1,
+                 retry: Optional[RetryPolicy] = None,
+                 seed: Optional[int] = None):
+        if isinstance(address, str):
+            self._endpoints = [a.strip() for a in address.split(",") if a.strip()]
+        else:
+            self._endpoints = list(address)
+        assert self._endpoints, "RpcClient needs at least one endpoint"
+        self._ep_i = 0
         self._timeout = timeout
-        self._retries = connect_retries
-        self._retry_delay_s = retry_delay_s
+        self._retry = retry or RetryPolicy(
+            base_s=retry_delay_s, max_attempts=max(1, connect_retries),
+            deadline_s=max(1, connect_retries) * retry_delay_s)
+        self._rng = random.Random(seed)
         self._sock: Optional[socket.socket] = None
         self._lock = threading.Lock()
+        self._aborted = False
 
-    def _connect(self) -> socket.socket:
+    @property
+    def address(self) -> str:
+        """The CURRENT endpoint (rotates on failover)."""
+        return self._endpoints[self._ep_i]
+
+    @property
+    def endpoints(self) -> Tuple[str, ...]:
+        return tuple(self._endpoints)
+
+    def _connect_once(self) -> socket.socket:
+        """One connection attempt to the current endpoint; no retries here
+        — `call` owns the retry/rotate/backoff loop."""
         if self._sock is None:
             host, port = parse_addr(self.address)
-            last: Optional[Exception] = None
-            for _ in range(max(1, self._retries)):
-                try:
-                    sock = socket.create_connection((host, port), timeout=10.0)
-                    sock.settimeout(self._timeout)
-                    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-                    self._sock = sock
-                    break
-                except OSError as e:             # server may still be binding
-                    last = e
-                    threading.Event().wait(self._retry_delay_s)
-            else:
+            try:
+                sock = socket.create_connection((host, port), timeout=10.0)
+            except OSError as e:
                 raise TransportError(
-                    f"cannot connect to {self.address}: {last}") from last
+                    f"cannot connect to {self.address}: {e}") from e
+            sock.settimeout(self._timeout)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._sock = sock
         return self._sock
 
-    def call(self, method: str, *args, **kwargs):
+    def _rotate(self) -> None:
+        if len(self._endpoints) > 1:
+            self._ep_i = (self._ep_i + 1) % len(self._endpoints)
+
+    def call(self, method: str, *args, idempotent: bool = False, **kwargs):
         with self._lock:
-            sock = self._connect()
-            try:
-                send_msg(sock, {"m": method, "a": list(args), "k": kwargs})
-                reply = recv_msg(sock)
-            except TransportError:
-                self.close_locked()
-                raise
+            delays = self._retry.delays(self._rng)
+            last: Optional[TransportError] = None
+            while True:
+                if self._aborted:
+                    raise last or TransportError(
+                        f"client for {self.address} was aborted")
+                sent = False
+                try:
+                    sock = self._connect_once()
+                    sent = True          # bytes may hit the wire from here on
+                    send_msg(sock, {"m": method, "a": list(args), "k": kwargs})
+                    reply = recv_msg(sock)
+                    break
+                except TransportError as e:
+                    self.close_locked()
+                    last = e
+                    if self._aborted:
+                        raise
+                    if sent and not idempotent:
+                        raise RetryableError(
+                            f"{method} may or may not have executed on "
+                            f"{self.address}: {e}") from e
+                    try:
+                        delay = next(delays)
+                    except StopIteration:
+                        raise TransportError(
+                            f"cannot reach any of {self._endpoints} "
+                            f"for {method}: {last}") from last
+                    self._rotate()
+                    if delay > 0:
+                        time.sleep(delay)
         if "err" in reply:
             raise RemoteError(reply["err"], reply.get("tb", ""))
         return reply["ok"]
@@ -456,8 +684,10 @@ class RpcClient:
     def abort(self) -> None:
         """Force-close from ANOTHER thread: `shutdown` wakes a caller
         blocked inside `recv` (it raises TransportError there), which a
-        plain `close` does not on Linux. Deliberately lock-free — the
-        blocked caller is holding the lock."""
+        plain `close` does not on Linux. Poisons the client against
+        further retries. Deliberately lock-free — the blocked caller is
+        holding the lock."""
+        self._aborted = True
         sock = self._sock
         if sock is not None:
             try:
@@ -471,7 +701,9 @@ class RpcClient:
 
 
 class _NamespaceClient:
-    """Shared plumbing: bind an RpcClient (or address) to one namespace."""
+    """Shared plumbing: bind an RpcClient (or address/endpoint-list) to
+    one namespace. `_get` marks the call idempotent — safe to resend with
+    backoff and to fail over across endpoints."""
 
     def __init__(self, client, ns: str):
         self._c = client if isinstance(client, RpcClient) else RpcClient(client)
@@ -479,6 +711,19 @@ class _NamespaceClient:
 
     def _call(self, name: str, *args, **kwargs):
         return self._c.call(f"{self._ns}.{name}", *args, **kwargs)
+
+    def _get(self, name: str, *args, **kwargs):
+        return self._c.call(f"{self._ns}.{name}", *args, idempotent=True,
+                            **kwargs)
+
+    def ping(self) -> bool:
+        """Idempotent liveness probe against the namespace's server; True
+        when any method on it answers (the remote `ping` if it exists)."""
+        try:
+            self._get("ping")
+        except RemoteError:
+            pass                       # server is up, ns just has no ping
+        return True
 
     def close(self) -> None:
         self._c.close()
@@ -505,13 +750,37 @@ class ModelPoolClient(_NamespaceClient):
     that does cross the wire lands in fresh buffers, so corruption by a
     remote writer remains impossible by construction."""
 
-    def __init__(self, client, ns: str = "pool"):
+    def __init__(self, client, ns: str = "pool", write_client=None):
         super().__init__(client, ns)
         # the cache logic itself lives in CachedPuller (it drives our raw
         # pull_if_changed below); this class only adds the lock and the
         # copy-on-request semantics
         self._puller = CachedPuller(self)
         self._cache_lock = threading.Lock()
+        # reads may fail over across replicas (`client` can be an endpoint
+        # list), but WRITES must land on the primary: a separate pinned
+        # connection when the read path is replicated
+        self._w = (write_client if (write_client is None or
+                                    isinstance(write_client, RpcClient))
+                   else RpcClient(write_client))
+
+    def _write(self, name: str, *args, **kwargs):
+        if self._w is not None:
+            return self._w.call(f"{self._ns}.{name}", *args, **kwargs)
+        return self._call(name, *args, **kwargs)
+
+    def _read(self, name: str, *args, **kwargs):
+        """Keyed read with replica-lag fallback: a replica that hasn't
+        synced a freshly-minted key yet answers `RemoteError(KeyError)`
+        — the server is alive, so endpoint failover never triggers.
+        When a pinned primary exists, retry the read there; the primary
+        minted the key, so it always has it."""
+        try:
+            return self._get(name, *args, **kwargs)
+        except RemoteError as e:
+            if self._w is None or not str(e).startswith("KeyError"):
+                raise
+            return self._w.call(f"{self._ns}.{name}", *args, **kwargs)
 
     def pull(self, key: ModelKey, copy: Optional[bool] = None):
         with self._cache_lock:
@@ -540,34 +809,44 @@ class ModelPoolClient(_NamespaceClient):
         addressing: leaves the caller already holds (under any key) come
         back as hash references instead of bytes."""
         if have_hashes is None:
-            return self._call("pull_if_changed", key, have_version)
-        return self._call("pull_if_changed", key, have_version,
+            return self._read("pull_if_changed", key, have_version)
+        return self._read("pull_if_changed", key, have_version,
                           have_hashes=sorted(have_hashes))
 
     def manifest(self, key: ModelKey) -> ParamManifest:
-        return self._call("manifest", key)
+        return self._read("manifest", key)
 
     def version(self, key: ModelKey) -> int:
-        return self._call("version", key)
+        return self._read("version", key)
 
     def push(self, key: ModelKey, params, step: int = 0) -> None:
-        self._call("push", key, params, step=step)
+        self._write("push", key, params, step=step)
 
     def pull_attr(self, key: ModelKey) -> dict:
-        return self._call("pull_attr", key)
+        return self._read("pull_attr", key)
 
     def freeze(self, key: ModelKey) -> None:
-        self._call("freeze", key)
+        self._write("freeze", key)
 
     def keys(self):
-        return self._call("keys")
+        return self._get("keys")
 
     def __contains__(self, key: ModelKey) -> bool:
         return key in self.keys()
 
     @property
     def membership_version(self) -> int:
-        return self._call("membership_version")
+        return self._get("membership_version")
+
+    def close(self) -> None:
+        super().close()
+        if self._w is not None:
+            self._w.close()
+
+    def abort(self) -> None:
+        super().abort()
+        if self._w is not None:
+            self._w.abort()
 
 
 class LeagueMgrClient(_NamespaceClient):
@@ -578,24 +857,40 @@ class LeagueMgrClient(_NamespaceClient):
     against the in-process LeagueMgr (`league.model_pool.pull(...)`) runs
     unchanged against the remote one."""
 
-    def __init__(self, client, ns: str = "league", pool_ns: str = "pool"):
+    def __init__(self, client, ns: str = "league", pool_ns: str = "pool",
+                 pool_endpoints: Optional[Union[str, Iterable[str]]] = None):
         super().__init__(client, ns)
-        self.model_pool = ModelPoolClient(self._c, ns=pool_ns)
+        if pool_endpoints:
+            # replicated read path: pulls fail over across the endpoint
+            # list; writes (push/freeze) stay pinned to the coordinator's
+            # authoritative pool over this client's own connection
+            self.model_pool = ModelPoolClient(
+                RpcClient(pool_endpoints), ns=pool_ns, write_client=self._c)
+        else:
+            self.model_pool = ModelPoolClient(self._c, ns=pool_ns)
 
-    def request_task(self, agent_id: str = "main") -> Task:
-        return self._call("request_task", agent_id)
+    def request_task(self, agent_id: str = "main",
+                     actor_id: Optional[str] = None) -> Task:
+        # idempotent by lease design: a duplicate issue is just an extra
+        # lease the reaper collects once its TTL lapses
+        if actor_id is None:
+            return self._get("request_task", agent_id)
+        return self._get("request_task", agent_id, actor_id=actor_id)
 
     def request_learner_task(self, agent_id: str = "main") -> Task:
-        return self._call("request_learner_task", agent_id)
+        return self._get("request_learner_task", agent_id)
 
     def report_result(self, result: MatchResult) -> None:
+        # NOT idempotent: double-recording an outcome skews the payoff
+        # matrix — an ambiguous failure surfaces as RetryableError and the
+        # lease generation guard makes the caller's choice safe either way
         self._call("report_result", result)
 
     def pool_winrate(self, agent_id: str) -> Tuple[float, float]:
-        return tuple(self._call("pool_winrate", agent_id))
+        return tuple(self._get("pool_winrate", agent_id))
 
     def should_freeze(self, agent_id: str, steps: int) -> Optional[str]:
-        return self._call("should_freeze", agent_id, steps)
+        return self._get("should_freeze", agent_id, steps)
 
     def end_learning_period(self, agent_id: str, params,
                             reason: str = "period") -> ModelKey:
@@ -603,11 +898,14 @@ class LeagueMgrClient(_NamespaceClient):
                           reason=reason)
 
     def league_state(self) -> dict:
-        return self._call("league_state")
+        return self._get("league_state")
+
+    def lease_state(self) -> dict:
+        return self._get("lease_state")
 
     @property
     def frozen_pool(self):
-        return list(self._call("frozen_pool"))
+        return list(self._get("frozen_pool"))
 
     @property
     def agents(self):
@@ -619,13 +917,21 @@ class LeagueMgrClient(_NamespaceClient):
         trigger on every published step."""
         return _RemoteAgents(self)
 
+    def close(self) -> None:
+        self.model_pool.close()      # may own a separate replica connection
+        super().close()
+
+    def abort(self) -> None:
+        self.model_pool.abort()
+        super().abort()
+
 
 class _RemoteAgents:
     def __init__(self, league: "LeagueMgrClient"):
         self._league = league
 
     def __getitem__(self, agent_id: str) -> SimpleNamespace:
-        key = self._league._call("current_model_key", agent_id)
+        key = self._league._get("current_model_key", agent_id)
         return SimpleNamespace(current=key)
 
 
@@ -735,7 +1041,7 @@ class InfServerClient(_NamespaceClient):
         return RemoteTicket(tid, model, obs.shape[0], self)
 
     def poll(self, tid) -> bool:
-        return self._call("poll", int(tid))
+        return self._get("poll", int(tid))
 
     def get(self, ticket):
         return tuple(self._call("get", int(ticket)))
@@ -750,8 +1056,8 @@ class InfServerClient(_NamespaceClient):
         `has_model` probe runs first and the params are NOT shipped when
         the server already hosts that exact content — the common case
         for every actor but the first to refresh a route."""
-        if content_hash is not None and self._call("has_model", key,
-                                                   content_hash):
+        if content_hash is not None and self._get("has_model", key,
+                                                  content_hash):
             return
         self._call("update_params", params, key=key,
                    content_hash=content_hash, version=version)
@@ -760,8 +1066,8 @@ class InfServerClient(_NamespaceClient):
                      content_hash: Optional[str] = None) -> None:
         """Idempotent route setup; with a `content_hash` the params only
         cross the wire when the route is absent or stale."""
-        if content_hash is not None and self._call("has_model", key,
-                                                   content_hash):
+        if content_hash is not None and self._get("has_model", key,
+                                                  content_hash):
             return
         self._call("ensure_model", key, params, content_hash=content_hash)
 
@@ -773,13 +1079,13 @@ class InfServerClient(_NamespaceClient):
 
     def has_model(self, key: Hashable,
                   content_hash: Optional[str] = None) -> bool:
-        return self._call("has_model", key, content_hash)
+        return self._get("has_model", key, content_hash)
 
     def evict_model(self, key: Hashable) -> bool:
         return self._call("evict_model", key)
 
     def stats(self) -> dict:
-        return self._call("stats")
+        return self._get("stats")
 
 
 class DataServerClient(_NamespaceClient):
@@ -803,10 +1109,10 @@ class DataServerClient(_NamespaceClient):
         return self._call("wait_ready", timeout=timeout)
 
     def ready(self) -> bool:
-        return self._call("ready")
+        return self._get("ready")
 
     def throughput(self) -> dict:
-        return self._call("throughput")
+        return self._get("throughput")
 
     def last_sample_info(self):
         return self._call("last_sample_info")
@@ -821,13 +1127,16 @@ class DataServerClient(_NamespaceClient):
 
 # -- one-call league server ---------------------------------------------------
 def serve_league(league, inf_server=None, *, extra: Optional[Dict[str, Any]] = None,
-                 host: str = "127.0.0.1", port: int = 0) -> RpcServer:
+                 host: str = "127.0.0.1", port: int = 0,
+                 fault_plan: Optional[FaultPlan] = None) -> RpcServer:
     """Put a LeagueMgr (namespace `league`), its ModelPool (`pool`) and
     optionally an InfServer (`inf`, ticket ids over the wire) behind one
     started RpcServer. `extra` adds more namespaces (the multiprocess
-    driver's `ctrl` plane). Close the returned server to tear down."""
+    driver's `ctrl` plane). `fault_plan` arms the chaos harness on every
+    namespace. Close the returned server to tear down."""
     objects: Dict[str, Any] = {"league": league, "pool": league.model_pool}
     if inf_server is not None:
         objects["inf"] = InfServerBackend(inf_server)
     objects.update(extra or {})
-    return RpcServer(objects, host=host, port=port).start()
+    return RpcServer(objects, host=host, port=port,
+                     fault_plan=fault_plan).start()

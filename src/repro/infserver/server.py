@@ -10,7 +10,10 @@ server inference beats per-actor forwards.
 Design (this repo's data-plane rebuild):
 
 * **Ticket futures** — `submit` returns a `Ticket` with `done()`/`result()`;
-  the integer id keeps the legacy `get(ticket)` protocol working.
+  the integer id keeps the legacy `get(ticket)` protocol working. Results
+  whose owner never collects them (a client killed between submit and
+  get) are expired after `ticket_ttl_flushes` flushes so dead actors
+  can't leak result arrays into the server's lifetime.
 * **Bounded request queue** — pending rows are capped; hitting `max_batch`
   queued rows triggers a flush (the in-process form of backpressure).
 * **Multi-model routing** — one server hosts the learner θ plus several
@@ -81,11 +84,19 @@ class Ticket:
 
 class InfServer:
     def __init__(self, cfg, num_actions: int, params=None, *, max_batch: int = 256,
-                 seed: int = 0, mesh=None):
+                 seed: int = 0, mesh=None, ticket_ttl_flushes: int = 512):
         """`mesh` switches on sharded execution: every hosted model is laid
         out over the mesh with the serving shardings (TP over 'model', no
         FSDP) and flush batches ride the mesh data-parallel. `mesh=None`
-        keeps the single-device path bit-for-bit unchanged."""
+        keeps the single-device path bit-for-bit unchanged.
+
+        `ticket_ttl_flushes` bounds result retention: a resolved ticket
+        whose owner hasn't collected it within that many subsequent
+        flushes is expired (its result arrays freed, `tickets_expired`
+        bumped). This is the leak guard for dead clients — an actor that
+        is killed between submit and get would otherwise pin its result
+        rows for the server's lifetime (`discard` only helps clients
+        that die politely)."""
         self.cfg = cfg
         self.policy = make_obs_policy(cfg, num_actions)
         self.max_batch = max_batch
@@ -119,6 +130,10 @@ class InfServer:
         self._pending: List[Tuple[int, Hashable, np.ndarray]] = []
         self._pending_rows = 0
         self._results: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+        # tid -> batches_run at resolution; drives dead-owner expiry
+        self._result_born: Dict[int, int] = {}
+        self.ticket_ttl_flushes = ticket_ttl_flushes
+        self.tickets_expired = 0
         self._next_id = 0
         # forwards: single-model fast path + vmap-over-models grouped path
         self._act = jax.jit(self.policy.act)
@@ -328,6 +343,16 @@ class InfServer:
             self.last_batch_models = len(groups)
             self.last_batch_latency_s = time.perf_counter() - t0
             self._latency_sum += self.last_batch_latency_s
+            # dead-owner expiry: results nobody collected within the TTL
+            # window are leaked by a crashed client — free them now
+            # strict >: a result born in THIS flush (born == batches_run - 1)
+            # must survive the full TTL window before it can be reclaimed
+            expired = [tid for tid, born in self._result_born.items()
+                       if self.batches_run - born > self.ticket_ttl_flushes]
+            for tid in expired:
+                self._results.pop(tid, None)
+                self._result_born.pop(tid, None)
+                self.tickets_expired += 1
 
     def _next_rng(self, n: int = 1):
         self.rng, *ks = jax.random.split(self.rng, n + 1)
@@ -394,6 +419,7 @@ class InfServer:
         for t, n in zip(tickets, sizes):
             self._results[t] = (a[ofs:ofs + n], logp[ofs:ofs + n],
                                 v[ofs:ofs + n])
+            self._result_born[t] = self.batches_run
             ofs += n
 
     def get(self, ticket) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -406,6 +432,7 @@ class InfServer:
         with self._lock:
             if tid not in self._results:
                 self.flush()
+            self._result_born.pop(tid, None)
             return self._results.pop(tid)
 
     def discard(self, ticket) -> None:
@@ -417,6 +444,7 @@ class InfServer:
         tid = ticket.tid if isinstance(ticket, Ticket) else int(ticket)
         with self._lock:
             self._results.pop(tid, None)
+            self._result_born.pop(tid, None)
             kept = [(t, k, o) for t, k, o in self._pending if t != tid]
             if len(kept) != len(self._pending):
                 self._pending_rows -= sum(o.shape[0] for t, k, o
@@ -440,6 +468,8 @@ class InfServer:
             "swap_stale_drops": self.swap_stale_drops,
             "models_hosted": len(self._models),
             "queue_depth": self.queue_depth,
+            "results_held": len(self._results),
+            "tickets_expired": self.tickets_expired,
             "sharded": self.mesh is not None,
             "mesh_shape": (dict(self.mesh.shape)
                            if self.mesh is not None else None),

@@ -42,15 +42,26 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.distributed.heartbeat import Heartbeat, HeartbeatMonitor
-from repro.distributed.transport import (DataServerClient, InfServerClient,
-                                         LeagueMgrClient, RpcClient,
-                                         RpcServer, TransportError,
+from repro.distributed.heartbeat import (BeatRegistry, Heartbeat,
+                                         HeartbeatMonitor)
+from repro.distributed.transport import (DataServerClient, FaultPlan,
+                                         InfServerClient, LeagueMgrClient,
+                                         ModelPoolClient, RetryableError,
+                                         RpcClient, RpcServer, TransportError,
                                          serve_league)
 
 _POLL_S = 0.05
 _HEARTBEAT_INTERVAL_S = 1.0
 DEFAULT_HEARTBEAT_TIMEOUT_S = 30.0
+# lease plane defaults: an actor that neither finishes a segment nor beats
+# the ctrl plane for ACTOR_STALE_S is presumed dead and its lease reaped;
+# the TTL itself is the backstop for actors that never identified themselves
+DEFAULT_LEASE_TTL_S = 30.0
+DEFAULT_ACTOR_STALE_S = 10.0
+_REAP_INTERVAL_S = 1.0
+# in-process restart budget for crashed actor children (run_multiprocess);
+# mirrored into the k8s renderer's backoff annotations
+DEFAULT_ACTOR_RESTARTS = 2
 
 
 class Ctrl:
@@ -72,6 +83,7 @@ class Ctrl:
         self._segments: Dict[str, int] = {}
         self._frames: Dict[str, int] = {}
         self.heartbeat = Heartbeat()
+        self.beats = BeatRegistry()     # per-actor liveness (lease reaper feed)
 
     # -- liveness -----------------------------------------------------------
     def ping(self) -> int:
@@ -104,9 +116,17 @@ class Ctrl:
             self._steps[role] = steps
 
     def report_actor(self, actor_id: str, segments: int, frames: int) -> None:
+        self.beats.beat(actor_id)       # a progress report IS a liveness beat
         with self._lock:
             self._segments[actor_id] = segments
             self._frames[actor_id] = frames
+
+    def actor_beat(self, actor_id: str) -> int:
+        """Explicit liveness beat: actors call this while waiting out
+        DataServer backpressure, when segment completion (and therefore
+        `report_actor`) can stall arbitrarily long on a slow learner —
+        a backpressured actor must not look dead to the lease reaper."""
+        return self.beats.beat(actor_id)
 
     def progress(self) -> dict:
         with self._lock:
@@ -196,6 +216,9 @@ def run_coordinator(spec, *, env_name: str = "rps",
                     pbt: bool = False, bind: str = "127.0.0.1:0",
                     max_seconds: Optional[float] = None,
                     max_steps_per_role: Optional[int] = None,
+                    lease_ttl_s: Optional[float] = DEFAULT_LEASE_TTL_S,
+                    actor_stale_s: float = DEFAULT_ACTOR_STALE_S,
+                    fault_plan: Optional[FaultPlan] = None,
                     on_bound=None, verbose: bool = True) -> dict:
     """Host the league services and run the stop-condition loop. Blocks
     until `max_seconds` elapses or every role's learner reported
@@ -204,7 +227,14 @@ def run_coordinator(spec, *, env_name: str = "rps",
 
     With NO stop condition the coordinator serves until something calls
     `ctrl.stop` over RPC (or the process is killed) — the k8s Deployment
-    semantics, where the pod's lifetime is the run's lifetime."""
+    semantics, where the pod's lifetime is the run's lifetime.
+
+    Liveness: a reaper thread classifies actors by their ctrl-plane beat
+    age (`actor_stale_s`), extends the leases of live ones, and reaps the
+    leases of stale/silent ones (`lease_ttl_s`; None disables the lease
+    plane entirely). `fault_plan` (or the REPRO_FAULT_PLAN env var — the
+    chaos smoke's cross-process seam) arms seeded fault injection on the
+    serving socket."""
     import jax
 
     from repro.configs import get_arch
@@ -219,7 +249,7 @@ def run_coordinator(spec, *, env_name: str = "rps",
     rng = jax.random.PRNGKey(seed)
     league = install_roles(
         spec, lambda i: init_params(jax.random.fold_in(rng, i), cfg),
-        pbt=pbt, seed=seed)
+        pbt=pbt, seed=seed, lease_ttl_s=lease_ttl_s)
     inf_server = None
     if served:
         inf_server = InfServer(cfg, env.spec.num_actions, seed=seed + 7919,
@@ -229,9 +259,31 @@ def run_coordinator(spec, *, env_name: str = "rps",
     # the beater thread is the liveness signal: it advances even when the
     # stop-condition loop below is busy, and stops only with the process
     ctrl.heartbeat.start_beating(_HEARTBEAT_INTERVAL_S)
+    if fault_plan is None:
+        fault_plan = FaultPlan.from_env()
+        if fault_plan is not None and verbose:
+            print(f"[coordinator] fault plan armed: {fault_plan.to_json()}",
+                  flush=True)
     host, port = parse_addr(bind)
     server = serve_league(league, inf_server, extra={"ctrl": ctrl},
-                          host=host, port=port)
+                          host=host, port=port, fault_plan=fault_plan)
+    reaper_stop = threading.Event()
+
+    def _reap_loop():
+        while not reaper_stop.wait(_REAP_INTERVAL_S):
+            alive, stale = ctrl.beats.split(actor_stale_s)
+            for actor_id in alive:
+                league.touch_actor(actor_id)
+            reaped = league.reap_leases(dead_actors=stale)
+            if reaped and verbose:
+                print(f"[coordinator] reaped {len(reaped)} lease(s) "
+                      f"(stale actors: {stale})", flush=True)
+
+    reaper = None
+    if lease_ttl_s is not None:
+        reaper = threading.Thread(target=_reap_loop, name="lease-reaper",
+                                  daemon=True)
+        reaper.start()
     if inf_server is not None:
         ctrl.register_endpoint("inf/shared", _advertised(server.address))
     if on_bound is not None:
@@ -256,14 +308,21 @@ def run_coordinator(spec, *, env_name: str = "rps",
             "wall_s": round(time.monotonic() - t0, 3),
             "progress": ctrl.progress(),
             "league": league.league_state(),
+            "leases": league.lease_state(),
+            "faults": fault_plan.stats() if fault_plan is not None else None,
             "serving": inf_server.stats() if inf_server is not None else None,
         }
         if verbose:
             print(f"[coordinator] done: {json.dumps(report['progress'])}",
                   flush=True)
+            print(f"[coordinator] leases: {json.dumps(report['leases'])}",
+                  flush=True)
         return report
     finally:
         ctrl.stop()
+        reaper_stop.set()
+        if reaper is not None:
+            reaper.join(timeout=5.0)
         ctrl.heartbeat.stop_beating()
         server.close()
 
@@ -276,6 +335,7 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
                 data_bind: str = "127.0.0.1:0",
                 advertise: Optional[str] = None,
                 heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
+                pool_endpoints: Optional[str] = None,
                 verbose: bool = True) -> dict:
     """One role's Learner as a process: local DataServer (served to the
     role's actors over RPC), remote league protocol for everything else.
@@ -283,7 +343,9 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
     under k8s that is the learner's Service DNS name, which stays stable
     across pod restarts. A `HeartbeatMonitor` watches the coordinator:
     `heartbeat_timeout_s` without a beat advance and this process shuts
-    down cleanly instead of blocking forever on a wedged socket."""
+    down cleanly instead of blocking forever on a wedged socket.
+    `pool_endpoints` (comma list) replicates the pool READ path across
+    those endpoints; pushes stay pinned to the coordinator's pool."""
     from repro.configs import get_arch
     from repro.distributed.transport import parse_addr
     from repro.envs import make_env
@@ -292,7 +354,7 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
 
     env = make_env(env_name)
     cfg = get_arch(arch)
-    league = LeagueMgrClient(connect)
+    league = LeagueMgrClient(connect, pool_endpoints=pool_endpoints)
     ctrl = _ctrl_client(connect)
     ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
     coord_dead = threading.Event()
@@ -359,22 +421,32 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
               num_envs: int = 8, unroll_len: int = 8, seed: int = 0,
               served: bool = False,
               heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
+              pool_endpoints: Optional[str] = None,
               verbose: bool = True) -> dict:
     """One Actor as a process: remote task/result protocol, remote
     DataServer put (with cross-process backpressure), and optionally the
     shared serving mesh for every policy forward. A `HeartbeatMonitor`
-    watches the coordinator (see `run_learner`)."""
+    watches the coordinator (see `run_learner`).
+
+    Robustness: the actor names itself on every `request_task` so the
+    coordinator can lease-track it, beats the ctrl plane while waiting
+    out backpressure (a backpressured actor is slow, not dead), pulls
+    params with failover across `pool_endpoints` when given, and treats
+    an ambiguous segment ship (`RetryableError`) as a dropped segment —
+    trajectory frames are data, losing one is cheaper than double-feeding
+    the ring."""
     from repro.actors import Actor
     from repro.configs import get_arch
     from repro.envs import make_env
 
     env = make_env(env_name)
     cfg = get_arch(arch)
-    league = LeagueMgrClient(connect)
+    league = LeagueMgrClient(connect, pool_endpoints=pool_endpoints)
     ctrl = _ctrl_client(connect)
     ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
     actor_id = f"{role_name}/{actor_index}"
     segments = 0
+    segments_dropped = 0
     coord_dead = threading.Event()
     clients = [ctrl, league]
     monitor = _start_monitor(connect, heartbeat_timeout_s, coord_dead, clients)
@@ -387,7 +459,8 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
             clients.append(inf)
         actor = Actor(env, cfg, league, agent_id=role_name, num_envs=num_envs,
                       unroll_len=unroll_len,
-                      seed=seed * 1000 + actor_index, inf_server=inf)
+                      seed=seed * 1000 + actor_index, inf_server=inf,
+                      actor_id=actor_id)
         while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
             traj, _task = actor.run_segment()
             # backpressure: the server blocks on the ring condition for the
@@ -396,8 +469,17 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
             # would re-serialize the full pytree 20x/s exactly when the
             # learner is already the bottleneck
             while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
-                if data.put_when_room(traj, timeout=2.0):
-                    segments += 1
+                ctrl.call("ctrl.actor_beat", actor_id)  # slow != dead
+                try:
+                    if data.put_when_room(traj, timeout=2.0):
+                        segments += 1
+                        break
+                except RetryableError:
+                    # the learner may or may not have taken the segment (a
+                    # restarting learner pod, a dropped reply): frames are
+                    # data, not protocol state — drop it and move on rather
+                    # than risk feeding the ring twice
+                    segments_dropped += 1
                     break
             ctrl.call("ctrl.report_actor", actor_id, segments,
                       actor.frames_produced)
@@ -417,9 +499,10 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
     finally:
         monitor.stop()
     if verbose:
-        print(f"[actor/{actor_id}] {segments} segments, "
-              f"{frames} frames", flush=True)
-    return {"actor": actor_id, "segments": segments, "frames": frames,
+        print(f"[actor/{actor_id}] {segments} segments "
+              f"({segments_dropped} dropped), {frames} frames", flush=True)
+    return {"actor": actor_id, "segments": segments,
+            "segments_dropped": segments_dropped, "frames": frames,
             "heartbeat_dead": coord_dead.is_set()}
 
 
@@ -471,6 +554,62 @@ def run_infserver(connect: str, *, env_name: str = "rps",
     return server.stats()
 
 
+# -- pool read replica --------------------------------------------------------
+def run_pool_replica(connect: str, *, replica_index: int = 0,
+                     sync_interval_s: float = 0.5,
+                     bind: str = "127.0.0.1:0",
+                     advertise: Optional[str] = None,
+                     heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
+                     verbose: bool = True) -> dict:
+    """A ModelPool READ replica as a process — the paper's M_M pool
+    instances. Follows the coordinator's authoritative pool over the
+    manifest/delta protocol (an unchanged key per sync cycle costs one
+    NotModified tag) and serves the read half of the pool protocol under
+    the `pool` namespace, so actors pointed here via `--pool-endpoints`
+    keep pulling through a primary-pool outage. Writes are refused —
+    learners push to the coordinator. Registers as
+    `pool/replica/<index>`; `advertise` overrides the published address
+    (the k8s Service name for replicated Deployments)."""
+    from repro.core.model_pool import ModelPoolReplica
+    from repro.distributed.transport import parse_addr
+
+    primary = ModelPoolClient(RpcClient(connect))
+    ctrl = _ctrl_client(connect)
+    ctrl.call("ctrl.should_stop")    # probe: a bad endpoint fails loudly here
+    coord_dead = threading.Event()
+    monitor = _start_monitor(connect, heartbeat_timeout_s, coord_dead,
+                             [ctrl, primary])
+    replica = ModelPoolReplica(primary, sync_interval_s=sync_interval_s)
+    host, port = parse_addr(bind)
+    srv = RpcServer({"pool": replica}, host=host, port=port).start()
+    try:
+        # first catch-up BEFORE advertising: by the time the endpoint is
+        # discoverable the replica already serves the current pool
+        try:
+            replica.sync_once()
+        except Exception:                # noqa: BLE001 — follower retries
+            pass
+        replica.start_following()
+        ctrl.call("ctrl.register_endpoint", f"pool/replica/{replica_index}",
+                  advertise or _advertised(srv.address))
+        if verbose:
+            print(f"[pool-replica/{replica_index}] serving pool replica at "
+                  f"{srv.address} ({len(replica.keys())} keys)", flush=True)
+        while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
+            time.sleep(_POLL_S)
+    except TransportError:
+        if verbose:
+            print(f"[pool-replica/{replica_index}] coordinator gone; "
+                  "shutting down", flush=True)
+    finally:
+        monitor.stop()
+        replica.stop()
+        srv.close()
+    stats = dict(replica.sync_stats)
+    stats["heartbeat_dead"] = coord_dead.is_set()
+    return stats
+
+
 # -- one-command multiprocess launch ------------------------------------------
 def _spawn_role(role: str, connect: str, extra: List[str],
                 env_overrides: Optional[Dict[str, str]] = None) -> subprocess.Popen:
@@ -492,11 +631,19 @@ def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
                      max_seconds: Optional[float] = None,
                      max_steps_per_role: Optional[int] = None,
                      heartbeat_timeout_s: float = DEFAULT_HEARTBEAT_TIMEOUT_S,
+                     max_actor_restarts: int = DEFAULT_ACTOR_RESTARTS,
                      verbose: bool = True) -> dict:
     """`train.py --workers N`: this process becomes the coordinator; one
     learner process per role plus `workers` actor processes (round-robin
     over roles, min one each) are spawned as `--role` children. Returns
-    the coordinator report with per-child exit codes merged in."""
+    the coordinator report with per-child exit codes merged in.
+
+    Actor supervision: a crashed actor child (nonzero exit while the run
+    is live) is respawned with the same CLI up to `max_actor_restarts`
+    times per slot — the respawn starts clean, requests a fresh task
+    (fresh lease), and the reaper has already re-issued whatever the dead
+    actor held. Learners are NOT respawned here (their in-memory
+    optimizer state is the run); k8s restartPolicy owns that layer."""
     assert workers >= 1, "--workers needs at least one actor process"
     assert max_seconds is not None or max_steps_per_role is not None, \
         "--workers needs a stop condition (--max-seconds / --max-steps)"
@@ -532,23 +679,53 @@ def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
               "--heartbeat-timeout", str(heartbeat_timeout_s)]
     if served:
         common.append("--served")
-    children: List[subprocess.Popen] = []
+    # children as supervision records: actors carry their spawn args so a
+    # crashed one can be relaunched; learners get restarts=None (never
+    # respawned — their in-memory optimizer state IS the run)
+    children: List[Dict[str, object]] = []
     for role in spec:
-        children.append(_spawn_role(
-            "learner", address, common + ["--league-role", role.name]))
+        args = common + ["--league-role", role.name]
+        children.append({"proc": _spawn_role("learner", address, args),
+                         "role": "learner", "args": args, "restarts": None})
     role_names = [r.name for r in spec]
     for w in range(workers):
         role = role_names[w % len(role_names)]
-        children.append(_spawn_role(
-            "actor", address,
-            common + ["--league-role", role, "--actor-index", str(w)]))
+        args = common + ["--league-role", role, "--actor-index", str(w)]
+        children.append({"proc": _spawn_role("actor", address, args),
+                         "role": "actor", "args": args, "restarts": 0})
 
+    def _run_stopping() -> bool:
+        """True when the coordinator has raised (or lost) its stop flag —
+        crashes during shutdown are expected, don't respawn into them."""
+        try:
+            return bool(RpcClient(address, connect_retries=1)
+                        .call("ctrl.should_stop"))
+        except TransportError:
+            return True
+
+    actor_restarts = 0
     # the coordinator loop owns the stop condition — but if every child
     # died (e.g. crashed on startup) a step-quota coordinator would wait
     # forever, so raise its ctrl stop flag through its own RPC socket
     while coord.is_alive():
         coord.join(timeout=1.0)
-        if coord.is_alive() and all(c.poll() is not None for c in children):
+        if not coord.is_alive():
+            break
+        for rec in children:
+            proc: subprocess.Popen = rec["proc"]           # type: ignore[assignment]
+            if (rec["restarts"] is None or proc.poll() is None
+                    or proc.returncode == 0):
+                continue                   # learner / running / clean exit
+            if rec["restarts"] >= max_actor_restarts or _run_stopping():  # type: ignore[operator]
+                continue
+            rec["restarts"] = int(rec["restarts"]) + 1     # type: ignore[arg-type]
+            actor_restarts += 1
+            if verbose:
+                print(f"[supervisor] actor exited {proc.returncode}; "
+                      f"respawn {rec['restarts']}/{max_actor_restarts} "
+                      f"({' '.join(rec['args'][-2:])})", flush=True)  # type: ignore[index]
+            rec["proc"] = _spawn_role("actor", address, list(rec["args"]))  # type: ignore[arg-type]
+        if all(r["proc"].poll() is not None for r in children):  # type: ignore[union-attr]
             try:
                 RpcClient(address, connect_retries=1).call("ctrl.stop")
             except TransportError:
@@ -557,7 +734,8 @@ def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
             break
     deadline = time.monotonic() + 30.0
     exit_codes = []
-    for c in children:
+    for rec in children:
+        c: subprocess.Popen = rec["proc"]                  # type: ignore[assignment]
         try:
             exit_codes.append(c.wait(
                 timeout=max(0.1, deadline - time.monotonic())))
@@ -570,5 +748,6 @@ def run_multiprocess(spec, *, workers: int, env_name: str = "rps",
         raise RuntimeError("coordinator crashed mid-run") from ctrl_box["error"]  # type: ignore[arg-type]
     report = dict(ctrl_box.get("report") or {})
     report["worker_exit_codes"] = exit_codes
+    report["actor_restarts"] = actor_restarts
     report["clean_shutdown"] = all(code == 0 for code in exit_codes)
     return report

@@ -13,10 +13,13 @@ same flags a laptop run uses (README "Mesh-sharded serving +
 multiprocess league"):
 
   * coordinator: `--role coordinator --league-spec <path> [--served]`
-    — hosts LeagueMgr/ModelPool behind the RPC transport
-    (`repro.distributed.transport`); the ModelPool has no separate
-    Deployment because it lives inside the coordinator process (the
-    paper's M_M replicas collapse into its in-memory store).
+    — hosts LeagueMgr + the AUTHORITATIVE ModelPool behind the RPC
+    transport (`repro.distributed.transport`); all writes land here.
+  * pool-replica: `--role pool-replica` — the paper's M_M ModelPool
+    read replicas as their own Deployment: each follows the
+    coordinator's pool via hash-gated delta pulls and serves the read
+    protocol; actors pull through the replica Service first and fail
+    over to the coordinator (`--pool-endpoints`).
   * learner:     `--role learner --league-role <role>` — finds the
     coordinator via the injected `LEAGUE_MGR_EP` env var.
   * actor:       `--role actor --league-role <role> [--served]`.
@@ -43,6 +46,13 @@ from __future__ import annotations
 
 import argparse
 
+# the rendered restart-budget annotations mirror the in-process values so
+# the two supervision layers agree: kubelet's crash-loop backoff takes over
+# exactly where run_multiprocess's respawn budget and the RPC clients'
+# retry deadline leave off
+from repro.distributed.transport import RetryPolicy
+from repro.launch.distributed import DEFAULT_ACTOR_RESTARTS
+
 SERVICE_TMPL = """\
 ---
 apiVersion: v1
@@ -62,8 +72,9 @@ spec:
   replicas: {replicas}
   selector: {{matchLabels: {{app: {signature}, role: {role}}}}}
   template:
-    metadata: {{labels: {{app: {signature}, role: {role}}}}}
-    spec:
+    metadata:
+      labels: {{app: {signature}, role: {role}}}
+{annotations}    spec:
       nodeSelector: {{pool: {node_pool}}}
       containers:
       - name: {role}
@@ -114,7 +125,7 @@ _EXEC_PROBE_TMPL = """\
 
 
 def render(*, signature="tleague", image="repro:latest", learners=8,
-           inf_servers=2, actors_per_learner=16,
+           inf_servers=2, actors_per_learner=16, pool_replicas=1,
            actor_cpus=4, learner_accel="google.com/tpu: 1",
            env="pommerman_lite", arch="tleague-policy-s",
            league_spec="/config/league_spec.json", league_role="main",
@@ -130,7 +141,16 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
     endpoint). `learners` sizes the ACTOR fleet (learners ×
     actors_per_learner, the paper's co-location ratio); the learner
     Deployment itself is always replicas=1 per role — params are
-    single-writer, and M_L data parallelism is inside the pjit step."""
+    single-writer, and M_L data parallelism is inside the pjit step.
+
+    `pool_replicas` > 0 renders the paper's M_M ModelPool replica fleet:
+    a read-replica Deployment that follows the coordinator's pool via
+    hash-gated delta pulls. Actors read pool state with the replica
+    Service FIRST and the coordinator as fallback (`--pool-endpoints
+    replica,coordinator`); learners keep the coordinator first (their
+    post-freeze adopt must see the minted key immediately) with the
+    replica as fallback. Writes always land on the coordinator — the
+    client pins them regardless of the read path."""
     common = dict(signature=signature, image=image)
     base = ["--env", env, "--arch", arch]
     serve_flag = ["--served"] if served else []
@@ -143,6 +163,24 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
 
     exec_probe = _EXEC_PROBE_TMPL.format(coordinator=f"{signature}-coordinator")
 
+    # crash-loop budget annotations: kubelet's restartPolicy Always +
+    # exponential backoff picks up where the in-process layers stop, and
+    # these annotations record the handoff point so an operator reading
+    # the pod spec sees the SAME numbers the code enforces
+    pol = RetryPolicy()
+    restart_annotations = (
+        "      annotations:\n"
+        f"        repro.dev/in-process-restart-budget: \"{DEFAULT_ACTOR_RESTARTS}\"\n"
+        f"        repro.dev/rpc-retry-backoff: "
+        f"\"base={pol.base_s}s cap={pol.cap_s}s deadline={pol.deadline_s}s\"\n")
+
+    coord_ep = f"{signature}-coordinator:9003"
+    replica_ep = f"{signature}-pool-replica:9008"
+    actor_pool_eps = ([replica_ep, coord_ep] if pool_replicas > 0
+                      else None)
+    learner_pool_eps = ([coord_ep, replica_ep] if pool_replicas > 0
+                        else None)
+
     blocks = []
     # the coordinator must NOT get --served when dedicated inf-server
     # deployments exist: both would register the single `inf/shared`
@@ -154,7 +192,19 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
         module="repro.launch.train",
         args=fmt(["--role", "coordinator", "--league-spec", league_spec,
                   "--bind", "0.0.0.0:9003"] + base + coord_serve),
-        cpus=8, accel="", probes=tcp_probes(9003), **common))
+        cpus=8, accel="", probes=tcp_probes(9003), annotations="", **common))
+    if pool_replicas > 0:
+        # the M_M replica fleet: follows the coordinator's pool via delta
+        # pulls, serves the read protocol to actors; restartPolicy Always
+        # means a killed replica re-syncs and rejoins, and the actors'
+        # failover client covers the gap from the coordinator directly
+        blocks.append(SERVICE_TMPL.format(
+            role="pool-replica", port=9008, replicas=pool_replicas,
+            node_pool="cpu-highmem", module="repro.launch.train",
+            args=fmt(["--role", "pool-replica", "--bind", "0.0.0.0:9008",
+                      "--advertise", replica_ep] + base),
+            cpus=4, accel="", probes=tcp_probes(9008),
+            annotations=restart_annotations, **common))
     # ONE learner process per role: the lineage's params are single-writer
     # (see LeagueMgr.end_learning_period) — M_L-way data parallelism lives
     # INSIDE the learner's pjit'd train step over its node's mesh, not in
@@ -164,9 +214,11 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
         module="repro.launch.train",
         args=fmt(["--role", "learner", "--league-role", league_role,
                   "--lr", str(lr), "--bind", "0.0.0.0:9005",
-                  "--advertise", f"{signature}-learner:9005"] + base),
+                  "--advertise", f"{signature}-learner:9005"] + base
+                 + (["--pool-endpoints", ",".join(learner_pool_eps)]
+                    if learner_pool_eps else [])),
         cpus=16, accel=", " + learner_accel, probes=tcp_probes(9005),
-        **common))
+        annotations="", **common))
     blocks.append(SERVICE_TMPL.format(
         role="inf-server", port=9006, replicas=inf_servers,
         node_pool="tpu-v5e", module="repro.launch.train",
@@ -174,13 +226,16 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
                   "--bind", "0.0.0.0:9006",
                   "--advertise", f"{signature}-inf-server:9006"] + base),
         cpus=8, accel=", " + learner_accel, probes=tcp_probes(9006),
-        **common))
+        annotations="", **common))
     blocks.append(SERVICE_TMPL.format(
         role="actor", port=9007, replicas=learners * actors_per_learner,
         node_pool="cpu", module="repro.launch.train",
         args=fmt(["--role", "actor", "--league-role", league_role]
-                 + base + serve_flag),
-        cpus=actor_cpus, accel="", probes=exec_probe, **common))
+                 + base + serve_flag
+                 + (["--pool-endpoints", ",".join(actor_pool_eps)]
+                    if actor_pool_eps else [])),
+        cpus=actor_cpus, accel="", probes=exec_probe,
+        annotations=restart_annotations, **common))
     return "".join(blocks)
 
 
@@ -190,6 +245,9 @@ def main():
     ap.add_argument("--learners", type=int, default=8)
     ap.add_argument("--inf-servers", type=int, default=2)
     ap.add_argument("--actors-per-learner", type=int, default=16)
+    ap.add_argument("--pool-replicas", type=int, default=1,
+                    help="ModelPool read-replica Deployment size (0 "
+                         "renders the legacy coordinator-only read path)")
     ap.add_argument("--env", default="pommerman_lite")
     ap.add_argument("--arch", default="tleague-policy-s")
     ap.add_argument("--league-spec", default="/config/league_spec.json")
@@ -199,6 +257,7 @@ def main():
     print(render(signature=args.signature, learners=args.learners,
                  inf_servers=args.inf_servers,
                  actors_per_learner=args.actors_per_learner,
+                 pool_replicas=args.pool_replicas,
                  env=args.env, arch=args.arch, league_spec=args.league_spec,
                  league_role=args.league_role, served=args.served))
 

@@ -43,6 +43,7 @@ from repro.core import GAME_MGRS, Hyperparam, LeagueMgr
 from repro.core.game_mgr import GameMgr
 from repro.envs import make_env
 from repro.infserver import InfServer
+from repro.launch import distributed as dist_defaults
 from repro.league import LeagueSpec, build_runtime, make_game_mgr
 from repro.learners import DataServer, Learner, build_env_train_step
 from repro.models import init_params
@@ -198,6 +199,8 @@ def _main_distributed(args, spec):
         assert ep, f"--role {args.role} needs --connect or $LEAGUE_MGR_EP"
         return ep.removeprefix("tcp://")
 
+    pool_eps = (args.pool_endpoints.split(",") if args.pool_endpoints
+                else None)
     if args.workers is not None:
         assert args.role is None, "--workers spawns its own --role children"
         assert spec is not None, "--workers needs --league-spec"
@@ -207,7 +210,8 @@ def _main_distributed(args, spec):
             unroll_len=args.unroll_len, lr=args.lr, seed=args.seed,
             served=args.served, sharded=args.sharded, pbt=args.pbt,
             max_seconds=args.max_seconds, max_steps_per_role=args.max_steps,
-            heartbeat_timeout_s=args.heartbeat_timeout)
+            heartbeat_timeout_s=args.heartbeat_timeout,
+            max_actor_restarts=args.max_actor_restarts)
         print(json.dumps(report, indent=1, default=str))
         assert report["clean_shutdown"], (
             f"worker exit codes: {report['worker_exit_codes']}")
@@ -217,7 +221,9 @@ def _main_distributed(args, spec):
             spec, env_name=args.env, arch=args.arch, seed=args.seed,
             served=args.served, sharded=args.sharded, pbt=args.pbt,
             bind=args.bind, max_seconds=args.max_seconds,
-            max_steps_per_role=args.max_steps)
+            max_steps_per_role=args.max_steps,
+            lease_ttl_s=(args.lease_ttl if args.lease_ttl > 0 else None),
+            actor_stale_s=args.actor_stale)
         print(json.dumps(report, indent=1, default=str))
     elif args.role == "learner":
         dist.run_learner(args.league_role, endpoint(), env_name=args.env,
@@ -225,14 +231,21 @@ def _main_distributed(args, spec):
                          seed=args.seed, num_envs=args.num_envs,
                          unroll_len=args.unroll_len, data_bind=args.bind,
                          advertise=args.advertise,
-                         heartbeat_timeout_s=args.heartbeat_timeout)
+                         heartbeat_timeout_s=args.heartbeat_timeout,
+                         pool_endpoints=pool_eps)
     elif args.role == "actor":
         dist.run_actor(args.league_role, endpoint(),
                        actor_index=args.actor_index, env_name=args.env,
                        arch=args.arch, num_envs=args.num_envs,
                        unroll_len=args.unroll_len, seed=args.seed,
                        served=args.served,
-                       heartbeat_timeout_s=args.heartbeat_timeout)
+                       heartbeat_timeout_s=args.heartbeat_timeout,
+                       pool_endpoints=pool_eps)
+    elif args.role == "pool-replica":
+        dist.run_pool_replica(endpoint(), replica_index=args.replica_index,
+                              sync_interval_s=args.sync_interval,
+                              bind=args.bind, advertise=args.advertise,
+                              heartbeat_timeout_s=args.heartbeat_timeout)
     elif args.role == "infserver":
         dist.run_infserver(endpoint(), env_name=args.env, arch=args.arch,
                            seed=args.seed, sharded=args.sharded,
@@ -287,7 +300,8 @@ def main():
                          "per role plus N actor processes, this process "
                          "coordinating over the RPC transport")
     ap.add_argument("--role", default=None,
-                    choices=["coordinator", "learner", "actor", "infserver"],
+                    choices=["coordinator", "learner", "actor", "infserver",
+                             "pool-replica"],
                     help="run exactly one league role in this process "
                          "(pair with --connect, or --bind for coordinator)")
     ap.add_argument("--league-role", default="main",
@@ -316,6 +330,32 @@ def main():
                     help="worker roles: seconds without a coordinator "
                          "heartbeat advance before this process treats "
                          "the coordinator as dead and shuts down cleanly")
+    # -- robustness flags (leases / replicas / supervision) -------------------
+    ap.add_argument("--pool-endpoints", default=None,
+                    help="--role learner/actor: comma list of ModelPool "
+                         "read endpoints (replicas first for actors, "
+                         "coordinator first for learners); pulls fail over "
+                         "across the list, writes stay on the coordinator")
+    ap.add_argument("--replica-index", type=int, default=0,
+                    help="--role pool-replica: index for telemetry and the "
+                         "ctrl-plane endpoint name")
+    ap.add_argument("--sync-interval", type=float, default=0.5,
+                    help="--role pool-replica: seconds between primary "
+                         "sync cycles")
+    ap.add_argument("--lease-ttl", type=float,
+                    default=dist_defaults.DEFAULT_LEASE_TTL_S,
+                    help="coordinator: task-lease TTL in seconds; an "
+                         "unreported task is re-issued after this long "
+                         "without an actor beat extension (<=0 disables "
+                         "the lease plane entirely)")
+    ap.add_argument("--actor-stale", type=float,
+                    default=dist_defaults.DEFAULT_ACTOR_STALE_S,
+                    help="coordinator: seconds without an actor beat "
+                         "before its leases are reaped immediately")
+    ap.add_argument("--max-actor-restarts", type=int,
+                    default=dist_defaults.DEFAULT_ACTOR_RESTARTS,
+                    help="--workers mode: per-slot respawn budget for "
+                         "crashed actor children")
     args = ap.parse_args()
     if args.collector_slots is not None:
         args.num_envs = args.collector_slots

@@ -32,13 +32,15 @@ def make_game_mgr(role: RoleSpec, *, payoff, seed: int = 0) -> GameMgr:
 
 def install_roles(spec: LeagueSpec, init_params_fn: Callable[[int], Any], *,
                   league: Optional[LeagueMgr] = None, pbt: bool = False,
-                  seed: int = 0) -> LeagueMgr:
+                  seed: int = 0,
+                  lease_ttl_s: Optional[float] = None) -> LeagueMgr:
     """Build (or extend) a LeagueMgr from a spec. `init_params_fn(i)` makes
     the seed params for the i-th role — a fresh random init per lineage, or
-    a shared imitation-learned seed."""
+    a shared imitation-learned seed. `lease_ttl_s` activates the task-lease
+    plane (dead-actor matches get reaped and re-issued)."""
     if league is None:
         league = LeagueMgr(model_pool=ModelPool(snapshot_on_pull=True),
-                           pbt=pbt, seed=seed)
+                           pbt=pbt, seed=seed, lease_ttl_s=lease_ttl_s)
     for i, role in enumerate(spec):
         gm = make_game_mgr(role, payoff=league.payoff, seed=seed + i)
         league.add_learning_agent(

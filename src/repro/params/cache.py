@@ -11,7 +11,9 @@ operation:
   onto the cached copy (`apply_delta` never mutates the old object, so
   a copy the caller handed elsewhere — e.g. hosted live by an
   InfServer — is never written through);
-* cache empty / pool without `pull_if_changed` -> a plain full pull.
+* cache empty / pool without `pull_if_changed` -> a plain full pull;
+* answer OLDER than the cache (a failover landed on a lagging read
+  replica) -> ignored, the cached newer params win (`stale_answers`).
 
 On top of the per-key version cache sits a CROSS-KEY hash store: every
 cached leaf is indexed by its content hash, the set of held hashes is
@@ -43,6 +45,7 @@ class CachedPuller:
         self._cache: Dict[Hashable, Tuple[ParamManifest, Any]] = {}
         self._hashes: Dict[str, Any] = {}    # content hash -> cached leaf
         self._cross_key_supported = True     # cleared on TypeError retry
+        self.stale_answers = 0               # lagging-replica answers ignored
 
     def get(self, key) -> Any:
         return self.get_with_manifest(key)[0]
@@ -65,6 +68,12 @@ class CachedPuller:
         if r is None:
             r = pull_if_changed(key, have, copy=self._copy)
         if isinstance(r, NotModified):
+            return ent[1], ent[0]
+        if ent is not None and r.manifest.version < ent[0].version:
+            # a LAGGING pool answered (failover landed on a replica that
+            # has not caught up): versions are monotonic per key, so the
+            # cached entry is strictly newer — keep it, never regress
+            self.stale_answers += 1
             return ent[1], ent[0]
         params = self._reconstruct(r, ent)
         if params is None:

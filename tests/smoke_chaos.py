@@ -1,0 +1,216 @@
+"""CI chaos smoke (ISSUE 7): a league of 4 actors + 1 pool read replica
+survives SIGKILLed workers, a killed pool primary endpoint, a stalled
+(SIGSTOP'd) actor, and seeded fault injection — and still reaches the
+target learner steps with zero payoff corruption.
+
+Not a pytest module (no `test_` prefix — minutes of wall clock, real
+kill -9 semantics): run as `PYTHONPATH=src python tests/smoke_chaos.py`.
+
+The scenario:
+  1. Coordinator serves with the lease plane armed (`--lease-ttl 2
+     --actor-stale 1.5`) and a seeded FaultPlan injected via the
+     REPRO_FAULT_PLAN env seam (dropped pool pulls + delayed pings).
+  2. A pool read replica follows the coordinator; actors read params
+     replica-first (`--pool-endpoints replica,coordinator`).
+  3. Mid-run, two actors are SIGKILLed (their leases go stale and are
+     reaped + re-issued) and the replica is SIGKILLed (the surviving
+     actors' pool reads fail over to the coordinator endpoint).
+  4. A third actor is SIGSTOP'd past the stale threshold — its lease is
+     reaped and re-issued while it is frozen — then SIGCONT'd, so its
+     late result arrives under a dead task_id and MUST be dropped by the
+     generation guard (`dropped_results` telemetry), never double-counted
+     into the payoff matrix.
+  5. The coordinator must still reach `--max-steps` and exit 0; the
+     surviving workers must exit 0.
+"""
+import json
+import os
+import pathlib
+import re
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.distributed.transport import FaultPlan, FaultRule  # noqa: E402
+
+SPEC = REPO / "examples" / "league_specs" / "collector_smoke.json"
+ENV = dict(os.environ)
+ENV["PYTHONPATH"] = os.pathsep.join(
+    p for p in (str(REPO / "src"), os.environ.get("PYTHONPATH")) if p)
+
+COMMON = ["--env", "rps", "--num-envs", "4", "--unroll-len", "8"]
+TARGET_STEPS = 60
+
+# mild, bounded, seeded chaos: dropped pool pulls ride the idempotent
+# retry path; delayed pings stress the slow-vs-dead discrimination
+PLAN = FaultPlan([FaultRule("pool.pull*", "drop", p=0.2, max_times=8),
+                  FaultRule("ctrl.ping", "delay", delay_s=0.2, p=0.2,
+                            max_times=8)], seed=1234)
+
+
+def spawn(args, extra_env=None, **kw):
+    env = dict(ENV, **(extra_env or {}))
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        env=env, cwd=REPO, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, **kw)
+
+
+def drain_for(proc, pattern):
+    """Drain `proc`'s stdout forever on a thread (a filled pipe would
+    wedge the child); capture every line, flag the first `pattern` hit."""
+    found, box, lines = threading.Event(), {}, []
+
+    def loop():
+        for line in proc.stdout:
+            lines.append(line)
+            m = re.search(pattern, line)
+            if m and not found.is_set():
+                box["match"] = m.group(1)
+                found.set()
+
+    threading.Thread(target=loop, daemon=True).start()
+    return found, box, lines
+
+
+def main() -> int:
+    procs = []
+    try:
+        coord = spawn(["--role", "coordinator", "--league-spec", str(SPEC),
+                       "--bind", "127.0.0.1:0", "--max-seconds", "240",
+                       "--max-steps", str(TARGET_STEPS),
+                       "--lease-ttl", "2", "--actor-stale", "1.5"] + COMMON,
+                      extra_env={"REPRO_FAULT_PLAN": PLAN.to_json()})
+        procs.append(coord)
+        c_found, c_box, c_lines = drain_for(coord,
+                                            r"serving league at (\S+)")
+        assert c_found.wait(timeout=60), "coordinator never announced"
+        address = c_box["match"]
+        print(f"[chaos] coordinator at {address} (pid {coord.pid})",
+              flush=True)
+
+        replica = spawn(["--role", "pool-replica", "--connect", address,
+                         "--bind", "127.0.0.1:0", "--sync-interval", "0.2"]
+                        + COMMON)
+        procs.append(replica)
+        r_found, r_box, _ = drain_for(replica,
+                                      r"serving pool replica at (\S+)")
+        assert r_found.wait(timeout=60), "replica never announced"
+        replica_addr = r_box["match"]
+        print(f"[chaos] pool replica at {replica_addr} (pid {replica.pid})",
+              flush=True)
+
+        pool_eps = f"{replica_addr},{address}"
+        learner = spawn(["--role", "learner", "--league-role", "main",
+                         "--connect", address, "--pool-endpoints",
+                         f"{address},{replica_addr}"] + COMMON)
+        procs.append(learner)
+        l_found, _, l_lines = drain_for(learner, r"(learner)")
+        actors = []
+        for i in range(4):
+            a = spawn(["--role", "actor", "--league-role", "main",
+                       "--actor-index", str(i), "--connect", address,
+                       "--pool-endpoints", pool_eps] + COMMON)
+            drain_for(a, r"(actor)")
+            actors.append(a)
+            procs.append(a)
+
+        time.sleep(12)                 # real progress, leases outstanding
+        for i, a in enumerate(actors):
+            assert a.poll() is None, f"actor {i} died before the chaos"
+        assert learner.poll() is None, "learner died before the chaos"
+
+        print("[chaos] SIGKILL actors 0,1 + the pool replica", flush=True)
+        os.kill(actors[0].pid, signal.SIGKILL)
+        os.kill(actors[1].pid, signal.SIGKILL)
+        os.kill(replica.pid, signal.SIGKILL)
+
+        time.sleep(2)
+        print("[chaos] SIGSTOP actor 2 past the stale threshold", flush=True)
+        os.kill(actors[2].pid, signal.SIGSTOP)
+        time.sleep(6)                  # > actor-stale + reap interval
+        os.kill(actors[2].pid, signal.SIGCONT)
+        print("[chaos] SIGCONT actor 2 (its reaped lease's late result "
+              "must be dropped)", flush=True)
+
+        try:
+            coord.wait(timeout=240)
+        except subprocess.TimeoutExpired:
+            print("[chaos] FAIL: coordinator never reached target steps",
+                  flush=True)
+            return 1
+        ok = coord.returncode == 0
+        print(f"[chaos] coordinator exit={coord.returncode}", flush=True)
+
+        # surviving workers observe the stop flag and exit cleanly
+        for name, p in [("learner", learner), ("actor2", actors[2]),
+                        ("actor3", actors[3])]:
+            try:
+                p.wait(timeout=60)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait()
+                print(f"[chaos] FAIL: {name} hung after stop", flush=True)
+                ok = False
+                continue
+            print(f"[chaos] {name}: exit={p.returncode}", flush=True)
+            if p.returncode != 0:
+                ok = False
+
+        time.sleep(0.5)                # let the drainer catch the tail
+        out = "".join(c_lines)
+        tail = "\n".join(out.splitlines()[-12:])
+        print(f"--- coordinator output tail ---\n{tail}", flush=True)
+
+        if "fault plan armed" not in out:
+            print("[chaos] FAIL: fault plan never armed", flush=True)
+            ok = False
+        m = re.search(r"\[coordinator\] done: (\{.*\})", out)
+        if not m:
+            print("[chaos] FAIL: no progress report", flush=True)
+            ok = False
+        else:
+            steps = m and json.loads(m.group(1))["learner_steps"]
+            if steps.get("main", 0) < TARGET_STEPS:
+                print(f"[chaos] FAIL: learner steps {steps} < "
+                      f"{TARGET_STEPS}", flush=True)
+                ok = False
+        m = re.search(r"\[coordinator\] leases: (\{.*\})", out)
+        if not m:
+            print("[chaos] FAIL: no lease report", flush=True)
+            ok = False
+        else:
+            leases = json.loads(m.group(1))
+            print(f"[chaos] leases: {leases}", flush=True)
+            # the SIGKILLed/SIGSTOP'd actors' leases were reaped+re-issued
+            if leases["reaped"] < 1 or leases["reissued"] < 1:
+                print("[chaos] FAIL: no lease was reaped+re-issued",
+                      flush=True)
+                ok = False
+            # zero payoff corruption: the stalled actor's late result for
+            # its reaped lease was dropped by the generation guard, not
+            # double-counted into the payoff matrix
+            if leases["dropped_results"] < 1:
+                print("[chaos] FAIL: generation guard never fired "
+                      "(late result not dropped)", flush=True)
+                ok = False
+
+        print(f"[chaos] {'PASS' if ok else 'FAIL'}", flush=True)
+        return 0 if ok else 1
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                try:
+                    os.kill(p.pid, signal.SIGCONT)
+                except OSError:
+                    pass
+                p.kill()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,512 @@
+"""Robustness plane (ISSUE 7): task leases + generation guard, ModelPool
+read replicas with version-coherent installs, retrying/failing-over seam
+clients (idempotent vs RetryableError), seeded fault injection, the
+heartbeat slow-vs-dead discrimination that feeds the lease reaper, and
+the InfServer's dead-owner ticket expiry."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import LeagueMgr, MatchResult, ModelKey
+from repro.core.model_pool import ModelPool, ModelPoolReplica
+from repro.distributed import transport as tp
+from repro.distributed.heartbeat import BeatRegistry, Heartbeat, HeartbeatMonitor
+from repro.infserver import InfServer
+from repro.models import init_params
+from repro.params.cache import CachedPuller
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_arch("tleague-policy-s")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _small_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(16, 16)).astype(np.float32),
+            "b": rng.normal(size=(16,)).astype(np.float32)}
+
+
+def _league(ttl=30.0):
+    lg = LeagueMgr(lease_ttl_s=ttl)
+    lg.add_learning_agent("main", _small_params())
+    return lg
+
+
+def _result(task, outcome=1.0):
+    return MatchResult(learner_key=task.learner_key,
+                       opponent_keys=task.opponent_keys, outcome=outcome,
+                       episode_len=1, task_id=task.task_id)
+
+
+# -- task leases --------------------------------------------------------------
+class TestLeases:
+    def test_issue_complete_release(self):
+        lg = _league()
+        t1 = lg.request_task("main", actor_id="a0")
+        assert lg.lease_state()["outstanding"] == 1
+        lg.report_result(_result(t1))
+        s = lg.lease_state()
+        assert s["completed"] == 1 and s["outstanding"] == 0
+        # an actor's next request releases its previous (unreported) lease
+        lg.request_task("main", actor_id="a0")
+        lg.request_task("main", actor_id="a0")
+        s = lg.lease_state()
+        assert s["released"] == 1 and s["outstanding"] == 1
+
+    def test_reap_reissue_and_generation_guard(self):
+        lg = _league(ttl=0.01)
+        t1 = lg.request_task("main", actor_id="dead")
+        reaped = lg.reap_leases(now=time.monotonic() + 1.0)
+        assert [l.task_id for l in reaped] == [t1.task_id]
+        # the reissued task carries the SAME match under a NEW task_id
+        t2 = lg.request_task("main", actor_id="spare")
+        assert t2.task_id != t1.task_id
+        assert t2.opponent_keys == t1.opponent_keys
+        assert lg.lease_state()["reissued"] == 1
+        # late result from the presumed-dead actor: dropped, payoff untouched
+        pair = (t1.learner_key, t1.opponent_keys[0])
+        games_before = lg.payoff.games(*pair)
+        lg.report_result(_result(t1))
+        assert lg.lease_state()["dropped_results"] == 1
+        assert lg.payoff.games(*pair) == games_before
+        # the new generation's result is accepted normally
+        lg.report_result(_result(t2))
+        assert lg.lease_state()["completed"] == 1
+
+    def test_dead_actor_reaped_before_deadline(self):
+        lg = _league(ttl=60.0)
+        lg.request_task("main", actor_id="gone")
+        assert lg.reap_leases(dead_actors=["gone"])
+        assert lg.lease_state()["reaped"] == 1
+
+    def test_touch_extends_deadline(self):
+        lg = _league(ttl=0.05)
+        lg.request_task("main", actor_id="slow")
+        future = time.monotonic() + 1.0
+        lg.touch_actor("slow", now=future)
+        assert lg.reap_leases(now=future + 0.04) == []   # extended past TTL
+        assert lg.reap_leases(now=future + 0.06)         # but not forever
+
+    def test_reissue_skips_stale_learner_key(self):
+        lg = _league(ttl=0.01)
+        t1 = lg.request_task("main", actor_id="dead")
+        lg.reap_leases(now=time.monotonic() + 1.0)
+        lg.end_learning_period("main", _small_params(1))  # lineage froze
+        t2 = lg.request_task("main", actor_id="spare")
+        # the queued template quoted the pre-freeze learner key: skipped
+        assert t2.learner_key != t1.learner_key
+        assert lg.lease_state()["reissued"] == 0
+        assert lg.lease_state()["reissue_queued"] == 0
+
+    def test_legacy_mode_keeps_no_lease_state(self):
+        lg = LeagueMgr()                                  # lease_ttl_s=None
+        lg.add_learning_agent("main", _small_params())
+        t = lg.request_task("main", actor_id="a0")
+        assert lg.lease_state()["issued"] == 0
+        assert lg.reap_leases() == []
+        lg.report_result(_result(t))                      # accepted, no guard
+        assert lg.lease_state()["dropped_results"] == 0
+
+
+# -- ModelPool replicas -------------------------------------------------------
+class TestReplica:
+    def test_install_refuses_non_monotonic(self):
+        src, dst = ModelPool(), ModelPool()
+        key = ModelKey("m", 0)
+        src.push(key, _small_params())
+        src.push(key, _small_params(1))
+        v, man = src.version(key), src.manifest(key)
+        assert dst.install(key, src.pull(key), v, manifest=man)
+        assert dst.version(key) == v
+        assert not dst.install(key, src.pull(key), v, manifest=man)
+        assert not dst.install(key, src.pull(key), v - 1)    # can't regress
+        assert dst.version(key) == v
+        with pytest.raises(AssertionError):                  # incoherent pair
+            dst.install(key, src.pull(key), v + 1, manifest=man)
+
+    def test_sync_version_coherent_and_frozen_mirrored(self):
+        primary = ModelPool()
+        key = ModelKey("m", 0)
+        primary.push(key, _small_params())
+        rep = ModelPoolReplica(primary, sync_interval_s=0.01)
+        rep.sync_once()
+        assert rep.version(key) == primary.version(key)
+        # a consumer that cached from the PRIMARY gets a coherent delta here
+        assert rep.manifest(key).tree_hash == primary.manifest(key).tree_hash
+        primary.push(key, _small_params(1))
+        primary.freeze(key)
+        rep.sync_once()
+        assert rep.version(key) == primary.version(key)
+        assert rep.pull_attr(key)["frozen"]
+        assert rep.sync_stats["frozen_mirrored"] == 1
+        np.testing.assert_array_equal(rep.pull(key)["w"],
+                                      primary.pull(key)["w"])
+
+    def test_replica_refuses_writes(self):
+        rep = ModelPoolReplica(ModelPool())
+        with pytest.raises(ValueError, match="read replica"):
+            rep.push(ModelKey("m", 0), _small_params())
+        with pytest.raises(ValueError, match="read replica"):
+            rep.freeze(ModelKey("m", 0))
+
+    def test_follow_thread_tracks_primary(self):
+        primary = ModelPool()
+        key = ModelKey("m", 0)
+        primary.push(key, _small_params())
+        rep = ModelPoolReplica(primary, sync_interval_s=0.01).start_following()
+        try:
+            deadline = time.monotonic() + 5.0
+            while key not in rep and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert key in rep
+            primary.push(key, _small_params(2))
+            while rep.version(key) < primary.version(key) \
+                    and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert rep.version(key) == primary.version(key)
+        finally:
+            rep.stop()
+
+    def test_cached_puller_ignores_lagging_replica_answer(self):
+        pool = ModelPool()
+        key = ModelKey("m", 0)
+        pool.push(key, _small_params())
+        pool.push(key, _small_params(1))
+
+        class Lagging:
+            """Answers like a replica stuck at version 0."""
+            def __init__(self, fresh, stale):
+                self.fresh, self.stale, self.calls = fresh, stale, 0
+
+            def pull_if_changed(self, k, have_version=None, copy=None,
+                                have_hashes=None):
+                self.calls += 1
+                src = self.fresh if self.calls == 1 else self.stale
+                return src.pull_if_changed(k, None)   # always a full answer
+
+        stale_pool = ModelPool()
+        stale_pool.push(key, _small_params())         # version 0 content
+        puller = CachedPuller(Lagging(pool, stale_pool))
+        p1, m1 = puller.get_with_manifest(key)
+        p2, m2 = puller.get_with_manifest(key)        # lagging answer arrives
+        assert m2.version == m1.version               # kept the newer cache
+        assert puller.stale_answers == 1
+        np.testing.assert_array_equal(p2["w"], p1["w"])
+
+
+# -- retrying seam clients ----------------------------------------------------
+class TestRetry:
+    FAST = tp.RetryPolicy(base_s=0.02, cap_s=0.1, deadline_s=5.0)
+
+    def test_retry_policy_jitter_and_deadline(self):
+        import random
+        pol = tp.RetryPolicy(base_s=0.1, cap_s=0.8, max_attempts=6,
+                             deadline_s=None)
+        ds = list(pol.delays(random.Random(0)))
+        assert len(ds) == 5
+        for i, d in enumerate(ds):
+            nominal = min(0.8, 0.1 * 2 ** i)
+            assert 0.5 * nominal <= d <= 1.5 * nominal
+        # a spent deadline stops yielding
+        spent = tp.RetryPolicy(base_s=0.01, deadline_s=0.0)
+        assert list(spent.delays(random.Random(0))) == []
+
+    def test_endpoint_list_parsing_and_rotation(self):
+        c = tp.RpcClient("a:1, b:2,c:3", connect_retries=1)
+        assert c.endpoints == ("a:1", "b:2", "c:3")
+        assert c.address == "a:1"
+        c._rotate()
+        assert c.address == "b:2"
+
+    def test_idempotent_retry_survives_server_restart(self):
+        pool = ModelPool()
+        key = ModelKey("m", 0)
+        pool.push(key, _small_params())
+        srv = tp.RpcServer({"pool": pool}).start()
+        host, port = tp.parse_addr(srv.address)
+        client = tp.RpcClient(srv.address, retry=self.FAST, seed=0)
+        try:
+            assert client.call("pool.version", key, idempotent=True) == 0
+            srv.close()
+            box = {}
+
+            def restart():
+                time.sleep(0.3)
+                box["srv"] = tp.RpcServer({"pool": pool}, host=host,
+                                          port=port).start()
+
+            threading.Thread(target=restart, daemon=True).start()
+            # retried under backoff until the server is back
+            assert client.call("pool.version", key, idempotent=True) == 0
+        finally:
+            client.close()
+            box.get("srv", srv).close()
+
+    def test_nonidempotent_failure_raises_retryable(self):
+        pool = ModelPool()
+        srv = tp.RpcServer({"pool": pool}).start()
+        client = tp.RpcClient(srv.address, retry=self.FAST, seed=0)
+        try:
+            client.call("pool.keys", idempotent=True)     # connection is live
+            srv.close()
+            with pytest.raises(tp.RetryableError):
+                client.call("pool.push", ModelKey("m", 0), _small_params())
+        finally:
+            client.close()
+
+    def test_unreachable_idempotent_exhausts_with_transport_error(self):
+        client = tp.RpcClient("127.0.0.1:1",
+                              retry=tp.RetryPolicy(base_s=0.01, cap_s=0.02,
+                                                   max_attempts=3,
+                                                   deadline_s=0.2))
+        with pytest.raises(tp.TransportError) as ei:
+            client.call("pool.keys", idempotent=True)
+        assert not isinstance(ei.value, tp.RetryableError)
+
+    def test_abort_poisons_retries(self):
+        client = tp.RpcClient("127.0.0.1:1", retry=self.FAST)
+        client.abort()
+        t0 = time.monotonic()
+        with pytest.raises(tp.TransportError):
+            client.call("pool.keys", idempotent=True)
+        assert time.monotonic() - t0 < 1.0                # no backoff fight
+
+    def test_pool_client_fails_over_to_replica(self):
+        key = ModelKey("m", 0)
+        primary = ModelPool()
+        primary.push(key, _small_params())
+        rep = ModelPoolReplica(primary)
+        rep.sync_once()
+        srv_p = tp.RpcServer({"pool": primary}).start()
+        srv_r = tp.RpcServer({"pool": rep}).start()
+        client = tp.ModelPoolClient(tp.RpcClient(
+            [srv_p.address, srv_r.address], retry=self.FAST, seed=0))
+        try:
+            np.testing.assert_array_equal(client.pull(key)["w"],
+                                          primary.pull(key)["w"])
+            srv_p.close()                                  # kill the primary
+            client.clear_cache()                           # force a real pull
+            np.testing.assert_array_equal(client.pull(key)["w"],
+                                          primary.pull(key)["w"])
+        finally:
+            client.close()
+            srv_p.close()
+            srv_r.close()
+
+    def test_replica_keyerror_read_falls_back_to_primary(self):
+        key = ModelKey("fresh", 0)
+        primary = ModelPool()
+        primary.push(key, _small_params())
+        lagging = ModelPool()                  # replica that hasn't synced
+        srv_p = tp.RpcServer({"pool": primary}).start()
+        srv_r = tp.RpcServer({"pool": lagging}).start()
+        client = tp.ModelPoolClient(
+            tp.RpcClient(srv_r.address, retry=self.FAST),
+            write_client=srv_p.address)
+        try:
+            # the replica answers RemoteError(KeyError) — a live server, so
+            # no failover — and the read retries against the pinned primary
+            assert client.version(key) == 0
+            np.testing.assert_array_equal(client.pull(key)["w"],
+                                          primary.pull(key)["w"])
+        finally:
+            client.close()
+            srv_p.close()
+            srv_r.close()
+
+
+# -- fault injection ----------------------------------------------------------
+class TestFaultPlan:
+    def test_json_roundtrip_and_env(self, monkeypatch):
+        plan = tp.FaultPlan([tp.FaultRule("pool.*", "drop", p=0.5,
+                                          max_times=3)], seed=7)
+        back = tp.FaultPlan.from_json(plan.to_json())
+        assert back.seed == 7 and back.rules[0].match == "pool.*"
+        assert back.rules[0].p == 0.5 and back.rules[0].max_times == 3
+        monkeypatch.setenv("REPRO_FAULT_PLAN", plan.to_json())
+        assert tp.FaultPlan.from_env().seed == 7
+        monkeypatch.delenv("REPRO_FAULT_PLAN")
+        assert tp.FaultPlan.from_env() is None
+
+    def test_seeded_decisions_are_deterministic(self):
+        def draws(seed):
+            plan = tp.FaultPlan([tp.FaultRule("*", "drop", p=0.5)], seed=seed)
+            return [plan.decide("x.y") is not None for _ in range(32)]
+        assert draws(3) == draws(3)
+        assert draws(3) != draws(4)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(AssertionError):
+            tp.FaultRule("*", "explode")
+
+    @pytest.mark.parametrize("kind", ["drop", "drop_reply", "close_mid_chunk"])
+    def test_idempotent_call_rides_through_fault(self, kind):
+        pool = ModelPool()
+        key = ModelKey("m", 0)
+        # big enough that the reply streams (close_mid_chunk cuts a blob)
+        pool.push(key, {"w": np.arange(128 * 1024, dtype=np.float32)})
+        plan = tp.FaultPlan([tp.FaultRule("pool.pull*", kind, max_times=1)])
+        srv = tp.RpcServer({"pool": pool}, fault_plan=plan).start()
+        client = tp.ModelPoolClient(tp.RpcClient(
+            srv.address, retry=tp.RetryPolicy(base_s=0.02, cap_s=0.1,
+                                              deadline_s=5.0), seed=0))
+        try:
+            np.testing.assert_array_equal(client.pull(key)["w"],
+                                          pool.pull(key)["w"])
+            assert plan.stats()[f"pool.pull*:{kind}"] == 1
+        finally:
+            client.close()
+            srv.close()
+
+    def test_delay_fault_adds_latency(self):
+        hb = Heartbeat()
+        plan = tp.FaultPlan([tp.FaultRule("ctrl.ping", "delay", delay_s=0.2,
+                                          max_times=1)])
+        srv = tp.RpcServer({"ctrl": hb}, fault_plan=plan).start()
+        client = tp.RpcClient(srv.address)
+        try:
+            t0 = time.monotonic()
+            client.call("ctrl.ping")
+            assert time.monotonic() - t0 >= 0.15
+            t0 = time.monotonic()
+            client.call("ctrl.ping")                      # rule exhausted
+            assert time.monotonic() - t0 < 0.15
+        finally:
+            client.close()
+            srv.close()
+
+
+# -- heartbeat: slow vs dead --------------------------------------------------
+class TestSlowVsDead:
+    def test_beat_registry_split(self):
+        reg = BeatRegistry()
+        reg.beat("fast")
+        reg.beat("slow")
+        alive, stale = reg.split(stale_s=10.0)
+        assert sorted(alive) == ["fast", "slow"] and stale == []
+        time.sleep(0.05)
+        reg.beat("fast")
+        alive, stale = reg.split(stale_s=0.04)
+        assert alive == ["fast"] and stale == ["slow"]
+        reg.beat("slow")                                  # woke back up
+        alive, _ = reg.split(stale_s=0.04)
+        assert sorted(alive) == ["fast", "slow"]
+        reg.forget("slow")
+        assert len(reg) == 1
+
+    def test_stalled_worker_is_not_declared_dead_early(self):
+        """A SIGSTOP shorter than the stale threshold must NOT reap — the
+        reaper's in-process form: the worker misses beats for 0.1 s under
+        a 10 s threshold and stays in the alive set, lease intact."""
+        lg = _league(ttl=10.0)
+        reg = BeatRegistry()
+        lg.request_task("main", actor_id="stalled")
+        reg.beat("stalled")
+        time.sleep(0.1)                                   # the brief stall
+        alive, stale = reg.split(stale_s=10.0)
+        assert alive == ["stalled"] and stale == []
+        for a in alive:
+            lg.touch_actor(a)
+        assert lg.reap_leases(dead_actors=stale) == []
+        assert lg.lease_state()["outstanding"] == 1
+
+    def test_lease_reaped_during_long_stall_stays_reaped(self):
+        """The SIGCONT side: an actor that resumes AFTER its lease was
+        reaped gets its late result dropped, and the re-issued generation
+        (handed to another actor during the stall) wins."""
+        lg = _league(ttl=10.0)
+        reg = BeatRegistry()
+        t1 = lg.request_task("main", actor_id="stalled")
+        reg.beat("stalled")
+        time.sleep(0.06)
+        alive, stale = reg.split(stale_s=0.05)            # stall > threshold
+        assert stale == ["stalled"]
+        assert lg.reap_leases(dead_actors=stale)
+        t2 = lg.request_task("main", actor_id="spare")    # re-issued match
+        reg.beat("stalled")                               # SIGCONT: resumes
+        lg.report_result(_result(t1))                     # late result
+        assert lg.lease_state()["dropped_results"] == 1
+        lg.report_result(_result(t2))
+        assert lg.lease_state()["completed"] == 1
+
+    def test_monitor_tolerates_slow_beats(self):
+        """HeartbeatMonitor: a peer whose counter still advances — however
+        slowly — is never declared dead; one that stops advancing is."""
+        hb = Heartbeat()
+        hb.beat()
+        srv = tp.RpcServer({"ctrl": hb}).start()
+        died = threading.Event()
+        mon = HeartbeatMonitor(srv.address, interval_s=0.05, timeout_s=0.6,
+                               on_dead=died.set)
+        mon.start()
+        try:
+            for _ in range(4):                            # slow but alive
+                time.sleep(0.3)
+                hb.beat()
+            assert not mon.dead
+            assert died.wait(timeout=5.0)                 # beats stopped
+            assert mon.dead
+        finally:
+            mon.stop()
+            srv.close()
+
+
+# -- InfServer ticket expiry --------------------------------------------------
+class TestTicketExpiry:
+    def test_abandoned_results_expire(self, cfg, params):
+        srv = InfServer(cfg, 6, params, max_batch=64, ticket_ttl_flushes=2)
+        obs = np.zeros((1, 26), np.int32)
+        dead = srv.submit(obs)
+        srv.flush()                                       # resolved, unclaimed
+        assert srv.stats()["results_held"] == 1
+        for _ in range(2):                                # owner misses 2 flushes
+            srv.get(srv.submit(obs))
+        st = srv.stats()
+        assert st["tickets_expired"] == 1
+        assert st["results_held"] == 0                    # occupancy recovered
+        with pytest.raises(KeyError):
+            srv.get(dead)
+
+    def test_collected_and_discarded_tickets_never_expire(self, cfg, params):
+        srv = InfServer(cfg, 6, params, max_batch=64, ticket_ttl_flushes=1)
+        obs = np.zeros((1, 26), np.int32)
+        t = srv.submit(obs)
+        srv.get(t)                                        # collected promptly
+        junk = srv.submit(obs)
+        srv.discard(junk)                                 # politely dropped
+        for _ in range(3):
+            srv.get(srv.submit(obs))
+        assert srv.stats()["tickets_expired"] == 0
+
+
+# -- launch surface -----------------------------------------------------------
+class TestLaunchSurface:
+    def test_k8s_renders_replica_fleet_and_endpoints(self):
+        from repro.launch.k8s import render
+        out = render(pool_replicas=2, signature="sig")
+        assert "sig-pool-replica" in out
+        assert '"--role", "pool-replica"' in out
+        assert "replicas: 2" in out
+        # actors read replica-first, learners coordinator-first
+        assert '"--pool-endpoints", "sig-pool-replica:9008,sig-coordinator:9003"' in out
+        assert '"--pool-endpoints", "sig-coordinator:9003,sig-pool-replica:9008"' in out
+        assert "repro.dev/in-process-restart-budget" in out
+        assert "repro.dev/rpc-retry-backoff" in out
+        legacy = render(pool_replicas=0)
+        assert "pool-replica" not in legacy
+
+    def test_restart_budget_annotation_matches_code(self):
+        from repro.launch.distributed import DEFAULT_ACTOR_RESTARTS
+        from repro.launch.k8s import render
+        assert (f'repro.dev/in-process-restart-budget: '
+                f'"{DEFAULT_ACTOR_RESTARTS}"') in render()
