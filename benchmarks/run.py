@@ -13,10 +13,15 @@ Prints ``name,us_per_call,derived`` CSV.
   kernels             — Pallas kernel microbenches (interpret-mode on CPU:
                         correctness-path timing; TPU-target timing comes
                         from the roofline, see benchmarks/roofline.py)
-  learner_throughput  — fused (dispatch) vs reference train steps and
-                        host vs pipelined device feeding; asserts
-                        kernel<->reference parity and writes
-                        BENCH_learner.json
+  learner_throughput  — the learner hot path: a full seq-model V-trace
+                        loss at train_4k scale (B=1, T=4096, sliding
+                        window + softcap) timed fwd-only AND fwd+bwd
+                        under the reference oracle vs the production
+                        dispatch tier, with grad parity across the whole
+                        param pytree asserted <=1e-4; plus env-scale
+                        steps and host vs pipelined device feeding.
+                        Writes BENCH_learner.json; supports
+                        `--against FILE` (the CI regression gate)
   sharded_serving     — 1-device vs mesh-sharded InfServer forward
                         latency/throughput (parity asserted <=1e-4) and
                         in-process vs RPC seam overhead for the league
@@ -299,24 +304,43 @@ def fig4_winrate(train_iters=12):
     _emit("fig4/pommerman_vs_simple", us, f"winrate={wr:.2f}")
 
 
-def learner_throughput(out_path: str | None = None, iters: int = 8):
-    """Learner hot-path benchmark (ISSUE 2 acceptance): fused (dispatch)
-    vs jnp-reference train steps, and host-sample vs pipelined
-    `sample_to_device` feeding. Asserts kernel<->reference parity to 1e-4
-    across all three kernel families, then writes BENCH_learner.json.
+def learner_throughput(out_path: str | None = None, iters: int = 8,
+                       against: str | None = None):
+    """Learner hot-path benchmark (ISSUE 2 + ISSUE 8 acceptance).
 
-    On CPU the dispatch layer's `auto` mode routes to the XLA-fused
-    references (interpret-mode Pallas is a correctness tool, not a perf
-    path), so fused == reference step time here; on TPU/GPU the same
-    harness times the compiled Pallas kernels.
+    Three sections, all feeding one BENCH_learner.json record:
+
+      * parity     — dispatch(interpret) vs reference across all three
+                     kernel families, asserted <=1e-4 (the Pallas kernels
+                     are bit-audited elsewhere; this is the integration
+                     check).
+      * seq 4k     — the headline: a full seq-model V-trace loss
+                     (tleague-policy-s, sliding_window=512, softcap, B=1,
+                     T=4096) timed fwd-only and fwd+bwd under
+                     force('reference') (full-T^2 oracle attention) vs
+                     force('auto') (the production tier: windowed chunked
+                     attention on CPU, compiled Pallas flash fwd+bwd on
+                     TPU/GPU). Gradient parity between the two modes is
+                     asserted <=1e-4 across the whole param-grad pytree —
+                     the backward path is in the measured + audited loop,
+                     not just the forward. `fused_speedup_x` is the
+                     fwd+bwd ratio.
+      * env + feed — the legacy env-scale step timing (now `env_*`
+                     fields) and host vs double-buffered feeding.
+
+    With `against`, re-runs and fails on regression vs the stored record
+    (the CI gate; see `_check_against`).
     """
+    import dataclasses
+
     from repro.configs import get_arch
     from repro.kernels import dispatch
     from repro.learners import DataServer, build_env_train_step
-    from repro.models import init_params
+    from repro.models import forward_train, init_params
     from repro.optim import adamw
     from repro.rl.returns import gae, lambda_return
     from repro.rl.vtrace import vtrace
+    from repro.rl.vtrace_loss import VTraceConfig, vtrace_loss
 
     cfg = get_arch("tleague-policy-s")
     num_actions, obs_len = 6, 26
@@ -358,7 +382,89 @@ def learner_throughput(out_path: str | None = None, iters: int = 8):
                  for a, b in zip(outs["reference"], outs["interpret"]))
     assert parity <= 1e-4, f"kernel/reference parity {parity} > 1e-4"
 
-    # -- train-step timing: reference vs fused dispatch ---------------------
+    # -- seq 4k: full train_4k-scale loss, fwd-only and fwd+bwd -------------
+    # fp32 compute so the <=1e-4 grad-parity bar is meaningful; max_position
+    # bumped past T=4096; all-local layers exercise window+softcap (the
+    # flash kernel's hardest masking combo) end to end.
+    cfg4 = dataclasses.replace(
+        get_arch("tleague-policy-s"), sliding_window=512,
+        attn_logit_softcap=30.0, layer_pattern=("local",),
+        compute_dtype="float32", max_position=8192)
+    B4, T4 = 1, 4096
+    hp4 = VTraceConfig()
+    batch4 = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg4.vocab_size, (B4, T4)).astype(np.int32)),
+        "actions": jnp.asarray(
+            rng.integers(0, cfg4.vocab_size, (B4, T4)).astype(np.int32)),
+        "behavior_logp": jnp.asarray(
+            (-np.abs(rng.normal(size=(B4, T4)))).astype(np.float32)),
+        "behavior_values": jnp.asarray(
+            rng.normal(size=(B4, T4)).astype(np.float32)),
+        "rewards": jnp.asarray(rng.normal(size=(B4, T4)).astype(np.float32)),
+        "discounts": jnp.asarray(
+            (hp4.gamma * (rng.random((B4, T4)) >= 0.01)).astype(np.float32)),
+        "bootstrap_value": jnp.asarray(
+            rng.normal(size=(B4,)).astype(np.float32)),
+    }
+
+    def make_seq_loss():
+        # Fresh function object per dispatch mode: jax.jit's compilation
+        # cache is keyed on the wrapped function (+ avals), NOT on the
+        # dispatch mode read at trace time — re-jitting the same object
+        # under a different force() would silently reuse the first mode's
+        # executable (see repro.kernels.dispatch docstring).
+        def seq_loss(p, b):
+            # mirrors build_seq_train_step's loss_fn: forward_train ->
+            # vtrace (rl losses route v-trace through dispatch.reverse_scan,
+            # so the fused scan kernel is inside this timing at full 4k
+            # unroll). q_chunk=256: each query chunk attends a 256+window
+            # key slice — the production setting for window=512 locals.
+            logits, values, aux = forward_train(
+                p, cfg4, {"tokens": b["tokens"]}, q_chunk=256, remat=True)
+            tfields = {k: b[k] for k in ("actions", "behavior_logp",
+                                         "behavior_values", "rewards",
+                                         "discounts", "bootstrap_value")}
+            lv, _ = vtrace_loss(logits, values, tfields, hp4)
+            return lv + aux
+        return seq_loss
+
+    params4 = init_params(jax.random.PRNGKey(1), cfg4)
+    seq_iters = max(2, iters // 4)
+    seq_us, grads_by_mode = {}, {}
+    for mode_name in ("reference", "auto"):
+        with dispatch.force(mode_name):
+            seq_loss = make_seq_loss()
+            fwd = jax.jit(seq_loss)
+            fwdbwd = jax.jit(jax.grad(seq_loss))
+            for tag, fn in (("fwd", fwd), ("fwdbwd", fwdbwd)):
+                out = fn(params4, batch4)                      # compile
+                jax.block_until_ready(out)
+                t0 = time.perf_counter()
+                for _ in range(seq_iters):
+                    out = fn(params4, batch4)
+                jax.block_until_ready(out)
+                seq_us[f"{tag}_{mode_name}"] = (
+                    (time.perf_counter() - t0) / seq_iters * 1e6)
+            grads_by_mode[mode_name] = fwdbwd(params4, batch4)
+    gref, gauto = grads_by_mode["reference"], grads_by_mode["auto"]
+    grad_parity = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(gref), jax.tree.leaves(gauto)))
+    assert grad_parity <= 1e-4, \
+        f"seq-4k grad parity {grad_parity} > 1e-4 (reference vs auto)"
+    seq_speedup = seq_us["fwdbwd_reference"] / seq_us["fwdbwd_auto"]
+    seq_fwd_speedup = seq_us["fwd_reference"] / seq_us["fwd_auto"]
+    _emit("learner/seq4k_fwd_reference", seq_us["fwd_reference"], "us_per_call")
+    _emit("learner/seq4k_fwd_fused", seq_us["fwd_auto"],
+          f"us_per_call;speedup_x={seq_fwd_speedup:.2f}")
+    _emit("learner/seq4k_fwdbwd_reference", seq_us["fwdbwd_reference"],
+          "us_per_call")
+    _emit("learner/seq4k_fwdbwd_fused", seq_us["fwdbwd_auto"],
+          f"us_per_call;speedup_x={seq_speedup:.2f};"
+          f"grad_parity={grad_parity:.2e}")
+
+    # -- env-scale train-step timing: reference vs fused dispatch -----------
     opt = adamw(3e-4)
     step_us = {}
     for mode_name in ("reference", "auto"):
@@ -409,19 +515,36 @@ def learner_throughput(out_path: str | None = None, iters: int = 8):
 
     record = {
         "backend": jax.default_backend(),
-        "batch_rows": B,
-        "unroll_len": T,
         "arch": "tleague-policy-s",
         "parity_max_abs_err": parity,
-        "reference_us_per_step": round(step_us["reference"], 2),
-        "fused_us_per_step": round(step_us["auto"], 2),
-        "fused_speedup_x": round(speedup, 3),
+        # headline: seq-model V-trace loss at train_4k scale (B=1, T=4096,
+        # window=512, softcap), reference oracle vs production dispatch
+        "seq_len": T4,
+        "seq_batch_rows": B4,
+        "seq_fwd_reference_us": round(seq_us["fwd_reference"], 2),
+        "seq_fwd_fused_us": round(seq_us["fwd_auto"], 2),
+        "seq_fwd_speedup_x": round(seq_fwd_speedup, 3),
+        "seq_fwdbwd_reference_us": round(seq_us["fwdbwd_reference"], 2),
+        "seq_fwdbwd_fused_us": round(seq_us["fwdbwd_auto"], 2),
+        "fused_speedup_x": round(seq_speedup, 3),
+        "seq_grad_parity_max_abs_err": grad_parity,
+        # legacy env-scale step timing (B=32, T=16 obs-token policy)
+        "env_batch_rows": B,
+        "env_unroll_len": T,
+        "env_reference_us_per_step": round(step_us["reference"], 2),
+        "env_fused_us_per_step": round(step_us["auto"], 2),
+        "env_fused_speedup_x": round(speedup, 3),
         "host_feed_frames_per_s": round(feed_fps["host"], 1),
         "prefetch_feed_frames_per_s": round(feed_fps["prefetch"], 1),
     }
     path = pathlib.Path(out_path) if out_path else _REPO / "BENCH_learner.json"
+    prior = json.loads(pathlib.Path(against).read_text()) if against else None
     _write_bench(path, record)
     _emit("learner/bench_written", 0.0, f"wrote={path.name}")
+    if prior is not None:
+        _check_against(record, prior, against,
+                       floors={"fused_speedup_x": (1.5, 0.5),
+                               "seq_fwd_speedup_x": (1.5, 0.5)})
     return record
 
 
@@ -1106,7 +1229,8 @@ BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "fault_recovery", "kernels", "fig4_winrate", "table12_league_eval")
 
 # benches whose record supports the `--against FILE` regression gate
-_AGAINST_BENCHES = ("param_plane", "collector_throughput", "fault_recovery")
+_AGAINST_BENCHES = ("param_plane", "collector_throughput", "fault_recovery",
+                    "learner_throughput")
 
 
 def main() -> None:

@@ -44,6 +44,7 @@ Also hosts the teacher-policy forward for KL penalties (paper §3.2).
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from typing import Any, Dict, Hashable, List, Optional, Tuple
@@ -53,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.actors.policy import make_obs_policy
+from repro.kernels import dispatch
 
 _DEFAULT = "__default__"
 
@@ -60,6 +62,20 @@ _DEFAULT = "__default__"
 def _bucket(n: int) -> int:
     """Next power of two >= n: bounds the number of jit cache entries."""
     return 1 << max(0, (n - 1).bit_length())
+
+
+def _serving_jit(fn):
+    """jit(fn) whose traces run inside a dispatch.serving() scope, so the
+    inference-only precision mode applies. The scope only matters during
+    tracing (dispatch routing is trace-time static); executing the cached
+    executable afterwards never re-enters dispatch."""
+    jitted = jax.jit(fn)
+
+    def wrapped(*args, **kwargs):
+        with dispatch.serving():
+            return jitted(*args, **kwargs)
+
+    return wrapped
 
 
 class Ticket:
@@ -135,9 +151,12 @@ class InfServer:
         self.ticket_ttl_flushes = ticket_ttl_flushes
         self.tickets_expired = 0
         self._next_id = 0
-        # forwards: single-model fast path + vmap-over-models grouped path
-        self._act = jax.jit(self.policy.act)
-        self._grouped_act = jax.jit(jax.vmap(self.policy.act))
+        # forwards: single-model fast path + vmap-over-models grouped path.
+        # Both trace inside a dispatch.serving() scope so the inference-only
+        # precision mode (REPRO_KERNELS_INFER=bf16) applies to the serving
+        # fleet's forwards and never to a learner's training trace.
+        self._act = _serving_jit(self.policy.act)
+        self._grouped_act = _serving_jit(jax.vmap(self.policy.act))
         # telemetry
         self.requests_served = 0
         self.batches_run = 0
@@ -473,4 +492,8 @@ class InfServer:
             "sharded": self.mesh is not None,
             "mesh_shape": (dict(self.mesh.shape)
                            if self.mesh is not None else None),
+            # which kernel tier the forwards actually traced to (a
+            # misrouted reference fallback shows up here in production)
+            "infer_mode": os.environ.get("REPRO_KERNELS_INFER") or None,
+            "dispatch": dispatch.stats(),
         }

@@ -1,18 +1,31 @@
 """Kernel dispatch: route the learner hot ops to their Pallas kernels.
 
-One chokepoint decides, per call, whether an op runs as
+One chokepoint decides, per call, which tier an op runs as:
 
   * ``compiled``  — the Pallas kernel lowered for the accelerator
                     (TPU/GPU backends),
   * ``interpret`` — the same kernel body executed by the Pallas
                     interpreter on CPU (bit-accurate wiring check; slow),
-  * ``reference`` — the pure-jnp oracle (XLA-fused; the CPU fast path).
+  * ``fast``      — the production jnp path on hosts without an
+                    accelerator: chunked attention with windowed
+                    key-slicing, closed-form-VJP scans. XLA-fused and
+                    memory-safe, but algorithmically tiled like the
+                    kernels.
+  * ``reference`` — the pure-jnp *oracle*: full O(T^2) score matrix,
+                    GQA by repeat, autodiff backward. What everything is
+                    measured against; never the production path.
 
 The decision is made at *trace time* from static information only (mode
 string, default backend, shapes, dtypes), so every dispatch function is
-jit-transparent: no traced value ever influences routing, and a jitted
-train step caches one executable per (mode, shape) like any other static
-argument.
+jit-transparent: no traced value ever influences routing.
+
+Trace-time caveat: the mode is NOT part of jax.jit's compilation cache
+key (that key is the wrapped function object + argument avals). Jitting
+the *same function object* under two different ``force()`` modes silently
+reuses whichever executable was traced first. Anything that compares
+modes (tests, benchmarks) must build a fresh closure per mode before
+jitting — see ``benchmarks/run.py:learner_throughput``. Production code
+picks one mode per process, so this never bites outside harnesses.
 
 Mode selection (checked in order):
 
@@ -23,23 +36,39 @@ Mode selection (checked in order):
 
 Modes:
 
-  ``auto``       Pallas on TPU/GPU, reference on CPU. The production
-                 setting: tier-1 CPU tests and CPU benchmarks run the
-                 XLA-fused references, accelerators get the fused kernels.
+  ``auto``       Pallas on TPU/GPU, the fast tier on CPU. The production
+                 setting.
   ``pallas``     Pallas everywhere (interpret mode on CPU). For soak
                  testing the kernel path.
   ``interpret``  Pallas interpreter everywhere, even on accelerators.
                  For parity tests.
-  ``reference``  jnp references everywhere, even on accelerators. The
+  ``reference``  the oracles everywhere. The measuring stick — and the
                  escape hatch if a kernel misbehaves in production.
+
+Inference-only precision (`REPRO_KERNELS_INFER=bf16`): inside a
+``serving()`` scope (the InfServer wraps its jitted act functions in
+one) forwards run with bf16 matmul inputs and fp32 accumulation —
+the serving fleet gets a cheaper forward without touching training
+numerics. Outside a serving scope the flag is inert.
 
 Block sizes are selected per shape from a small VMEM budget model (see
 ``_pick_block``): the largest power of two that fits both the dimension
 and the per-block byte budget, floored at the dtype's sublane tile.
+The backward runs under a separate, halved budget
+(``attention_bwd_blocks``): the dk/dv accumulators and the score +
+dscore tiles double the working set vs the forward.
+
+Every resolution is counted in a process-wide telemetry counter —
+``stats()`` returns ``{"op|tier|detail": count}`` so a misrouted
+reference fallback shows up in learner/InfServer stats, not just in
+benchmarks. Counts are *trace-time* events: under jit an op is counted
+once per compilation, not once per step.
 """
 from __future__ import annotations
 
+import collections
 import os
+import threading
 from contextlib import contextmanager
 
 import jax
@@ -47,16 +76,30 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention.ops import flash_attention as _flash_attention
 from repro.kernels.flash_attention.ref import attention_ref as _attention_ref
+from repro.kernels.flash_attention.ref import (
+    attention_ref_chunked as _attention_chunked,
+)
 from repro.kernels.rmsnorm.ops import rmsnorm as _rmsnorm_pallas
 from repro.kernels.rmsnorm.ref import rmsnorm_ref as _rmsnorm_ref
 from repro.kernels.vtrace_scan.ops import reverse_discounted_scan as _scan_pallas
+from repro.kernels.vtrace_scan.ops import (
+    reverse_discounted_scan_fast as _scan_fast,
+)
 from repro.kernels.vtrace_scan.ref import reverse_discounted_scan_ref as _scan_ref
 
 MODES = ("auto", "pallas", "interpret", "reference")
+INFER_MODES = ("bf16",)
 
 # process-wide so the production escape hatch (set_mode('reference'))
 # applies on every thread that dispatches ops, not just the caller's
 _forced = None
+
+# serving scope is per-thread: the InfServer's act path must not flip the
+# learner thread's precision
+_serving = threading.local()
+
+_stats_lock = threading.Lock()
+_stats = collections.Counter()
 
 
 def mode() -> str:
@@ -91,19 +134,78 @@ def force(m):
 
 
 def resolve() -> str:
-    """'compiled' | 'interpret' | 'reference' for the current call site."""
+    """'compiled' | 'interpret' | 'fast' | 'reference' for this call site."""
     m = mode()
     if m in ("reference", "interpret"):
         return m
     on_accel = jax.default_backend() in ("tpu", "gpu")
     if m == "pallas":
         return "compiled" if on_accel else "interpret"
-    return "compiled" if on_accel else "reference"      # auto
+    return "compiled" if on_accel else "fast"           # auto
 
 
 def use_pallas() -> bool:
     """True when ops route to the kernel path (compiled or interpret)."""
-    return resolve() != "reference"
+    return resolve() in ("compiled", "interpret")
+
+
+# -- inference-only precision --------------------------------------------------
+
+@contextmanager
+def serving():
+    """Marks the enclosed trace as inference-only (the InfServer act path).
+
+    Inside this scope `infer_mode()` reports the `REPRO_KERNELS_INFER`
+    setting; outside it always returns None, so training traces can never
+    pick up the reduced-precision path. Thread-local: a learner thread
+    tracing concurrently is unaffected.
+    """
+    prev = getattr(_serving, "active", False)
+    _serving.active = True
+    try:
+        yield
+    finally:
+        _serving.active = prev
+
+
+def infer_mode():
+    """'bf16' inside a serving() scope with REPRO_KERNELS_INFER=bf16,
+    else None. Trace-time static, like mode()."""
+    if not getattr(_serving, "active", False):
+        return None
+    m = os.environ.get("REPRO_KERNELS_INFER", "")
+    return m if m in INFER_MODES else None
+
+
+# -- telemetry -----------------------------------------------------------------
+
+def note(op: str, tier: str, detail=()) -> None:
+    """Count one dispatch resolution: key = 'op|tier[|detail...]'.
+
+    Public so ops with a native fast path outside this module (e.g. the
+    model layer's chunked attention) can register where they routed."""
+    key = "|".join((op, tier) + tuple(detail))
+    with _stats_lock:
+        _stats[key] += 1
+
+
+def stats(reset: bool = False) -> dict:
+    """Snapshot of dispatch resolutions: {'op|tier|detail': count}.
+
+    Counts trace-time events — under jit, one count per compilation (per
+    static shape/mode), not per executed step. An unexpected
+    'attention|reference|...' key in a production process is the signal
+    the escape hatch (or a misroute) is active."""
+    with _stats_lock:
+        snap = dict(_stats)
+        if reset:
+            _stats.clear()
+    return snap
+
+
+def stats_reset() -> None:
+    with _stats_lock:
+        _stats.clear()
 
 
 # -- per-shape block selection -------------------------------------------------
@@ -142,6 +244,23 @@ def attention_blocks(Tq: int, Tk: int, d: int, dtype) -> tuple:
     return bq, bk
 
 
+def attention_bwd_blocks(Tq: int, Tk: int, d: int, dtype) -> tuple:
+    """Block sizes for the backward kernels, under a halved budget.
+
+    The backward working set per tile is roughly double the forward's:
+    the dk/dv passes hold TWO (block_k, d) fp32 accumulators, and the
+    recompute materializes both the score tile and its gradient
+    (p and ds, each (block_q, block_k)) — so each dimension gets a
+    1 MiB budget instead of the forward's 2 MiB.
+    """
+    floor = _sublane_floor(dtype)
+    bq = _pick_block(Tq, d * 4, floor=floor, budget=1 << 20)
+    # rows of a k-block carry dk+dv accumulator rows (2*d fp32) plus a
+    # p and a ds column slice (2*bq fp32)
+    bk = _pick_block(Tk, (2 * d + 2 * bq) * 4, floor=floor, budget=1 << 20)
+    return bq, bk
+
+
 def scan_block(B: int, T: int) -> int:
     return _pick_block(B, T * 4)
 
@@ -151,11 +270,13 @@ def scan_block(B: int, T: int) -> int:
 def rmsnorm(x, w, *, eps: float = 1e-6):
     """Fused RMSNorm over the last axis. x: (..., d); w: (d,)."""
     impl = resolve()
-    if impl == "reference":
+    if impl in ("reference", "fast"):
+        note("rmsnorm", impl)
         return _rmsnorm_ref(x, w, eps)
     R = max(1, x.size // x.shape[-1])
-    return _rmsnorm_pallas(x, w, eps=eps,
-                           block_r=rmsnorm_block(R, x.shape[-1]),
+    br = rmsnorm_block(R, x.shape[-1])
+    note("rmsnorm", impl, (f"br={br}",))
+    return _rmsnorm_pallas(x, w, eps=eps, block_r=br,
                            interpret=impl == "interpret")
 
 
@@ -163,16 +284,42 @@ def attention(q, k, v, *, scale, causal=True, window=0, cap=0.0):
     """Fused attention, kernel layout: q (B, H, Tq, d); k, v (B, KV, Tk, d).
 
     Callers with the model layout (B, T, H, d) transpose at the call site
-    (see models/attention.chunked_attend). Backward runs through the
-    memory-safe chunked reference (custom_vjp recompute).
+    (see models/attention.chunked_attend). On the kernel tiers the
+    backward runs the Pallas dq/dk/dv recompute kernels; the fast tier's
+    backward is XLA autodiff through the chunked path; the reference tier
+    is the full-T^2 oracle, forward and backward.
     """
     impl = resolve()
+    inf = infer_mode()
     if impl == "reference":
+        note("attention", impl)
         return _attention_ref(q, k, v, scale=scale, causal=causal,
                               window=window, cap=cap)
+    if impl == "fast":
+        note("attention", impl, ("bf16",) if inf else ())
+        if inf == "bf16":
+            # input-rounding emulation of the mixed kernel path: CPU has no
+            # native bf16 matmul, so cast inputs and compute as usual
+            o = _attention_chunked(q.astype(jnp.bfloat16),
+                                   k.astype(jnp.bfloat16),
+                                   v.astype(jnp.bfloat16), scale=scale,
+                                   causal=causal, window=window, cap=cap)
+            return o.astype(q.dtype)
+        return _attention_chunked(q, k, v, scale=scale, causal=causal,
+                                  window=window, cap=cap)
     bq, bk = attention_blocks(q.shape[2], k.shape[2], q.shape[3], q.dtype)
+    bqb, bkb = attention_bwd_blocks(q.shape[2], k.shape[2], q.shape[3],
+                                    q.dtype)
+    mixed = inf == "bf16"
+    note("attention", impl,
+         (f"bq={bq}", f"bk={bk}", f"bwd={bqb}x{bkb}") +
+         (("bf16",) if mixed else ()))
+    if mixed:
+        q = q.astype(jnp.bfloat16)
+        k = k.astype(jnp.bfloat16)
+        v = v.astype(jnp.bfloat16)
     return _flash_attention(q, k, v, scale, causal, window, cap, bq, bk,
-                            impl == "interpret")
+                            impl == "interpret", bqb, bkb, mixed)
 
 
 def reverse_scan(deltas, decays, init=None):
@@ -180,13 +327,21 @@ def reverse_scan(deltas, decays, init=None):
 
     The one primitive behind GAE, TD(lambda), discounted returns and the
     V-trace correction sum (fused over the whole (B, T) minibatch instead
-    of a lax.scan over T).
+    of a lax.scan over T). Every tier's backward is the closed-form
+    transpose (the same scan on flipped arrays) except the reference
+    oracle, which keeps autodiff-through-lax.scan.
     """
     impl = resolve()
     if init is None:
         init = jnp.zeros((deltas.shape[0],), jnp.float32)
     if impl == "reference":
+        note("reverse_scan", impl)
         return _scan_ref(deltas, decays, init)
+    if impl == "fast":
+        note("reverse_scan", impl)
+        return _scan_fast(deltas, decays, init)
     B, T = deltas.shape
-    return _scan_pallas(deltas, decays, init, block_b=scan_block(B, T),
+    bb = scan_block(B, T)
+    note("reverse_scan", impl, (f"bb={bb}",))
+    return _scan_pallas(deltas, decays, init, block_b=bb,
                         interpret=impl == "interpret")

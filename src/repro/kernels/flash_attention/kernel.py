@@ -1,7 +1,7 @@
-"""Flash-attention forward kernel (TPU Pallas).
+"""Flash-attention forward + backward kernels (TPU Pallas).
 
 TPU adaptation of the FlashAttention insight (online softmax over KV tiles so
-the O(T^2) score matrix never leaves VMEM): the grid is
+the O(T^2) score matrix never leaves VMEM): the forward grid is
 (batch, q_heads, num_q_blocks, num_kv_blocks) with the KV-block dimension
 innermost, so the (block_q, head_dim) fp32 accumulator + running max/sum live
 in VMEM scratch across the KV sweep and the MXU sees (block_q x head_dim) @
@@ -9,6 +9,25 @@ in VMEM scratch across the KV sweep and the MXU sees (block_q x head_dim) @
 by default). GQA is handled in the BlockSpec index maps (K/V indexed by
 h // group), so no KV repeat ever materializes. Causal, sliding-window and
 gemma2 logit-softcap masking are applied in-kernel.
+
+The backward is the FlashAttention-2 recompute scheme — no O(T^2) residual
+is ever stored, only the forward output and the per-row logsumexp:
+
+  preprocess   delta_i = rowsum(dO_i * O_i)                 grid (B, H, nq)
+  dq pass      recompute the (bq, bk) score tile, then
+               dq_i += ds @ K * scale                       grid (B, H, nq, nk)
+  dk/dv pass   same recompute swept the other way:
+               dk_j += ds^T @ Q * scale, dv_j += p^T @ dO   grid (B, H, nk, nq)
+
+with ds = p * (dp - delta) and the softcap chain rule ds *= 1 - tanh^2.
+Fully-masked tiles (causal blocks above the diagonal, sliding-window blocks
+behind the horizon) are skipped with a `pl.when` guard, so a windowed
+backward does O(T * window) work like the forward.
+
+The per-tile math lives in `_tile_grads`, which the dq kernel, the dk/dv
+kernel AND the blockwise jnp mirror (`ref.attention_ref_bwd`) all call —
+interpret-mode backward output is bit-identical to the mirror by
+construction, which is what makes the kernel wiring bit-auditable on CPU.
 """
 from __future__ import annotations
 
@@ -22,9 +41,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -2.0 ** 30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-                  scale, causal, window, cap, block_q, block_k, num_kv_blocks,
-                  kv_len):
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                  *, scale, causal, window, cap, block_q, block_k,
+                  num_kv_blocks, kv_len, mixed):
     i = pl.program_id(2)          # q block
     j = pl.program_id(3)          # kv block (innermost)
 
@@ -34,9 +53,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)                    # (bq, d)
-    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
-    v = v_ref[0, 0].astype(jnp.float32)
+    # mixed (inference-only bf16 mode): feed the MXU the input dtype and
+    # accumulate fp32 via preferred_element_type — training always upcasts
+    q = q_ref[0, 0] if mixed else q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0] if mixed else k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0] if mixed else v_ref[0, 0].astype(jnp.float32)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -60,7 +81,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     alpha = jnp.exp(m_prev - m_new)
     l_new = alpha * l_prev + jnp.sum(p, axis=1)
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        p.astype(v.dtype) if mixed else p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
     m_ref[...] = m_new
     l_ref[...] = l_new
 
@@ -69,14 +91,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         l = l_ref[...]
         safe = jnp.where(l == 0.0, 1.0, l)                 # fully-masked rows
         o_ref[0, 0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        # logsumexp residual for the backward recompute. The l > 0 guard
+        # matters: a fully-masked row stores lse = 0, so the backward's
+        # p = exp(NEG_INF - 0) is exactly 0 (storing m + log(l) would give
+        # exp(NEG_INF - NEG_INF) = 1 and poison dk/dv with ghost weights).
+        lse_ref[0, 0, ...] = jnp.where(l > 0.0, m_ref[...] + jnp.log(safe), 0.0)
 
 
 def flash_attention_fwd(q, k, v, *, scale, causal=True, window=0, cap=0.0,
-                        block_q=128, block_k=128, kv_len=None, interpret=False):
-    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d). Returns (B, H, Tq, d).
+                        block_q=128, block_k=128, kv_len=None, interpret=False,
+                        mixed=False):
+    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d).
 
-    Tq/Tk are padded to block multiples by the ops.py wrapper; `kv_len` is
-    the true (unpadded) KV length for tail masking.
+    Returns (o (B, H, Tq, d), lse (B, H, Tq) fp32). Tq/Tk are padded to
+    block multiples by the ops.py wrapper; `kv_len` is the true (unpadded)
+    KV length for tail masking. `mixed` keeps the matmul inputs in the
+    arrays' dtype (bf16 serving) with fp32 accumulation.
     """
     B, H, Tq, d = q.shape
     KV, Tk = k.shape[1], k.shape[2]
@@ -88,7 +118,7 @@ def flash_attention_fwd(q, k, v, *, scale, causal=True, window=0, cap=0.0,
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window, cap=cap,
         block_q=block_q, block_k=block_k, num_kv_blocks=nk,
-        kv_len=kv_len if kv_len is not None else Tk)
+        kv_len=kv_len if kv_len is not None else Tk, mixed=mixed)
 
     return pl.pallas_call(
         kernel,
@@ -98,8 +128,14 @@ def flash_attention_fwd(q, k, v, *, scale, causal=True, window=0, cap=0.0,
             pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
             pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Tq, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Tq, d), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Tq), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q, d), jnp.float32),
             pltpu.VMEM((block_q,), jnp.float32),
@@ -107,3 +143,224 @@ def flash_attention_fwd(q, k, v, *, scale, causal=True, window=0, cap=0.0,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# -- backward ------------------------------------------------------------------
+
+def _tile_grads(q, k, v, do, lse, delta, i, j, *, scale, causal, window, cap,
+                block_q, block_k, kv_len):
+    """Score-tile recompute + dscore for one (q block i, kv block j).
+
+    q, do: (block_q, d) fp32; k, v: (block_k, d) fp32; lse, delta:
+    (block_q,) fp32. Returns (p, ds), both (block_q, block_k) fp32.
+
+    This exact function body is executed by the Pallas dq and dk/dv kernels
+    AND by the blockwise jnp mirror `ref.attention_ref_bwd` — same
+    primitives in the same order — so interpret mode is bit-comparable
+    against the mirror.
+    """
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        t = jnp.tanh(s / cap)
+        s = t * cap
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+    # p is the true softmax weight (masked entries: exp(NEG_INF - lse) = 0;
+    # fully-masked rows carry lse = 0 from the forward, same result)
+    p = jnp.exp(s - lse[:, None])
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    if cap:
+        ds = ds * (1.0 - t * t)    # d tanh: masked entries already have ds = 0
+    return p, ds
+
+
+def _tile_live(i, j, *, causal, window, block_q, block_k):
+    """False iff tile (i, j) is entirely masked (skippable). i/j may be
+    traced program ids or python ints."""
+    live = True
+    if causal:       # min k_pos > max q_pos: block above the diagonal
+        live = (j * block_k) <= (i * block_q + block_q - 1)
+    if window:       # min q_pos - max k_pos >= window: behind the horizon
+        w_live = (i * block_q) - (j * block_k + block_k - 1) < window
+        live = jnp.logical_and(live, w_live) if causal else w_live
+    return live
+
+
+def _bwd_preprocess_kernel(o_ref, do_ref, delta_ref):
+    o = o_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    delta_ref[0, 0, ...] = jnp.sum(o * do, axis=1)
+
+
+def flash_attention_bwd_preprocess(o, do, *, block_q=128, interpret=False):
+    """delta = rowsum(dO * O): (B, H, Tq) fp32, the softmax-grad row term."""
+    B, H, Tq, d = o.shape
+    return pl.pallas_call(
+        _bwd_preprocess_kernel,
+        grid=(B, H, Tq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i: (b, h, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q), lambda b, h, i: (b, h, i)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq), jnp.float32),
+        interpret=interpret,
+    )(o, do)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   dq_acc, *, scale, causal, window, cap, block_q, block_k,
+                   num_kv_blocks, kv_len):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block (innermost: dq accumulates)
+
+    @pl.when(j == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    def _compute():
+        k = k_ref[0, 0].astype(jnp.float32)
+        _, ds = _tile_grads(
+            q_ref[0, 0].astype(jnp.float32), k,
+            v_ref[0, 0].astype(jnp.float32),
+            do_ref[0, 0].astype(jnp.float32),
+            lse_ref[0, 0], delta_ref[0, 0], i, j,
+            scale=scale, causal=causal, window=window, cap=cap,
+            block_q=block_q, block_k=block_k, kv_len=kv_len)
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    if causal or window:     # skip tiles that are entirely masked
+        pl.when(_tile_live(i, j, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k))(_compute)
+    else:
+        _compute()
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _done():
+        dq_ref[0, 0, ...] = dq_acc[...]
+
+
+def flash_attention_bwd_dq(q, k, v, do, lse, delta, *, scale, causal, window,
+                           cap, block_q=128, block_k=128, kv_len=None,
+                           interpret=False):
+    """dq (B, H, Tq, d) fp32. Recomputes each score tile from q/k + lse."""
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Tq // block_q, Tk // block_k
+    kernel = functools.partial(
+        _bwd_dq_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        kv_len=kv_len if kv_len is not None else Tk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Tq, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, scale, causal, window,
+                    cap, block_q, block_k, num_q_blocks, kv_len):
+    j = pl.program_id(2)          # kv block
+    i = pl.program_id(3)          # q block (innermost: dk/dv accumulate)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        p, ds = _tile_grads(
+            q, k_ref[0, 0].astype(jnp.float32),
+            v_ref[0, 0].astype(jnp.float32), do,
+            lse_ref[0, 0], delta_ref[0, 0], i, j,
+            scale=scale, causal=causal, window=window, cap=cap,
+            block_q=block_q, block_k=block_k, kv_len=kv_len)
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+
+    if causal or window:
+        pl.when(_tile_live(i, j, causal=causal, window=window,
+                           block_q=block_q, block_k=block_k))(_compute)
+    else:
+        _compute()
+
+    @pl.when(i == num_q_blocks - 1)
+    def _done():
+        dk_ref[0, 0, ...] = dk_acc[...]
+        dv_ref[0, 0, ...] = dv_acc[...]
+
+
+def flash_attention_bwd_dkv(q, k, v, do, lse, delta, *, scale, causal, window,
+                            cap, block_q=128, block_k=128, kv_len=None,
+                            interpret=False):
+    """Per-q-head dk, dv: both (B, H, Tk, d) fp32.
+
+    GQA: the kernel keeps one (bk, d) accumulator per *query* head — the
+    sequential TPU grid revisits output blocks in grid order, so summing
+    the G query heads of a group into one KV-head block would interleave
+    other blocks between visits. The ops.py wrapper does the cheap
+    (B, KV, G, Tk, d).sum(2) reduction instead.
+    """
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Tq // block_q, Tk // block_k
+    kernel = functools.partial(
+        _bwd_dkv_kernel, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=block_q, block_k=block_k, num_q_blocks=nq,
+        kv_len=kv_len if kv_len is not None else Tk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, j, i: (b, h, i)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, j, i: (b, h, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, j, i: (b, h, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Tk, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Tk, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, d), jnp.float32),
+            pltpu.VMEM((block_k, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)

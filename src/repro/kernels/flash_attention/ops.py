@@ -1,7 +1,12 @@
-"""Jit'd wrapper for the flash-attention kernel: padding to block multiples,
-GQA layout handling, and a custom_vjp whose backward pass recomputes through
-the memory-safe chunked reference (flash backward is a follow-up kernel;
-recompute-backward keeps training correct and HBM-light meanwhile)."""
+"""Jit'd wrapper for the flash-attention kernels: padding to block multiples,
+GQA layout handling, and a custom_vjp whose backward runs the real Pallas
+dq/dk/dv kernels (FlashAttention-2 recompute tiling — residuals are just the
+forward output and the per-row logsumexp, never an O(T^2) tensor).
+
+Padding safety in the backward: dO is zero on padded q rows, so their delta
+and dp vanish and they contribute nothing to dq/dk/dv; padded k rows are
+masked by kv_len in the recomputed tile (p = ds = 0). Padded lse entries are
+0 from the forward's fully-masked-row guard, which keeps exp() finite."""
 from __future__ import annotations
 
 import functools
@@ -9,8 +14,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention.kernel import flash_attention_fwd
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_attention.kernel import (
+    flash_attention_bwd_dkv,
+    flash_attention_bwd_dq,
+    flash_attention_bwd_preprocess,
+    flash_attention_fwd,
+)
 
 
 def _pad_to(x, axis, mult):
@@ -23,10 +32,9 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def flash_attention(q, k, v, scale, causal=True, window=0, cap=0.0,
-                    block_q=128, block_k=128, interpret=False):
-    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d) -> (B, H, Tq, d)."""
+def _run_fwd(q, k, v, scale, causal, window, cap, block_q, block_k, interpret,
+             mixed):
+    """Pad, launch the forward kernel, slice. Returns (o, lse) at true Tq."""
     Tq, Tk = q.shape[2], k.shape[2]
     bq = min(block_q, max(Tq, 8))
     bk = min(block_k, max(Tk, 8))
@@ -34,27 +42,65 @@ def flash_attention(q, k, v, scale, causal=True, window=0, cap=0.0,
     kp = _pad_to(k, 2, bk)
     vp = _pad_to(v, 2, bk)
     # padded q rows attend to real keys only (kv_len mask) and are sliced off.
-    o = flash_attention_fwd(qp, kp, vp, scale=scale, causal=causal,
-                            window=window, cap=cap, block_q=bq, block_k=bk,
-                            kv_len=Tk, interpret=interpret)
-    return o[:, :, :Tq]
+    o, lse = flash_attention_fwd(qp, kp, vp, scale=scale, causal=causal,
+                                 window=window, cap=cap, block_q=bq,
+                                 block_k=bk, kv_len=Tk, interpret=interpret,
+                                 mixed=mixed)
+    return o[:, :, :Tq], lse[:, :, :Tq]
 
 
-def _fwd(q, k, v, scale, causal, window, cap, block_q, block_k, interpret):
-    o = flash_attention(q, k, v, scale, causal, window, cap, block_q, block_k,
-                        interpret)
-    return o, (q, k, v)
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11, 12))
+def flash_attention(q, k, v, scale, causal=True, window=0, cap=0.0,
+                    block_q=128, block_k=128, interpret=False,
+                    block_q_bwd=None, block_k_bwd=None, mixed=False):
+    """q: (B, H, Tq, d); k, v: (B, KV, Tk, d) -> (B, H, Tq, d).
+
+    block_q_bwd/block_k_bwd size the backward kernels' tiles (their VMEM
+    working set differs from the forward's — see
+    `dispatch.attention_bwd_blocks`); they default to the forward blocks.
+    `mixed` runs the matmuls in the input dtype with fp32 accumulation
+    (inference-only; the backward always recomputes in fp32)."""
+    o, _ = _run_fwd(q, k, v, scale, causal, window, cap, block_q, block_k,
+                    interpret, mixed)
+    return o
 
 
-def _bwd(scale, causal, window, cap, block_q, block_k, interpret, res, g):
-    q, k, v = res
+def _fwd(q, k, v, scale, causal, window, cap, block_q, block_k, interpret,
+         block_q_bwd, block_k_bwd, mixed):
+    o, lse = _run_fwd(q, k, v, scale, causal, window, cap, block_q, block_k,
+                      interpret, mixed)
+    return o, (q, k, v, o, lse)
 
-    def f(q, k, v):
-        return attention_ref(q, k, v, scale=scale, causal=causal,
-                             window=window, cap=cap)
 
-    _, vjp = jax.vjp(f, q, k, v)
-    return vjp(g)
+def _bwd(scale, causal, window, cap, block_q, block_k, interpret,
+         block_q_bwd, block_k_bwd, mixed, res, g):
+    q, k, v, o, lse = res
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q_bwd or block_q, max(Tq, 8))
+    bk = min(block_k_bwd or block_k, max(Tk, 8))
+    qp = _pad_to(q, 2, bq)
+    op = _pad_to(o, 2, bq)
+    gp = _pad_to(g, 2, bq)
+    lsep = _pad_to(lse, 2, bq)
+    kp = _pad_to(k, 2, bk)
+    vp = _pad_to(v, 2, bk)
+    kw = dict(scale=scale, causal=causal, window=window, cap=cap,
+              block_q=bq, block_k=bk, kv_len=Tk, interpret=interpret)
+    delta = flash_attention_bwd_preprocess(op, gp, block_q=bq,
+                                           interpret=interpret)
+    dq = flash_attention_bwd_dq(qp, kp, vp, gp, lsep, delta, **kw)
+    dkh, dvh = flash_attention_bwd_dkv(qp, kp, vp, gp, lsep, delta, **kw)
+    # GQA: kernels emit per-q-head dk/dv; sum each group's G query heads
+    # into its KV head (head h of group (h // G, h % G) — consecutive).
+    Tkp = dkh.shape[2]
+    dk = dkh.reshape(B, KV, G, Tkp, d).sum(2)
+    dv = dvh.reshape(B, KV, G, Tkp, d).sum(2)
+    return (dq[:, :, :Tq].astype(q.dtype),
+            dk[:, :, :Tk].astype(k.dtype),
+            dv[:, :, :Tk].astype(v.dtype))
 
 
 flash_attention.defvjp(_fwd, _bwd)

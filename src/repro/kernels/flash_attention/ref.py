@@ -1,4 +1,20 @@
-"""Pure-jnp oracle for the flash-attention kernel."""
+"""Pure-jnp oracles + the production CPU fast path for flash-attention.
+
+Three tiers live here:
+
+- `attention_ref` — the full-T^2 oracle: materializes the (Tq, Tk) score
+  matrix, GQA by `jnp.repeat`, fp32 softmax. The dispatch layer's
+  "reference" tier; what every kernel and fast path is measured against.
+- `attention_ref_chunked` — the "fast" tier on hosts without an
+  accelerator: lax.scan over query blocks (O(block_q * Tk) live scores),
+  and when a causal sliding window is active each block attends to a
+  dynamic slice of block_q + window keys instead of all Tk — the same
+  tile-skipping the Pallas kernels do with `pl.when` guards.
+- `attention_ref_bwd` — the blockwise backward mirror for bit-auditing:
+  executes the kernels' `_tile_grads` helper tile-by-tile with the same
+  primitives in the same accumulation order as the interpret-mode Pallas
+  backward, so tests can `np.array_equal` the two.
+"""
 from __future__ import annotations
 
 import jax
@@ -31,3 +47,134 @@ def attention_ref(q, k, v, *, scale, causal=True, window=0, cap=0.0,
     s = jnp.where(mask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_ref_chunked(q, k, v, *, scale, causal=True, window=0, cap=0.0,
+                          kv_len=None, block_q=512):
+    """Chunked jnp attention in kernel layout — the CPU "fast" tier.
+
+    Scans query blocks so only an O(block_q, Tk) score block is live, and
+    with a causal sliding window each block's keys come from a
+    block_q + window dynamic slice (masked-out key blocks are never
+    touched — the jnp analogue of the kernels' dead-tile skip). Falls back
+    to the one-shot oracle when the sequence doesn't split."""
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    if Tq <= block_q or Tq % block_q:
+        return attention_ref(q, k, v, scale=scale, causal=causal,
+                             window=window, cap=cap, kv_len=kv_len)
+    kf = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    n = Tq // block_q
+    qc = q.astype(jnp.float32).reshape(B, H, n, block_q, d).transpose(2, 0, 1, 3, 4)
+    span = block_q + window
+    windowed = causal and window and span < Tk
+
+    def body(_, xs):
+        qi, i = xs
+        if windowed:
+            start = jnp.clip((i + 1) * block_q - span, 0, Tk - span)
+            ks = jax.lax.dynamic_slice_in_dim(kf, start, span, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(vf, start, span, axis=2)
+            kp = start + jnp.arange(span)[None, :]
+        else:
+            ks, vs = kf, vf
+            kp = jnp.arange(Tk)[None, :]
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, ks) * scale
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        qp = i * block_q + jnp.arange(block_q)[:, None]
+        mask = jnp.ones((block_q, kp.shape[1]), bool)
+        if kv_len is not None:
+            mask &= kp < kv_len
+        if causal:
+            mask &= kp <= qp
+        if window:
+            mask &= qp - kp < window
+        s = jnp.where(mask, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return None, jnp.einsum("bhqk,bhkd->bhqd", w, vs)
+
+    _, oc = jax.lax.scan(body, None, (qc, jnp.arange(n)))
+    return oc.transpose(1, 2, 0, 3, 4).reshape(B, H, Tq, d).astype(q.dtype)
+
+
+def attention_ref_bwd(q, k, v, o, lse, do, *, scale, causal=True, window=0,
+                      cap=0.0, block_q=128, block_k=128, kv_len=None):
+    """Blockwise jnp mirror of the Pallas backward — the bit-audit oracle.
+
+    Inputs must already be padded to block multiples (as ops.py pads before
+    launching the kernels). Runs the exact `_tile_grads` tile math the dq
+    and dk/dv kernels run — same dot_general dimension numbers, same
+    accumulation order (dq over ascending j, dk/dv over ascending i), same
+    dead-tile skips — so the interpret-mode kernel outputs are bit-identical
+    to these. Returns (dq, dk_per_head, dv_per_head), all fp32, dk/dv per
+    *query* head (B, H, Tk, d), i.e. before the GQA group-sum.
+
+    Python-loops over tiles, but each tile's math runs as ONE jitted step
+    (the interpret-mode Pallas kernel body is also one jitted program, so
+    eager per-primitive evaluation would see different XLA reduction
+    fusion and drift by ~1 ulp — jitting the tile recovers bit-identity).
+    A test oracle for small shapes, not a production path."""
+    import functools
+
+    import numpy as np
+
+    from repro.kernels.flash_attention.kernel import _tile_grads, _tile_live
+
+    B, H, Tq, d = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    nq, nk = Tq // block_q, Tk // block_k
+    if kv_len is None:
+        kv_len = Tk
+    f32 = jnp.float32
+
+    @functools.partial(jax.jit, static_argnames=("acc_dk",))
+    def _tile_step(qt, kt, vt, dot_t, ot, lset, i, j, dq_acc, dk_acc, dv_acc,
+                   acc_dk=True):
+        dot = jax.lax.dot_general
+        delta = jnp.sum(ot * dot_t, axis=1)   # as _bwd_preprocess_kernel
+        p, ds = _tile_grads(
+            qt, kt, vt, dot_t, lset, delta, i, j, scale=scale,
+            causal=causal, window=window, cap=cap,
+            block_q=block_q, block_k=block_k, kv_len=kv_len)
+        dq_acc = dq_acc + dot(ds, kt, (((1,), (0,)), ((), ())),
+                              preferred_element_type=f32) * scale
+        if acc_dk:
+            dv_acc = dv_acc + dot(p, dot_t, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=f32)
+            dk_acc = dk_acc + dot(ds, qt, (((0,), (0,)), ((), ())),
+                                  preferred_element_type=f32) * scale
+        return dq_acc, dk_acc, dv_acc
+
+    dq = np.zeros((B, H, Tq, d), np.float32)
+    dkh = np.zeros((B, H, Tk, d), np.float32)
+    dvh = np.zeros((B, H, Tk, d), np.float32)
+    for b in range(B):
+        for h in range(H):
+            tiles_k = [(k[b, h // G, j * block_k:(j + 1) * block_k].astype(f32),
+                        v[b, h // G, j * block_k:(j + 1) * block_k].astype(f32))
+                       for j in range(nk)]
+            for i in range(nq):
+                qs = slice(i * block_q, (i + 1) * block_q)
+                qt = q[b, h, qs].astype(f32)
+                dot_t = do[b, h, qs].astype(f32)
+                ot = o[b, h, qs].astype(f32)
+                lset = lse[b, h, qs]
+                dq_acc = jnp.zeros((block_q, d), f32)
+                for j in range(nk):
+                    if not bool(_tile_live(i, j, causal=causal, window=window,
+                                           block_q=block_q, block_k=block_k)):
+                        continue
+                    kt, vt = tiles_k[j]
+                    ks_ = slice(j * block_k, (j + 1) * block_k)
+                    dq_acc, dk_new, dv_new = _tile_step(
+                        qt, kt, vt, dot_t, ot, lset,
+                        jnp.int32(i), jnp.int32(j), dq_acc,
+                        jnp.asarray(dkh[b, h, ks_]), jnp.asarray(dvh[b, h, ks_]))
+                    dkh[b, h, ks_] = np.asarray(dk_new)
+                    dvh[b, h, ks_] = np.asarray(dv_new)
+                dq[b, h, qs] = np.asarray(dq_acc)
+    return jnp.asarray(dq), jnp.asarray(dkh), jnp.asarray(dvh)

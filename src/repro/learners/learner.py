@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import LeagueMgr
+from repro.kernels import dispatch
 from repro.learners.replay import DataServer
 from repro.params import CachedPuller
 
@@ -99,6 +100,17 @@ class Learner:
                                             _snapshot(self.params),
                                             step=self.step_count)
         return last_metrics
+
+    def stats(self) -> dict:
+        """Learner-side telemetry: step progress, the DataServer's feed
+        rates, and which kernel tier the train step actually traced to
+        (dispatch counts are trace-time — an 'attention|reference|...'
+        key here means the escape hatch or a misroute is live)."""
+        out = {"step_count": self.step_count}
+        if hasattr(self.data_server, "throughput"):
+            out["data_server"] = self.data_server.throughput()
+        out["dispatch"] = dispatch.stats()
+        return out
 
     def end_learning_period(self, reason: str = "period"):
         """Freeze theta into M, adopt theta_{v+1} (paper lifecycle).

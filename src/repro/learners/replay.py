@@ -17,17 +17,26 @@ segments, so differently-shaped runs get comparable memory budgets.
 
 Device feeding: `sample_to_device` returns the minibatch as device arrays
 and overlaps the host->device copy with the learner's compute via a
-double-buffered prefetch — `jax.device_put` is asynchronous on
-accelerators, so staging the *next* minibatch right when it becomes
-known (at `put` in blocking/on-policy mode, right after the current
-sample in uniform mode) means the transfer rides under the current train
-step instead of serializing in front of the next one. Staged batches are
-freshly allocated device buffers each time, so a train step that donates
-its batch argument (`build_*_train_step(donate_batch=True)`) never
-aliases the next staged transfer.
+double-buffered prefetch: the *next* minibatch's rows are gathered under
+the lock the moment they become known (at `put` in blocking/on-policy
+mode, right after the current sample in uniform mode), then the
+`jax.device_put` transfers run on a dedicated staging thread, so the
+copy proceeds while the caller's train step computes — not serialized in
+front of the next `sample_to_device`. Staged batches are freshly
+allocated device buffers each time, so a train step that donates its
+batch argument (`build_*_train_step(donate_batch=True)`) never aliases
+the next staged transfer.
+
+On a CPU backend the overlap is real but small: `device_put` there is a
+same-memory copy whose only concurrent part is the GIL-releasing memcpy,
+and the train step is itself competing for the same cores — expect the
+prefetch win to be a few percent on CPU and to matter on accelerators,
+where the PCIe/ICI transfer genuinely rides under device compute (see
+BENCH_learner.json's host_feed vs prefetch_feed fields).
 """
 from __future__ import annotations
 
+import concurrent.futures
 import threading
 import time
 from typing import List, Optional
@@ -72,7 +81,10 @@ class DataServer:
         self.blocking = blocking
         self.prefetch = prefetch
         self.device = device
-        self._staged = None      # (state_token, row_idx, device_leaves)
+        self._staged = None      # (state_token, batch_rows, idx, Future)
+        # one staging thread: transfers serialize among themselves but
+        # overlap the learner's compute; lazily created at first _stage
+        self._stage_pool: Optional[concurrent.futures.ThreadPoolExecutor] = None
         self.prefetch_hits = 0
         self.prefetch_misses = 0
         self.frames_received = 0
@@ -288,10 +300,19 @@ class DataServer:
         """`for_batch_rows` records which request shape the staged batch
         answers: a batch staged for the on-policy newest-segment request
         (None) must never satisfy an explicit uniform `batch_rows` request —
-        the row *distributions* differ, not just the sizes."""
-        leaves = [jax.device_put(buf[idx], self.device)
-                  for buf in self._buffers]
-        self._staged = (self._state_token(), for_batch_rows, idx, leaves)
+        the row *distributions* differ, not just the sizes.
+
+        The row gather happens here, under the lock (a later `put` must
+        not mutate what we stage — `buf[idx]` fancy-indexing copies); the
+        `device_put` transfers are handed to the staging thread so they
+        overlap the caller's train step instead of running inline."""
+        host_leaves = [buf[idx] for buf in self._buffers]
+        if self._stage_pool is None:
+            self._stage_pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="dataserver-stage")
+        fut = self._stage_pool.submit(
+            lambda: [jax.device_put(x, self.device) for x in host_leaves])
+        self._staged = (self._state_token(), for_batch_rows, idx, fut)
 
     def sample_to_device(self, batch_rows: Optional[int] = None):
         """`sample`, but the minibatch lands as device arrays and the next
@@ -303,7 +324,7 @@ class DataServer:
             staged, self._staged = self._staged, None
             if (staged is not None and staged[0] == self._state_token()
                     and staged[1] == batch_rows):
-                idx, leaves = staged[2], staged[3]
+                idx, leaves = staged[2], staged[3].result()
                 self.prefetch_hits += 1
             else:
                 idx = self._sample_idx(batch_rows)

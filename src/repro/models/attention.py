@@ -72,7 +72,7 @@ def _attend(q, k, v, q_pos, k_pos, *, causal, window, cap, scale, k_valid=None):
 
 
 def chunked_attend(q, k, v, q_pos, k_pos, *, causal, window, cap, scale,
-                   q_chunk=512, unroll=False):
+                   q_chunk=512, unroll=False, _infer_cast=True):
     """Memory-safe attention: `lax.scan` over query chunks so only an
     O(q_chunk * T) score block is ever live (the pure-jnp stand-in for the
     Pallas flash kernel; also its oracle).
@@ -86,16 +86,34 @@ def chunked_attend(q, k, v, q_pos, k_pos, *, causal, window, cap, scale,
     When the kernel dispatch layer routes to Pallas (TPU/GPU, or forced
     interpret/pallas mode), the whole call lowers to the flash-attention
     kernel instead: online softmax over KV tiles in VMEM, GQA via the
-    BlockSpec index maps. Callers here pass per-row contiguous positions
-    (arange + offset) for both q_pos and k_pos, which is exactly the
-    index-based masking the kernel applies."""
+    BlockSpec index maps, backward through the Pallas dq/dk/dv recompute
+    kernels. Under `force('reference')` it lowers to the full-T^2 oracle
+    through the same dispatch seam (the measuring stick — O(T^2) memory).
+    Callers here pass per-row contiguous positions (arange + offset) for
+    both q_pos and k_pos, which is exactly the index-based masking the
+    kernel applies."""
     B, T, H, hd = q.shape
-    if dispatch.use_pallas():
+    impl = dispatch.resolve()
+    if impl != "fast":
         o = dispatch.attention(
             q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
             v.transpose(0, 2, 1, 3), scale=scale, causal=causal,
             window=window, cap=cap)
         return o.transpose(0, 2, 1, 3)
+    infer_bf16 = _infer_cast and dispatch.infer_mode() == "bf16"
+    if _infer_cast:        # the bf16 re-entry already counted itself
+        dispatch.note("attention", "fast", (f"q_chunk={q_chunk}",) +
+                      (("bf16",) if infer_bf16 else ()))
+    if infer_bf16:
+        # inference-only reduced precision: bf16 inputs, fp32 softmax as
+        # usual inside _attend (input-rounding emulation of the mixed
+        # kernel path; CPU has no native bf16 matmul to accumulate in)
+        out_dtype = q.dtype
+        q, k, v = (x.astype(jnp.bfloat16) for x in (q, k, v))
+        o = chunked_attend(q, k, v, q_pos, k_pos, causal=causal,
+                           window=window, cap=cap, scale=scale,
+                           q_chunk=q_chunk, unroll=unroll, _infer_cast=False)
+        return o.astype(out_dtype)
     if T <= q_chunk or T % q_chunk:
         return _attend(q, k, v, q_pos, k_pos, causal=causal, window=window,
                        cap=cap, scale=scale)

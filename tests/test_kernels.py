@@ -140,7 +140,7 @@ def test_rmsnorm_shapes(shape, dtype):
 # Dispatch layer: the routing models/ and rl/ actually use
 # ---------------------------------------------------------------------------
 def test_dispatch_mode_resolution():
-    assert dispatch.resolve() in ("compiled", "interpret", "reference")
+    assert dispatch.resolve() in ("compiled", "interpret", "fast", "reference")
     with dispatch.force("reference"):
         assert dispatch.resolve() == "reference" and not dispatch.use_pallas()
         with dispatch.force("interpret"):
@@ -148,7 +148,9 @@ def test_dispatch_mode_resolution():
         assert dispatch.resolve() == "reference"   # nesting restores
     with dispatch.force("auto"):
         on_accel = jax.default_backend() in ("tpu", "gpu")
-        assert dispatch.resolve() == ("compiled" if on_accel else "reference")
+        # auto routes CPU hosts to the fast tier, never the O(T^2) oracle
+        assert dispatch.resolve() == ("compiled" if on_accel else "fast")
+        assert dispatch.use_pallas() == on_accel
 
 
 def test_dispatch_block_selection_is_shape_aware():
@@ -265,6 +267,262 @@ def test_dispatch_grad_flows_through_kernel_path():
         gr = jax.grad(fa)(q)
     np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# The Pallas backward kernels (dq/dk/dv recompute tiling)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,KV,T,d", [
+    (1, 3, 1, 37, 16),       # odd T (padding path), odd head count
+    (2, 8, 2, 100, 24),      # G=4 GQA groups, T % block != 0
+    (1, 4, 4, 52, 16),       # MHA
+    (1, 6, 3, 33, 8),        # G=2, tiny d
+])
+def test_flash_bwd_parity_shapes(B, H, KV, T, d):
+    """The kernel backward matches oracle autodiff across odd shapes and
+    GQA group counts (window+softcap active so every masking branch and
+    the tanh chain rule are exercised)."""
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    g = jax.random.normal(ks[3], (B, H, T, d))
+    f_k = lambda q, k, v: flash_attention(
+        q, k, v, d ** -0.5, True, 16, 30.0, 32, 32, True)
+    f_r = lambda q, k, v: attention_ref(
+        q, k, v, scale=d ** -0.5, causal=True, window=16, cap=30.0)
+    _, vjp_k = jax.vjp(f_k, q, k, v)
+    _, vjp_r = jax.vjp(f_r, q, k, v)
+    for a, b in zip(vjp_k(g), vjp_r(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("window,cap", [(0, 0.0), (16, 0.0), (0, 25.0),
+                                        (24, 40.0)])
+def test_flash_bwd_parity_window_softcap(window, cap):
+    ks = jax.random.split(KEY, 4)
+    B, H, KV, T, d = 2, 4, 2, 96, 32
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    g = jax.random.normal(ks[3], (B, H, T, d))
+    f_k = lambda q, k, v: flash_attention(
+        q, k, v, d ** -0.5, True, window, cap, 32, 32, True)
+    f_r = lambda q, k, v: attention_ref(
+        q, k, v, scale=d ** -0.5, causal=True, window=window, cap=cap)
+    _, vjp_k = jax.vjp(f_k, q, k, v)
+    _, vjp_r = jax.vjp(f_r, q, k, v)
+    for a, b in zip(vjp_k(g), vjp_r(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_flash_bwd_parity_bf16():
+    """bf16 primals: cotangents keep the primal dtype and track the oracle
+    at bf16 resolution."""
+    ks = jax.random.split(KEY, 4)
+    B, H, KV, T, d = 1, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, T, d), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, KV, T, d), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, KV, T, d), jnp.bfloat16)
+    g = jax.random.normal(ks[3], (B, H, T, d), jnp.bfloat16)
+    f_k = lambda q, k, v: flash_attention(
+        q, k, v, d ** -0.5, True, 16, 30.0, 32, 32, True)
+    f_r = lambda q, k, v: attention_ref(
+        q, k, v, scale=d ** -0.5, causal=True, window=16, cap=30.0)
+    _, vjp_k = jax.vjp(f_k, q, k, v)
+    _, vjp_r = jax.vjp(f_r, q, k, v)
+    for a, b in zip(vjp_k(g), vjp_r(g)):
+        assert a.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), **_tol(jnp.bfloat16))
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 16, 25.0), (False, 0, 30.0), (True, 48, 0.0),
+])
+def test_flash_bwd_interpret_bitwise_vs_mirror(causal, window, cap):
+    """Bit-audit: the interpret-mode backward kernels and the blockwise jnp
+    mirror (`attention_ref_bwd`, which executes the kernels' `_tile_grads`
+    helper tile-by-tile) produce IDENTICAL bits — same primitives, same
+    accumulation order, same dead-tile skips."""
+    from repro.kernels.flash_attention.kernel import (
+        flash_attention_bwd_dkv, flash_attention_bwd_dq,
+        flash_attention_bwd_preprocess, flash_attention_fwd)
+    from repro.kernels.flash_attention.ref import attention_ref_bwd
+    ks = jax.random.split(KEY, 4)
+    B, H, KV, T, d = 2, 4, 2, 64, 16
+    bq, bk = 32, 16
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    g = jax.random.normal(ks[3], (B, H, T, d))
+    scale = d ** -0.5
+    o, lse = flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                                 window=window, cap=cap, block_q=bq,
+                                 block_k=bk, kv_len=T, interpret=True)
+    delta = flash_attention_bwd_preprocess(o, g, block_q=bq, interpret=True)
+    kw = dict(scale=scale, causal=causal, window=window, cap=cap,
+              block_q=bq, block_k=bk, kv_len=T, interpret=True)
+    dq = flash_attention_bwd_dq(q, k, v, g, lse, delta, **kw)
+    dkh, dvh = flash_attention_bwd_dkv(q, k, v, g, lse, delta, **kw)
+    mq, mk, mv = attention_ref_bwd(q, k, v, o, lse, g, scale=scale,
+                                   causal=causal, window=window, cap=cap,
+                                   block_q=bq, block_k=bk, kv_len=T)
+    assert np.array_equal(np.asarray(dq), np.asarray(mq))
+    assert np.array_equal(np.asarray(dkh), np.asarray(mk))
+    assert np.array_equal(np.asarray(dvh), np.asarray(mv))
+
+
+def test_attention_bwd_blocks_budget():
+    """Backward blocks come from a halved budget: never larger than the
+    forward's, floors respected, and the key block shrinks once the
+    dq/dkv working set (2d + 2*bq fp32 per k-row) gets big."""
+    fq, fk = dispatch.attention_blocks(4096, 4096, 128, jnp.float32)
+    bq, bk = dispatch.attention_bwd_blocks(4096, 4096, 128, jnp.float32)
+    assert bq <= fq and bk <= fk
+    # at common head dims the 128 cap binds both; at a stress dim the
+    # doubled working set (dk+dv accumulators, p AND ds tiles) bites
+    fq, fk = dispatch.attention_blocks(4096, 4096, 1024, jnp.float32)
+    bq, bk = dispatch.attention_bwd_blocks(4096, 4096, 1024, jnp.float32)
+    assert bk < fk
+    bq1, bk1 = dispatch.attention_bwd_blocks(1, 1, 64, jnp.float32)
+    assert bq1 == 8 and bk1 == 8
+    bq16, _ = dispatch.attention_bwd_blocks(256, 256, 64, jnp.bfloat16)
+    assert bq16 >= 16                    # bf16 sublane floor
+
+
+def test_fast_tier_chunked_matches_oracle():
+    """The CPU fast tier (chunked, windowed key slices) is numerically the
+    oracle, forward and backward."""
+    from repro.kernels.flash_attention.ref import attention_ref_chunked
+    ks = jax.random.split(KEY, 4)
+    B, H, KV, T, d = 1, 4, 2, 256, 32
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    g = jax.random.normal(ks[3], (B, H, T, d))
+    f_c = lambda q, k, v: attention_ref_chunked(
+        q, k, v, scale=d ** -0.5, causal=True, window=48, cap=30.0, block_q=64)
+    f_r = lambda q, k, v: attention_ref(
+        q, k, v, scale=d ** -0.5, causal=True, window=48, cap=30.0)
+    np.testing.assert_allclose(np.asarray(f_c(q, k, v)),
+                               np.asarray(f_r(q, k, v)), rtol=2e-5, atol=2e-5)
+    _, vjp_c = jax.vjp(f_c, q, k, v)
+    _, vjp_r = jax.vjp(f_r, q, k, v)
+    for a, b in zip(vjp_c(g), vjp_r(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_reverse_scan_closed_form_grads():
+    """The scan's closed-form VJP (same kernel on flipped arrays) matches
+    autodiff through the lax.scan reference, on both the kernel and fast
+    tiers, with cotangent dtypes tracking the primals."""
+    from repro.kernels.vtrace_scan.ops import reverse_discounted_scan_fast
+    ks = jax.random.split(KEY, 4)
+    for B, T, dt in [(8, 64, jnp.float32), (5, 33, jnp.float32),
+                     (4, 40, jnp.bfloat16)]:
+        deltas = jax.random.normal(ks[0], (B, T), dt)
+        decays = (jax.random.uniform(ks[1], (B, T)) * 0.95).astype(dt)
+        init = jax.random.normal(ks[2], (B,))
+        g = jax.random.normal(ks[3], (B, T))
+        loss_ref = lambda d, c, i: jnp.sum(
+            reverse_discounted_scan_ref(d, c, i) * g)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(deltas, decays, init)
+        for fn in (lambda d, c, i: jnp.sum(
+                       reverse_discounted_scan(d, c, i, interpret=True) * g),
+                   lambda d, c, i: jnp.sum(
+                       reverse_discounted_scan_fast(d, c, i) * g)):
+            gk = jax.grad(fn, argnums=(0, 1, 2))(deltas, decays, init)
+            tol = 2e-2 if dt == jnp.bfloat16 else 1e-5
+            for a, b in zip(gk, gr):
+                assert a.dtype == b.dtype
+                np.testing.assert_allclose(np.asarray(a, np.float32),
+                                           np.asarray(b, np.float32),
+                                           rtol=tol, atol=tol)
+
+
+def test_dispatch_stats_counter():
+    """Every dispatch resolution is counted with its tier and block
+    detail; reset clears."""
+    dispatch.stats_reset()
+    x = jax.random.normal(KEY, (4, 3, 128))
+    w = jnp.ones((128,))
+    with dispatch.force("reference"):
+        dispatch.rmsnorm(x, w)
+    with dispatch.force("interpret"):
+        dispatch.rmsnorm(x, w)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 16, 16))
+    kv = jax.random.normal(ks[1], (1, 2, 16, 16))
+    with dispatch.force("auto"):
+        dispatch.attention(q, kv, kv, scale=0.25)
+        dispatch.reverse_scan(jnp.ones((2, 8)), 0.9 * jnp.ones((2, 8)))
+    s = dispatch.stats()
+    assert s.get("rmsnorm|reference") == 1
+    assert any(k.startswith("rmsnorm|interpret|br=") for k in s)
+    on_accel = jax.default_backend() in ("tpu", "gpu")
+    if not on_accel:
+        assert s.get("attention|fast") == 1
+        assert s.get("reverse_scan|fast") == 1
+    assert dispatch.stats(reset=True) == s
+    assert dispatch.stats() == {}
+
+
+def test_infer_mode_is_serving_scoped(monkeypatch):
+    """REPRO_KERNELS_INFER only applies inside dispatch.serving() — a
+    learner trace outside the scope never sees it."""
+    monkeypatch.setenv("REPRO_KERNELS_INFER", "bf16")
+    assert dispatch.infer_mode() is None
+    with dispatch.serving():
+        assert dispatch.infer_mode() == "bf16"
+        with dispatch.serving():
+            assert dispatch.infer_mode() == "bf16"
+        assert dispatch.infer_mode() == "bf16"     # nesting restores
+    assert dispatch.infer_mode() is None
+    monkeypatch.setenv("REPRO_KERNELS_INFER", "nonsense")
+    with dispatch.serving():
+        assert dispatch.infer_mode() is None
+
+
+def test_infer_bf16_fast_tier_output(monkeypatch):
+    """The bf16 inference path returns the caller's dtype and stays close
+    to the fp32 forward (input-rounding emulation on CPU)."""
+    monkeypatch.setenv("REPRO_KERNELS_INFER", "bf16")
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, T, d = 1, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    with dispatch.force("auto"):
+        o_train = dispatch.attention(q, k, v, scale=d ** -0.5, causal=True)
+        with dispatch.serving():
+            o_serve = dispatch.attention(q, k, v, scale=d ** -0.5, causal=True)
+    assert o_serve.dtype == q.dtype
+    assert not np.array_equal(np.asarray(o_serve), np.asarray(o_train))
+    np.testing.assert_allclose(np.asarray(o_serve), np.asarray(o_train),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_infer_bf16_mixed_kernel_path(monkeypatch):
+    """The kernel tier's mixed mode (bf16 matmul inputs, fp32 accumulate)
+    tracks the fp32 kernel at bf16 resolution."""
+    monkeypatch.setenv("REPRO_KERNELS_INFER", "bf16")
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, T, d = 1, 4, 2, 64, 32
+    q = jax.random.normal(ks[0], (B, H, T, d))
+    k = jax.random.normal(ks[1], (B, KV, T, d))
+    v = jax.random.normal(ks[2], (B, KV, T, d))
+    with dispatch.force("interpret"):
+        o32 = dispatch.attention(q, k, v, scale=d ** -0.5, causal=True)
+        with dispatch.serving():
+            o16 = dispatch.attention(q, k, v, scale=d ** -0.5, causal=True)
+    assert o16.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o16, np.float32),
+                               np.asarray(o32, np.float32),
+                               rtol=3e-2, atol=3e-2)
 
 
 def test_dispatch_inside_jit_is_mode_stable():
