@@ -1223,14 +1223,196 @@ def kernels():
     _emit("kernels/rmsnorm_512x256", us, "interpret_mode")
 
 
+def serving_gateway(out_path: str | None = None, against: str | None = None):
+    """ISSUE 9 acceptance: the serving-gateway plane's three numbers.
+
+      * fleet scaling — served rows/sec through a `ServingGateway` at 1
+        vs 4 replicas, closed-loop clients. Each replica is an
+        `InfServer` whose flush adds a SIMULATED accelerator service
+        time (base + per-row, lock held — the replica is busy) on top
+        of its real CPU forward: a 1-core CI host cannot colocate four
+        real accelerators, so the fleet axis measures what the gateway
+        actually adds — concurrent service windows across replicas
+        (sleeps release the GIL exactly like a remote device wait). The
+        simulated curve is recorded in the artifact; the >=2.5x floor is
+        asserted before writing.
+      * SLO hit rate — paced open-loop traffic (~50% of the measured
+        4-replica capacity) tagged with a deadline bucket, the gateway's
+        deadline pump running; p99 latency and hit rate come from
+        `stats()["deadlines"]` (>=0.95 asserted).
+      * fleet rollout — a frozen `tleague-policy-s` model propagates to
+        4 REAL RPC replicas (in-process RpcServers, real wire): cold
+        rollout ships every byte once, warm re-rollout `has_model`-probes
+        and ships ZERO bytes (asserted).
+    """
+    import threading
+
+    from repro.configs import get_arch
+    from repro.core import ModelKey
+    from repro.distributed.transport import InfServerBackend, RpcServer
+    from repro.infserver import InfServer
+    from repro.models import init_params
+    from repro.params.manifest import build_manifest
+    from repro.serving import ServingGateway
+    from repro.serving.fleet import connect
+
+    arch = "tleague-policy-s"
+    cfg = get_arch(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    key = ModelKey("main", 0)
+    manifest = build_manifest(params, version=0)
+    obs_len, rows_per_submit = 26, 8
+    svc_base_s, svc_per_row_s = 0.015, 0.00005
+
+    class SimReplica(InfServer):
+        """Real InfServer + simulated accelerator service time: the
+        flush sleeps (base + per_row x queued) under the server lock
+        before running the real CPU forward."""
+
+        def flush(self):
+            with self._lock:
+                rows = self.queue_depth
+                if rows:
+                    time.sleep(svc_base_s + svc_per_row_s * rows)
+                super().flush()
+
+    def make_fleet(n):
+        fleet = []
+        for i in range(n):
+            r = SimReplica(cfg, 6, max_batch=64, seed=i)
+            r.register_model(key, params, content_hash=manifest.tree_hash,
+                             version=0)
+            r.get(r.submit(np.zeros((rows_per_submit, obs_len), np.int32),
+                           model=key))          # warm the jit cache
+            fleet.append(r)
+        return fleet
+
+    def drive_closed(gw, n_clients, seconds):
+        """Closed-loop: each client thread submits and waits, repeat."""
+        obs = np.zeros((rows_per_submit, obs_len), np.int32)
+        stop = threading.Event()
+        served = [0] * n_clients
+
+        def client(i):
+            while not stop.is_set():
+                gw.get(gw.submit(obs, model=key))
+                served[i] += rows_per_submit
+
+        ts = [threading.Thread(target=client, args=(i,))
+              for i in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in ts:
+            t.start()
+        time.sleep(seconds)
+        stop.set()
+        for t in ts:
+            t.join()
+        return sum(served) / (time.perf_counter() - t0)
+
+    # -- axis 1: fleet scaling ------------------------------------------------
+    fleet_rates = {}
+    for n in (1, 4):
+        gw = ServingGateway(make_fleet(n), router="least_loaded",
+                            max_inflight_rows=100_000)
+        fleet_rates[n] = drive_closed(gw, n_clients=2 * n, seconds=3.0)
+        _emit(f"serving/fleet{n}", 1e6 * rows_per_submit / fleet_rates[n],
+              f"rows_per_s={fleet_rates[n]:.0f}")
+    fleet_speedup = fleet_rates[4] / fleet_rates[1]
+    _emit("serving/fleet_speedup", 0.0, f"x4_vs_x1={fleet_speedup:.2f}")
+    assert fleet_speedup >= 2.5, \
+        f"fleet scaling below floor: {fleet_speedup:.2f}x < 2.5x"
+
+    # -- axis 2: SLO deadline buckets under paced open-loop load --------------
+    deadline_s = 0.1
+    offered = 0.5 * fleet_rates[4]
+    gw = ServingGateway(make_fleet(4), router="least_loaded",
+                        max_inflight_rows=4096,
+                        deadline_edges_s=(0.025, 0.1, 0.5)).start()
+    n_clients = 8
+    interval = n_clients * rows_per_submit / offered
+    stop = threading.Event()
+
+    def paced(i):
+        nxt = time.perf_counter() + (i / n_clients) * interval
+        while not stop.is_set():
+            lag = nxt - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            gw.get(gw.submit(np.zeros((rows_per_submit, obs_len), np.int32),
+                             model=key, deadline_s=deadline_s))
+            nxt += interval
+
+    ts = [threading.Thread(target=paced, args=(i,)) for i in range(n_clients)]
+    for t in ts:
+        t.start()
+    time.sleep(4.0)
+    stop.set()
+    for t in ts:
+        t.join()
+    gw.stop()
+    slo = gw.stats()["deadlines"][gw.deadlines.label(deadline_s)]
+    _emit("serving/slo_p99", slo["p99_ms"] * 1e3,
+          f"hit_rate={slo['hit_rate']:.3f}")
+    assert slo["hit_rate"] >= 0.95, \
+        f"deadline hit rate {slo['hit_rate']:.3f} < 0.95"
+
+    # -- axis 3: fleet rollout over real RPC ----------------------------------
+    servers = [InfServer(cfg, 6, max_batch=64, seed=i) for i in range(4)]
+    rpcs = [RpcServer({"inf": InfServerBackend(s)}).start() for s in servers]
+    try:
+        gw = ServingGateway([connect(r.address) for r in rpcs])
+        cold = gw.rollout(key, params, manifest)
+        warm = gw.rollout(key, params, manifest)
+        assert warm["bytes_shipped"] == 0, \
+            f"warm rollout shipped {warm['bytes_shipped']} bytes"
+        assert cold["shipped_to"] == 4 and warm["already_hosted"] == 4
+    finally:
+        for r in rpcs:
+            r.close()
+    _emit("serving/rollout_cold", cold["propagation_ms"] * 1e3,
+          f"bytes={cold['bytes_shipped']}")
+    _emit("serving/rollout_warm", warm["propagation_ms"] * 1e3, "bytes=0")
+
+    record = {
+        "arch": arch,
+        "rows_per_submit": rows_per_submit,
+        "sim_service_base_ms": svc_base_s * 1e3,
+        "sim_service_per_row_us": svc_per_row_s * 1e6,
+        "fleet_rows_per_s_1": fleet_rates[1],
+        "fleet_rows_per_s_4": fleet_rates[4],
+        "fleet_speedup_x": fleet_speedup,
+        "slo_deadline_ms": deadline_s * 1e3,
+        "slo_offered_rows_per_s": offered,
+        "slo_requests": slo["count"],
+        "slo_p99_ms": slo["p99_ms"],
+        "slo_hit_rate": slo["hit_rate"],
+        "rollout_replicas": 4,
+        "rollout_model_mb": manifest.nbytes / 2**20,
+        "rollout_cold_ms": cold["propagation_ms"],
+        "rollout_cold_bytes": cold["bytes_shipped"],
+        "rollout_warm_ms": warm["propagation_ms"],
+        "rollout_warm_bytes": warm["bytes_shipped"],
+    }
+    out = pathlib.Path(out_path) if out_path else _REPO / "BENCH_serving.json"
+    if against:
+        prior = json.loads(pathlib.Path(against).read_text())
+        _check_against(record, prior, against, floors={
+            "fleet_speedup_x": (2.5, 0.5),
+            "slo_hit_rate": (0.95, 0.9),
+        })
+    else:
+        _write_bench(out, record)
+
+
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "infserver_throughput", "learner_throughput", "league_throughput",
            "sharded_serving", "param_plane", "collector_throughput",
-           "fault_recovery", "kernels", "fig4_winrate", "table12_league_eval")
+           "fault_recovery", "serving_gateway", "kernels", "fig4_winrate",
+           "table12_league_eval")
 
 # benches whose record supports the `--against FILE` regression gate
 _AGAINST_BENCHES = ("param_plane", "collector_throughput", "fault_recovery",
-                    "learner_throughput")
+                    "learner_throughput", "serving_gateway")
 
 
 def main() -> None:

@@ -1025,6 +1025,9 @@ class InfServerBackend:
     def stats(self) -> dict:
         return self._server.stats()
 
+    def telemetry(self) -> dict:
+        return self._server.telemetry()
+
 
 class InfServerClient(_NamespaceClient):
     """Remote `repro.infserver.InfServer` speaking the same
@@ -1035,9 +1038,17 @@ class InfServerClient(_NamespaceClient):
     def __init__(self, client, ns: str = "inf"):
         super().__init__(client, ns)
 
-    def submit(self, obs: np.ndarray, model: Hashable = None) -> RemoteTicket:
+    def submit(self, obs: np.ndarray, model: Hashable = None,
+               deadline_s: Optional[float] = None) -> RemoteTicket:
+        """`deadline_s` rides along only when set: a plain
+        `InfServerBackend` has no deadline notion (size-bucketed only),
+        a `serving.GatewayBackend` feeds it to the SLO pump."""
         obs = np.asarray(obs)
-        tid = self._call("submit", obs, model=model)
+        if deadline_s is None:
+            tid = self._call("submit", obs, model=model)
+        else:
+            tid = self._call("submit", obs, model=model,
+                             deadline_s=deadline_s)
         return RemoteTicket(tid, model, obs.shape[0], self)
 
     def poll(self, tid) -> bool:
@@ -1085,7 +1096,17 @@ class InfServerClient(_NamespaceClient):
         return self._call("evict_model", key)
 
     def stats(self) -> dict:
+        """Full server telemetry across the seam — `InfServer.stats()`
+        verbatim (occupancy, per-batch latency, swap + dispatch
+        counters). The gateway's router reads the cheap `telemetry()`
+        probe instead at steady state; this is the operator view."""
         return self._get("stats")
+
+    def telemetry(self) -> dict:
+        """The high-cadence occupancy/latency probe (see
+        `InfServer.telemetry`) — the routing signal crossing the RPC
+        seam."""
+        return self._get("telemetry")
 
 
 class DataServerClient(_NamespaceClient):

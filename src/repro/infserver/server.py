@@ -471,6 +471,25 @@ class InfServer:
                 self._pending = kept
 
     # -- telemetry ------------------------------------------------------------
+    def telemetry(self) -> dict:
+        """The router's occupancy/latency probe: the cheap subset of
+        `stats()` a serving gateway polls at high cadence to steer
+        lineage spill. No dispatch counters, no mesh introspection —
+        just load and latency, safe to call every few milliseconds
+        against a busy replica (single dict, no locks beyond the
+        server's own)."""
+        batches = max(self.batches_run, 1)
+        return {
+            "queue_depth": self.queue_depth,
+            "results_held": len(self._results),
+            "rows_served": self.rows_served,
+            "batches_run": self.batches_run,
+            "occupancy": self.rows_served / max(self.rows_padded, 1),
+            "mean_batch_latency_ms": 1e3 * self._latency_sum / batches,
+            "last_batch_latency_ms": 1e3 * self.last_batch_latency_s,
+            "models_hosted": len(self._models),
+        }
+
     def stats(self) -> dict:
         batches = max(self.batches_run, 1)
         return {

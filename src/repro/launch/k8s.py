@@ -109,6 +109,46 @@ _TCP_PROBES_TMPL = """\
           failureThreshold: 3
 """
 
+# the serving-gateway fleet renders as a StatefulSet behind a HEADLESS
+# Service: the gateway routes by lineage/occupancy across INDIVIDUAL
+# replicas, so it needs the stable per-pod DNS names
+# ({signature}-serve-replica-N.{signature}-serve-replica:port), not a
+# load-balanced ClusterIP that would hide the fleet behind one VIP
+STATEFULSET_TMPL = """\
+---
+apiVersion: v1
+kind: Service
+metadata:
+  name: {signature}-{role}
+  labels: {{app: {signature}, role: {role}}}
+spec:
+  clusterIP: None
+  selector: {{app: {signature}, role: {role}}}
+  ports: [{{port: {port}, targetPort: {port}}}]
+---
+apiVersion: apps/v1
+kind: StatefulSet
+metadata:
+  name: {signature}-{role}
+spec:
+  serviceName: {signature}-{role}
+  replicas: {replicas}
+  selector: {{matchLabels: {{app: {signature}, role: {role}}}}}
+  template:
+    metadata:
+      labels: {{app: {signature}, role: {role}}}
+{annotations}    spec:
+      nodeSelector: {{pool: {node_pool}}}
+      containers:
+      - name: {role}
+        image: {image}
+        command: ["python", "-m", "{module}"]
+        args: {args}
+        resources:
+          requests: {{cpu: "{cpus}"{accel}}}
+          limits: {{cpu: "{cpus}"{accel}}}
+{probes}"""
+
 # timeoutSeconds must cover interpreter startup + the probe's own
 # --timeout 5 budget; k8s's 1s default would kill every slow-but-healthy
 # probe run and restart the whole actor fleet
@@ -126,7 +166,8 @@ _EXEC_PROBE_TMPL = """\
 
 def render(*, signature="tleague", image="repro:latest", learners=8,
            inf_servers=2, actors_per_learner=16, pool_replicas=1,
-           actor_cpus=4, learner_accel="google.com/tpu: 1",
+           serving_replicas=0, actor_cpus=4,
+           learner_accel="google.com/tpu: 1",
            env="pommerman_lite", arch="tleague-policy-s",
            league_spec="/config/league_spec.json", league_role="main",
            served=True, lr=3e-4):
@@ -142,6 +183,18 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
     actors_per_learner, the paper's co-location ratio); the learner
     Deployment itself is always replicas=1 per role — params are
     single-writer, and M_L data parallelism is inside the pjit step.
+
+    `serving_replicas` > 0 renders the serving-gateway plane: a
+    StatefulSet of standalone InfServer replicas (`repro.launch.serve
+    --replica`) behind a HEADLESS Service (stable per-pod DNS), plus a
+    gateway Deployment (`--gateway`) that fronts the individual replica
+    endpoints with lineage routing, occupancy spill, deadline-bucket
+    SLO flushes and admission control — external inference consumers
+    (the millions-of-users path) connect to the gateway Service on
+    9010 with the plain `InfServerClient` protocol. This fleet is
+    separate from the league-internal `inf_servers` deployment: league
+    actors keep their co-located sharded servers; the gateway fleet
+    serves policy queries to the outside.
 
     `pool_replicas` > 0 renders the paper's M_M ModelPool replica fleet:
     a read-replica Deployment that follows the coordinator's pool via
@@ -227,6 +280,30 @@ def render(*, signature="tleague", image="repro:latest", learners=8,
                   "--advertise", f"{signature}-inf-server:9006"] + base),
         cpus=8, accel=", " + learner_accel, probes=tcp_probes(9006),
         annotations="", **common))
+    if serving_replicas > 0:
+        # the serving-gateway plane: replica StatefulSet (headless, so
+        # the gateway sees individual pods) + the gateway front door
+        replica_port, gateway_port = 9009, 9010
+        blocks.append(STATEFULSET_TMPL.format(
+            role="serve-replica", port=replica_port,
+            replicas=serving_replicas, node_pool="tpu-v5e",
+            module="repro.launch.serve",
+            args=fmt(["--replica", "--bind", f"0.0.0.0:{replica_port}",
+                      "--arch", arch, "--env", env]),
+            cpus=8, accel=", " + learner_accel,
+            probes=tcp_probes(replica_port),
+            annotations=restart_annotations, **common))
+        replica_eps = ",".join(
+            f"{signature}-serve-replica-{i}.{signature}-serve-replica:"
+            f"{replica_port}" for i in range(serving_replicas))
+        blocks.append(SERVICE_TMPL.format(
+            role="gateway", port=gateway_port, replicas=1,
+            node_pool="cpu-highmem", module="repro.launch.serve",
+            args=fmt(["--gateway", "--bind", f"0.0.0.0:{gateway_port}",
+                      "--replica-endpoints", replica_eps,
+                      "--router", "lineage"]),
+            cpus=8, accel="", probes=tcp_probes(gateway_port),
+            annotations=restart_annotations, **common))
     blocks.append(SERVICE_TMPL.format(
         role="actor", port=9007, replicas=learners * actors_per_learner,
         node_pool="cpu", module="repro.launch.train",
@@ -248,6 +325,11 @@ def main():
     ap.add_argument("--pool-replicas", type=int, default=1,
                     help="ModelPool read-replica Deployment size (0 "
                          "renders the legacy coordinator-only read path)")
+    ap.add_argument("--serving-replicas", type=int, default=0,
+                    help="serving-gateway fleet size: N standalone "
+                         "InfServer replicas (StatefulSet, headless "
+                         "Service) behind one gateway Deployment (0 "
+                         "renders no gateway plane)")
     ap.add_argument("--env", default="pommerman_lite")
     ap.add_argument("--arch", default="tleague-policy-s")
     ap.add_argument("--league-spec", default="/config/league_spec.json")
@@ -258,6 +340,7 @@ def main():
                  inf_servers=args.inf_servers,
                  actors_per_learner=args.actors_per_learner,
                  pool_replicas=args.pool_replicas,
+                 serving_replicas=args.serving_replicas,
                  env=args.env, arch=args.arch, league_spec=args.league_spec,
                  league_role=args.league_role, served=args.served))
 

@@ -1,9 +1,26 @@
-"""Serving driver: prefill + autoregressive serve_step for any assigned
-arch (the InfServer data path at production layout; CPU-runnable on the
-reduced variants).
+"""Serving drivers: the single-process decode demo AND the replica-fleet
+gateway (the serving-gateway plane).
+
+Decode demo (prefill + autoregressive serve_step for any assigned arch;
+the InfServer data path at production layout, CPU-runnable on the
+reduced variants):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --smoke \
       --batch 4 --prompt-len 64 --new-tokens 16 [--sliding]
+
+Standalone replica (one InfServer behind an RpcServer; prints
+`REPLICA host:port` for fleet discovery, serves until killed — the unit
+`serving.fleet.spawn_replica` manages and k8s deploys):
+
+  PYTHONPATH=src python -m repro.launch.serve --replica \
+      --bind 0.0.0.0:9006 --arch tleague-policy-s --env rps
+
+Gateway fleet (spawn N local replica processes, front them with a
+`ServingGateway`, roll a model out to the fleet and drive a short
+deadline-tagged traffic demo — the one-command serving-plane smoke):
+
+  PYTHONPATH=src python -m repro.launch.serve --replicas 4 \
+      --arch tleague-policy-s --env rps --demo-rounds 50
 
 On a pod, the same step functions lower under the production mesh with
 serving shardings (TP-only weights + length-sharded cache — the §Perf-1
@@ -13,10 +30,13 @@ shard_cache_len=True)`.
 from __future__ import annotations
 
 import argparse
+import signal
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_arch
 from repro.models import decode_step, init_params, prefill
@@ -68,9 +88,139 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     return out
 
 
+def run_replica(*, arch: str = "tleague-policy-s", env_name: str = "rps",
+                seed: int = 0, max_batch: int = 256,
+                bind: str = "127.0.0.1:0", verbose: bool = True) -> None:
+    """One standalone serving replica: an InfServer behind an RpcServer,
+    no coordinator required (the gateway is its control plane). Prints
+    the `REPLICA host:port` discovery banner and blocks until
+    SIGTERM/SIGINT."""
+    from repro.distributed.transport import (InfServerBackend, RpcServer,
+                                             parse_addr)
+    from repro.envs import make_env
+    from repro.infserver import InfServer
+
+    cfg = get_arch(arch)
+    env = make_env(env_name)
+    server = InfServer(cfg, env.spec.num_actions, seed=seed,
+                       max_batch=max_batch)
+    host, port = parse_addr(bind)
+    rpc = RpcServer({"inf": InfServerBackend(server)},
+                    host=host, port=port).start()
+    print(f"REPLICA {rpc.address}", flush=True)
+    done = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, lambda *_: done.set())
+        except ValueError:                    # pragma: no cover - not main thread
+            pass
+    done.wait()
+    rpc.close()
+    if verbose:
+        st = server.stats()
+        print(f"[replica] served {st['rows_served']} rows over "
+              f"{st['batches_run']} batches", flush=True)
+
+
+def run_gateway(replica_endpoints, *, bind: str = "127.0.0.1:0",
+                router: str = "lineage", max_inflight_rows: int = 4096,
+                verbose: bool = True) -> None:
+    """Serve a `ServingGateway` over RPC (namespace `inf`): every
+    existing `InfServerClient` — and therefore every served Actor —
+    talks to the replica FLEET through this address without knowing it.
+    `replica_endpoints` is a comma-separated list (or list) of replica
+    `host:port`s, e.g. the per-pod DNS names of the k8s StatefulSet.
+    Blocks until SIGTERM/SIGINT."""
+    from repro.distributed.transport import RpcServer, parse_addr
+    from repro.serving import GatewayBackend, ServingGateway
+    from repro.serving.fleet import connect
+
+    if isinstance(replica_endpoints, str):
+        replica_endpoints = [e.strip() for e in replica_endpoints.split(",")
+                             if e.strip()]
+    gw = ServingGateway([connect(ep) for ep in replica_endpoints],
+                        router=router,
+                        max_inflight_rows=max_inflight_rows).start()
+    host, port = parse_addr(bind)
+    rpc = RpcServer({"inf": GatewayBackend(gw)}, host=host,
+                    port=port).start()
+    print(f"GATEWAY {rpc.address} fronting "
+          f"{len(replica_endpoints)} replicas", flush=True)
+    done = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        try:
+            signal.signal(sig, lambda *_: done.set())
+        except ValueError:                    # pragma: no cover - not main thread
+            pass
+    done.wait()
+    rpc.close()
+    gw.stop()
+    if verbose:
+        st = gw.stats()
+        print(f"[gateway] {st['rows']} rows over {st['requests']} requests, "
+              f"shed {st['shed_requests']}, failovers {st['failovers']}",
+              flush=True)
+
+
+def serve_fleet(replicas: int, *, arch: str = "tleague-policy-s",
+                env_name: str = "rps", seed: int = 0,
+                demo_rounds: int = 50, demo_rows: int = 8,
+                deadline_ms: float = 250.0, verbose: bool = True) -> dict:
+    """Spawn `replicas` local replica processes, front them with a
+    `ServingGateway`, roll the demo model out to the fleet (probe-gated)
+    and drive `demo_rounds` of deadline-tagged traffic across two
+    lineages. Returns the gateway stats dict; the fleet is torn down
+    before returning."""
+    from repro.core import ModelKey
+    from repro.envs import make_env
+    from repro.params.manifest import build_manifest
+    from repro.serving import ServingGateway
+    from repro.serving.fleet import connect, shutdown, spawn_fleet
+
+    cfg = get_arch(arch)
+    env = make_env(env_name)
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    fleet = spawn_fleet(replicas, arch=arch, env_name=env_name,
+                        base_seed=seed)
+    try:
+        gw = ServingGateway([connect(r.address) for r in fleet]).start()
+        keys = [ModelKey("main", 0), ModelKey("exploiter", 0)]
+        for key in keys:
+            report = gw.rollout(key, params,
+                                build_manifest(params, version=0))
+            if verbose:
+                print(f"[gateway] rollout {key}: shipped to "
+                      f"{report['shipped_to']}/{replicas} replicas "
+                      f"({report['bytes_shipped']} bytes, "
+                      f"{report['propagation_ms']:.1f}ms)", flush=True)
+        obs_len = env.spec.obs_len
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        for _ in range(demo_rounds):
+            tickets = [gw.submit(
+                rng.integers(0, 8, (demo_rows, obs_len)).astype(np.int32),
+                model=keys[rng.integers(len(keys))],
+                deadline_s=deadline_ms / 1e3) for _ in range(replicas)]
+            for t in tickets:
+                gw.get(t)
+        dt = time.perf_counter() - t0
+        st = gw.stats()
+        if verbose:
+            served = st["rows"]
+            print(f"[gateway] {replicas} replicas: {served} rows in "
+                  f"{dt:.2f}s ({served / dt:,.0f} rows/s), "
+                  f"deadlines: {st['deadlines']}", flush=True)
+        gw.stop()
+        return st
+    finally:
+        shutdown(fleet)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-2b")
+    # default depends on mode: the decode demo wants a decoder arch, the
+    # replica/fleet modes serve the league policy
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--batch", type=int, default=4)
@@ -78,8 +228,48 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--sliding", action="store_true")
     ap.add_argument("--temperature", type=float, default=1.0)
+    # serving-gateway plane
+    ap.add_argument("--replica", action="store_true",
+                    help="run one standalone InfServer replica (RPC) "
+                         "until killed; prints 'REPLICA host:port'")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="spawn an N-replica local fleet behind a "
+                         "ServingGateway and run the traffic demo")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve a ServingGateway over RPC fronting "
+                         "--replica-endpoints (the k8s gateway pod)")
+    ap.add_argument("--replica-endpoints", default="",
+                    help="comma-separated replica host:port list for "
+                         "--gateway")
+    ap.add_argument("--router", default="lineage",
+                    choices=("lineage", "least_loaded", "round_robin"))
+    ap.add_argument("--max-inflight-rows", type=int, default=4096)
+    ap.add_argument("--env", dest="env_name", default="rps")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--bind", default="127.0.0.1:0")
+    ap.add_argument("--demo-rounds", type=int, default=50)
+    ap.add_argument("--demo-rows", type=int, default=8)
+    ap.add_argument("--deadline-ms", type=float, default=250.0)
     args = ap.parse_args()
-    serve(args.arch, smoke=args.smoke, batch=args.batch,
+    if args.replica:
+        run_replica(arch=args.arch or "tleague-policy-s",
+                    env_name=args.env_name, seed=args.seed,
+                    max_batch=args.max_batch, bind=args.bind)
+        return
+    if args.gateway:
+        assert args.replica_endpoints, "--gateway needs --replica-endpoints"
+        run_gateway(args.replica_endpoints, bind=args.bind,
+                    router=args.router,
+                    max_inflight_rows=args.max_inflight_rows)
+        return
+    if args.replicas > 0:
+        serve_fleet(args.replicas, arch=args.arch or "tleague-policy-s",
+                    env_name=args.env_name, seed=args.seed,
+                    demo_rounds=args.demo_rounds, demo_rows=args.demo_rows,
+                    deadline_ms=args.deadline_ms)
+        return
+    serve(args.arch or "gemma2-2b", smoke=args.smoke, batch=args.batch,
           prompt_len=args.prompt_len, new_tokens=args.new_tokens,
           sliding=args.sliding, temperature=args.temperature)
 

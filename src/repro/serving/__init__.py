@@ -1,0 +1,15 @@
+"""The serving-gateway plane: route a replica fleet by lineage and
+occupancy (see `docs/architecture.md`, "The nine planes")."""
+from repro.serving.gateway import (AdmissionRejected, DeadlineBuckets,
+                                   GatewayBackend, GatewayTicket,
+                                   ServingGateway)
+from repro.serving.router import (LeastLoadedRouter, LineageRouter,
+                                  NoReplicas, ReplicaView, RoundRobinRouter,
+                                  Router, ROUTERS, lineage_of, make_router)
+
+__all__ = [
+    "AdmissionRejected", "DeadlineBuckets", "GatewayBackend", "GatewayTicket",
+    "ServingGateway", "LeastLoadedRouter", "LineageRouter", "NoReplicas",
+    "ReplicaView", "RoundRobinRouter", "Router", "ROUTERS", "lineage_of",
+    "make_router",
+]

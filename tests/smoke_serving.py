@@ -1,0 +1,154 @@
+"""Serving-gateway SLO smoke: open-loop traffic against a 3-replica
+fleet (real processes, real RPC), one replica SIGKILLed mid-run.
+
+Pass criteria (asserted; the CI job fails on a non-zero exit):
+
+  * availability >= 0.95 — answered / attempted across the whole run,
+    INCLUDING the kill window (the gateway fails tickets over to the
+    survivors, so a single replica death should cost ~nothing)
+  * deadline-bucket p99 — the le_2000ms bucket must hold its SLO:
+    hit rate >= 0.95 and p99 <= the 2s deadline
+  * the gateway noticed: exactly one replica marked dead, failovers > 0
+    or the dead replica simply wasn't holding traffic at the kill
+
+Run: PYTHONPATH=src python tests/smoke_serving.py
+"""
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import ModelKey
+from repro.models import init_params
+from repro.params.manifest import build_manifest
+from repro.serving import ServingGateway
+from repro.serving.fleet import connect, shutdown, spawn_fleet
+
+REPLICAS = 3
+RUN_S = 10.0
+KILL_AT_S = 4.0
+DEADLINE_S = 2.0
+THREADS = 4
+REQ_PER_S_PER_THREAD = 8.0
+ROWS = 4
+OBS_LEN = 2                       # rps observations
+
+
+def main() -> int:
+    cfg = get_arch("tleague-policy-s")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    keys = [ModelKey("main", 0), ModelKey("exploiter", 0)]
+    manifest = build_manifest(params, version=0)
+
+    print(f"[smoke] spawning {REPLICAS} replica processes ...", flush=True)
+    fleet = spawn_fleet(REPLICAS, arch="tleague-policy-s", env_name="rps",
+                        max_batch=64)
+    try:
+        gw = ServingGateway([connect(r.address) for r in fleet],
+                            router="lineage", failover_retries=3,
+                            deadline_edges_s=(0.5, DEADLINE_S),
+                            max_inflight_rows=8192,
+                            pump_interval_s=0.01).start()
+        for key in keys:
+            rep = gw.rollout(key, params, manifest)
+            print(f"[smoke] rollout {key}: shipped_to={rep['shipped_to']} "
+                  f"({rep['propagation_ms']:.0f}ms)", flush=True)
+
+        # warm every replica's jit cache across the buckets the traffic
+        # can hit (4..32 rows coalesced), so no compile lands inside the
+        # measured deadline window
+        for h in gw._handles:
+            for n_sub in (1, 2, 4, 8):
+                ts = [h.replica.submit(np.zeros((ROWS, OBS_LEN), np.int32),
+                                       model=keys[0]) for _ in range(n_sub)]
+                h.replica.flush()
+                for t in ts:
+                    h.replica.get(t)
+        print("[smoke] fleet warmed; driving open-loop traffic", flush=True)
+
+        stop = threading.Event()
+        lock = threading.Lock()
+        attempted = [0]
+        answered = [0]
+        errors = []
+
+        def submitter(i):
+            rng = np.random.default_rng(i)
+            interval = 1.0 / REQ_PER_S_PER_THREAD
+            nxt = time.perf_counter() + rng.uniform(0, interval)
+            while not stop.is_set():
+                lag = nxt - time.perf_counter()
+                if lag > 0:
+                    time.sleep(min(lag, 0.05))
+                    continue
+                nxt += interval
+                obs = rng.integers(0, 3, (ROWS, OBS_LEN)).astype(np.int32)
+                key = keys[int(rng.integers(len(keys)))]
+                with lock:
+                    attempted[0] += 1
+                try:
+                    t = gw.submit(obs, model=key, deadline_s=DEADLINE_S)
+                    gw.get(t)
+                    with lock:
+                        answered[0] += 1
+                except Exception as e:            # shed / failover exhausted
+                    with lock:
+                        errors.append(repr(e))
+
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(THREADS)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+
+        time.sleep(KILL_AT_S)
+        victim = max(gw.stats()["replicas"],
+                     key=lambda r: r["routed_requests"])["replica"]
+        print(f"[smoke] kill -9 replica {victim} "
+              f"(pid {fleet[victim].proc.pid})", flush=True)
+        fleet[victim].kill()
+
+        time.sleep(RUN_S - KILL_AT_S)
+        stop.set()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        gw.stop()
+
+        st = gw.stats()
+        availability = answered[0] / max(attempted[0], 1)
+        bucket = gw.deadlines.label(DEADLINE_S)
+        slo = st["deadlines"].get(bucket, {"hit_rate": 0.0, "p99_ms": 1e9,
+                                           "count": 0})
+        print(f"[smoke] {attempted[0]} attempted, {answered[0]} answered "
+              f"in {wall:.1f}s -> availability {availability:.3f}",
+              flush=True)
+        print(f"[smoke] {bucket}: count={slo['count']} "
+              f"hit_rate={slo['hit_rate']:.3f} p99={slo['p99_ms']:.0f}ms; "
+              f"failovers={st['failovers']} died={st['replicas_died']} "
+              f"shed={st['shed_requests']}", flush=True)
+        if errors:
+            print(f"[smoke] {len(errors)} request errors, first: "
+                  f"{errors[0]}", flush=True)
+
+        assert availability >= 0.95, \
+            f"availability {availability:.3f} < 0.95"
+        assert slo["count"] > 0, "no requests recorded in the SLO bucket"
+        assert slo["hit_rate"] >= 0.95, \
+            f"deadline hit rate {slo['hit_rate']:.3f} < 0.95"
+        assert slo["p99_ms"] <= DEADLINE_S * 1e3, \
+            f"p99 {slo['p99_ms']:.0f}ms over the {DEADLINE_S * 1e3:.0f}ms SLO"
+        assert st["replicas_died"] == 1, \
+            f"expected exactly 1 dead replica, saw {st['replicas_died']}"
+        assert st["alive_replicas"] == REPLICAS - 1
+        print("[smoke] serving smoke OK", flush=True)
+        return 0
+    finally:
+        shutdown(fleet)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

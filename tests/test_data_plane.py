@@ -2,6 +2,8 @@
 InfServer multi-model routing, ring-buffer DataServer wraparound accounting,
 and the vectorized PayoffMatrix vs a straight reimplementation of the seed
 per-pair-loop semantics."""
+import threading
+
 import jax
 import numpy as np
 import pytest
@@ -365,3 +367,113 @@ def test_served_actor_matches_local_structure(served):
         assert np.asarray(traj_s[k]).shape == np.asarray(traj_l[k]).shape, k
     assert server.requests_served > 0 and server.batches_run > 0
     assert np.isfinite(np.asarray(traj_s["behavior_logp"])).all()
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: ticket-TTL expiry and serving-scope thread isolation
+# ---------------------------------------------------------------------------
+def test_ticket_ttl_expires_abandoned_results_under_concurrency(served):
+    """Crashed actors leak resolved tickets; a live fleet of submitters
+    must not let those results accumulate. Half the workers abandon every
+    other ticket (submit, never get); the TTL sweep inside flush() must
+    reclaim exactly those, while every collected ticket resolves clean."""
+    cfg, theta, _ = served
+    ttl = 16          # wide enough that a descheduled collector never
+    server = InfServer(cfg, 6, theta, max_batch=8,   # loses its result
+                       ticket_ttl_flushes=ttl)
+    obs_len, iters = 26, 20
+    errors: list = []
+    abandoned = [0, 0, 0, 0]
+
+    def worker(i, abandons):
+        rng = np.random.default_rng(i)
+        try:
+            for j in range(iters):
+                obs = rng.integers(0, 16, (2, obs_len)).astype(np.int32)
+                t = server.submit(obs)
+                if abandons and j % 2 == 0:
+                    abandoned[i] += 1            # crashed actor: no get()
+                    continue
+                a, logp, v = server.get(t)
+                if a.shape != (2,) or not np.isfinite(v).all():
+                    errors.append(f"worker {i} iter {j}: bad result")
+        except Exception as e:                    # pragma: no cover - failure path
+            errors.append(f"worker {i}: {e!r}")
+
+    threads = [threading.Thread(target=worker, args=(i, i % 2 == 0))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+    n_abandoned = sum(abandoned)
+    assert n_abandoned == 2 * (iters // 2)
+    # push the flush counter past the TTL window of the last abandoned
+    # result; every one of them must be swept, every collected ticket
+    # already popped its retention entry on get
+    driver = np.zeros((2, obs_len), np.int32)
+    for _ in range(ttl + 2):
+        server.get(server.submit(driver))
+    st = server.stats()
+    assert server.tickets_expired == n_abandoned
+    assert st["results_held"] == 0
+    assert st["rows_served"] == 2 * (4 * iters + ttl + 2)
+
+
+def test_serving_scope_is_thread_local_and_env_gated(monkeypatch):
+    """dispatch.serving() marks inference traces for the bf16 forward;
+    the scope must never bleed into a learner thread tracing concurrently
+    or survive scope exit, and unknown modes must be inert."""
+    from repro.kernels import dispatch
+
+    monkeypatch.setenv("REPRO_KERNELS_INFER", "bf16")
+    assert dispatch.infer_mode() is None          # no scope: flag is inert
+    seen: dict = {}
+    inside, release = threading.Event(), threading.Event()
+
+    def server_thread():
+        with dispatch.serving():
+            seen["in_scope"] = dispatch.infer_mode()
+            inside.set()
+            release.wait(5)                       # hold the scope open ...
+        seen["after_scope"] = dispatch.infer_mode()
+
+    def learner_thread():
+        inside.wait(5)                            # ... while a learner traces
+        seen["other_thread"] = dispatch.infer_mode()
+        release.set()
+
+    threads = [threading.Thread(target=server_thread),
+               threading.Thread(target=learner_thread)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert seen["in_scope"] == "bf16"
+    assert seen["other_thread"] is None           # thread-local, no bleed
+    assert seen["after_scope"] is None
+    assert dispatch.infer_mode() is None          # main thread untouched
+
+    # many threads toggling scopes concurrently: each sees exactly its own
+    mismatches: list = []
+
+    def toggler(i):
+        for _ in range(200):
+            with dispatch.serving():
+                if dispatch.infer_mode() != "bf16":
+                    mismatches.append((i, "in"))
+            if dispatch.infer_mode() is not None:
+                mismatches.append((i, "out"))
+
+    threads = [threading.Thread(target=toggler, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not mismatches
+
+    monkeypatch.setenv("REPRO_KERNELS_INFER", "fp4")   # not a known mode
+    with dispatch.serving():
+        assert dispatch.infer_mode() is None

@@ -1,0 +1,400 @@
+"""The serving-gateway plane: routing determinism, lineage affinity,
+occupancy spill, typed admission shed, probe-gated fleet rollout, and
+in-proc vs RPC parity (both replica-level and gateway-level).
+
+Routing/admission semantics are pinned against `FakeReplica` stubs (the
+router must not care what a replica is); parity and rollout run against
+real `InfServer`s and the real RPC wire."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import ModelKey
+from repro.infserver import InfServer
+from repro.models import init_params
+from repro.params.manifest import build_manifest
+from repro.serving import (AdmissionRejected, DeadlineBuckets,
+                           GatewayBackend, LineageRouter, ServingGateway,
+                           lineage_of, make_router)
+
+
+class FakeReplica:
+    """Protocol-complete stand-in: records every routed submit, resolves
+    instantly with zeros. Lets the routing tests control load purely via
+    fetched/unfetched tickets."""
+
+    def __init__(self):
+        self.models = {}
+        self.hashes = {}
+        self.submits = []            # (model, rows) in arrival order
+        self.flushes = 0
+        self.register_calls = 0
+        self._next = 0
+
+    def submit(self, obs, model=None):
+        obs = np.asarray(obs)
+        self.submits.append((model, obs.shape[0]))
+        tid = self._next
+        self._next += 1
+        return (tid, obs.shape[0])
+
+    def get(self, ticket):
+        _, rows = ticket
+        z = np.zeros(rows, np.float32)
+        return z, z, z
+
+    def flush(self):
+        self.flushes += 1
+
+    def register_model(self, key, params, content_hash=None, version=None):
+        self.register_calls += 1
+        self.models[key] = params
+        self.hashes[key] = content_hash
+
+    def ensure_model(self, key, params, content_hash=None):
+        self.models.setdefault(key, params)
+
+    def has_model(self, key, content_hash=None):
+        return key in self.models and (content_hash is None
+                                       or self.hashes.get(key) == content_hash)
+
+    def telemetry(self):
+        return {"queue_depth": 0, "mean_batch_latency_ms": 0.0}
+
+
+def _routed(gateway):
+    """Per-replica routed request counts from gateway stats."""
+    return [r["routed_requests"] for r in gateway.stats()["replicas"]]
+
+
+OBS = np.zeros((4, 8), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+def test_seeded_routing_determinism():
+    """The same request sequence routes identically on two fresh
+    gateways — no wall-clock, rng or id-order leakage in the router."""
+    lineages = ["main", "exploiter", "league", "main", "main", "exploiter",
+                "pfsp", "league", "main", "pfsp"]
+
+    def run():
+        fakes = [FakeReplica() for _ in range(4)]
+        gw = ServingGateway(fakes, router="lineage", max_inflight_rows=10_000)
+        for i, lin in enumerate(lineages * 5):
+            gw.submit(OBS, model=ModelKey(lin, i % 3))   # no gets: load builds
+        return [f.submits for f in fakes]
+
+    assert run() == run()
+
+
+def test_lineage_affinity_routes_to_home():
+    """Quiet fleet: every version of a lineage lands on the lineage's
+    home replica, and distinct lineages use distinct homes."""
+    fakes = [FakeReplica() for _ in range(4)]
+    router = LineageRouter()
+    gw = ServingGateway(fakes, router=router)
+    lineages = ["main", "exploiter", "league", "pfsp", "mirror"]
+    for lin in lineages:
+        for v in range(3):
+            t = gw.submit(OBS, model=ModelKey(lin, v))
+            gw.get(t)                          # drain: keep the fleet quiet
+    homes = {lin: router.home_index(ModelKey(lin, 0), 4) for lin in lineages}
+    for i, f in enumerate(fakes):
+        for model, _ in f.submits:
+            assert homes[model.agent_id] == i, \
+                f"{model} routed to {i}, home {homes[model.agent_id]}"
+    assert len(set(homes.values())) >= 2       # the hash actually spreads
+    assert router.spills == 0
+    assert router.affinity_hits == len(lineages) * 3
+
+
+def test_lineage_of_falls_back_to_str():
+    assert lineage_of(ModelKey("main", 7)) == "main"
+    assert lineage_of("teacher") == "teacher"
+
+
+def test_occupancy_spill_under_slow_replica():
+    """A home replica whose outstanding rows pile up (a slow replica in
+    closed-loop terms) sheds its lineage's overflow to the least-loaded
+    replica; the spill is counted."""
+    fakes = [FakeReplica() for _ in range(2)]
+    router = make_router("lineage", spill_min_rows=16, spill_factor=1.5)
+    gw = ServingGateway(fakes, router=router, max_inflight_rows=10_000)
+    key = ModelKey("main", 0)
+    home = router.home_index(key, 2)
+    other = 1 - home
+    tickets = [gw.submit(OBS, model=key) for _ in range(20)]  # never fetched
+    assert router.spills > 0
+    assert len(fakes[other].submits) > 0        # overflow went to the spare
+    # the home kept the pre-spill traffic
+    assert len(fakes[home].submits) >= len(fakes[other].submits)
+    # draining the home restores affinity
+    for t in tickets:
+        gw.get(t)
+    before = len(fakes[home].submits)
+    gw.get(gw.submit(OBS, model=key))
+    assert len(fakes[home].submits) == before + 1
+
+
+def test_telemetry_queue_depth_feeds_router_load():
+    """Replica-reported queue depth (the `InfServer.stats()` signal over
+    the seam) biases routing even when the gateway's own ledger is
+    empty."""
+    fakes = [FakeReplica() for _ in range(2)]
+
+    deep = {"queue_depth": 500, "mean_batch_latency_ms": 40.0}
+    fakes[0].telemetry = lambda: deep
+    gw = ServingGateway(fakes, router="least_loaded")
+    gw.refresh_telemetry()
+    for _ in range(5):
+        gw.get(gw.submit(OBS))
+    assert len(fakes[1].submits) == 5 and len(fakes[0].submits) == 0
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_admission_shed_is_typed_and_recovers():
+    fakes = [FakeReplica() for _ in range(2)]
+    gw = ServingGateway(fakes, router="least_loaded", max_inflight_rows=32)
+    held = [gw.submit(OBS) for _ in range(8)]          # 32 rows outstanding
+    with pytest.raises(AdmissionRejected) as ei:
+        gw.submit(OBS)
+    e = ei.value
+    assert e.reason == "overload" and e.limit == 32
+    assert e.inflight_rows == 32 and e.rows == 4
+    assert e.retry_after_s >= 0
+    st = gw.stats()
+    assert st["shed_requests"] == 1 and st["shed_rows"] == 4
+    for t in held:                                     # drain ...
+        gw.get(t)
+    gw.get(gw.submit(OBS))                             # ... and recover
+    assert gw.stats()["shed_requests"] == 1
+
+
+def test_all_dead_fleet_sheds_with_no_replicas():
+    fakes = [FakeReplica() for _ in range(2)]
+    gw = ServingGateway(fakes)
+    gw.mark_dead(0)
+    gw.mark_dead(1)
+    with pytest.raises(AdmissionRejected) as ei:
+        gw.submit(OBS)
+    assert ei.value.reason == "no_replicas"
+
+
+# ---------------------------------------------------------------------------
+# SLO deadline buckets
+# ---------------------------------------------------------------------------
+def test_deadline_buckets_label_and_hit_accounting():
+    b = DeadlineBuckets(edges_s=(0.01, 0.05))
+    assert b.label(0.004) == "le_10ms"
+    assert b.label(0.05) == "le_50ms"
+    assert b.label(0.2) == "le_inf" and b.label(None) == "le_inf"
+    assert b.record(0.01, 0.005) is True
+    assert b.record(0.01, 0.02) is False
+    snap = b.snapshot()["le_10ms"]
+    assert snap["count"] == 2 and snap["met"] == 1
+    assert snap["hit_rate"] == 0.5 and snap["p99_ms"] >= snap["p50_ms"]
+
+
+def test_pump_flushes_replica_with_due_deadline():
+    fakes = [FakeReplica() for _ in range(2)]
+    gw = ServingGateway(fakes, router="least_loaded")
+    gw.submit(OBS, deadline_s=0.01)
+    target = max(range(2), key=lambda i: len(fakes[i].submits))
+    assert gw.pump(now=time.perf_counter() + 10.0) == 1
+    assert fakes[target].flushes == 1
+    assert gw.pump(now=time.perf_counter() + 10.0) == 0   # ledger cleared
+
+
+def test_no_deadline_request_never_pumps():
+    fakes = [FakeReplica()]
+    gw = ServingGateway(fakes)
+    gw.submit(OBS)                                     # no deadline
+    assert gw.pump(now=time.perf_counter() + 100.0) == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet rollout (param plane)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_arch("tleague-policy-s")
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def test_fleet_rollout_ships_zero_bytes_to_hosting_replicas(served):
+    cfg, params = served
+    key = ModelKey("frozen", 3)
+    manifest = build_manifest(params, version=3)
+    replicas = [InfServer(cfg, 6, max_batch=16, seed=i) for i in range(3)]
+    # replica 0 already hosts the exact content (e.g. it was the league's
+    # co-located server before joining the fleet)
+    replicas[0].register_model(key, params, content_hash=manifest.tree_hash,
+                               version=3)
+    gw = ServingGateway(replicas)
+    cold = gw.rollout(key, params, manifest)
+    assert cold["shipped_to"] == 2 and cold["already_hosted"] == 1
+    assert cold["bytes_shipped"] == 2 * manifest.nbytes
+    assert [p["shipped"] for p in cold["replicas"]] == [False, True, True]
+    warm = gw.rollout(key, params, manifest)
+    assert warm["bytes_shipped"] == 0 and warm["already_hosted"] == 3
+    assert gw.stats()["rollout_noops"] == 4            # 1 cold + 3 warm
+    # every replica now actually serves the route
+    for r in replicas:
+        assert r.has_model(key, manifest.tree_hash)
+
+
+def test_rollout_from_pool_delta_path(served):
+    """The frozen-model propagation path: pool manifest + one pull, then
+    the probe-gated fleet install."""
+    from repro.core.model_pool import ModelPool
+
+    cfg, params = served
+    pool = ModelPool()
+    key = ModelKey("main", 1)
+    pool.push(key, params)
+    replicas = [InfServer(cfg, 6, max_batch=16, seed=i) for i in range(2)]
+    gw = ServingGateway(replicas)
+    report = gw.rollout_from_pool(pool, key)
+    assert report["shipped_to"] == 2
+    man = pool.manifest(key)
+    for r in replicas:
+        assert r.has_model(key, man.tree_hash)
+    assert gw.rollout_from_pool(pool, key)["bytes_shipped"] == 0
+
+
+# ---------------------------------------------------------------------------
+# stats across the RPC seam + parity
+# ---------------------------------------------------------------------------
+def test_stats_and_telemetry_cross_rpc_seam(served):
+    """Satellite fix: the router's occupancy/latency signal must survive
+    the wire — full `stats()` and the cheap `telemetry()` probe."""
+    from repro.distributed.transport import InfServerBackend, RpcServer
+    from repro.serving.fleet import connect
+
+    cfg, params = served
+    server = InfServer(cfg, 6, params, max_batch=16)
+    rpc = RpcServer({"inf": InfServerBackend(server)}).start()
+    try:
+        client = connect(rpc.address)
+        client.get(client.submit(np.zeros((2, 26), np.int32)))
+        st = client.stats()
+        assert st["rows_served"] == 2 and st["batches_run"] == 1
+        assert 0 < st["occupancy"] <= 1.0
+        assert st["mean_batch_latency_ms"] > 0
+        assert isinstance(st["dispatch"], dict)        # survives msgpack
+        tel = client.telemetry()
+        assert tel["rows_served"] == 2 and tel["queue_depth"] == 0
+        assert set(tel) <= set(st)        # the probe is a strict subset
+    finally:
+        rpc.close()
+
+
+def _drive_sequence(gw, keys, obs_seq):
+    outs = []
+    for obs, key in zip(obs_seq, keys):
+        t = gw.submit(obs, model=key)
+        outs.append(gw.get(t))
+    return outs
+
+
+def test_inproc_vs_rpc_gateway_parity(served):
+    """The SAME gateway + request sequence over in-process replicas and
+    over RPC replica clients must route identically and return
+    bit-matching values (values are rng-free; actions match because the
+    flush composition — and so the rng consumption — matches)."""
+    from repro.distributed.transport import InfServerBackend, RpcServer
+    from repro.serving.fleet import connect
+
+    cfg, params = served
+    key_a, key_b = ModelKey("main", 0), ModelKey("exploiter", 0)
+    rng = np.random.default_rng(0)
+    obs_seq = [rng.integers(0, 16, (3, 26)).astype(np.int32)
+               for _ in range(8)]
+    keys = [key_a, key_b] * 4
+
+    def build(remote):
+        servers = [InfServer(cfg, 6, max_batch=64, seed=i) for i in range(2)]
+        rpcs = []
+        if remote:
+            rpcs = [RpcServer({"inf": InfServerBackend(s)}).start()
+                    for s in servers]
+            reps = [connect(r.address) for r in rpcs]
+        else:
+            reps = servers
+        gw = ServingGateway(reps, router="lineage")
+        for k in (key_a, key_b):
+            gw.register_model(k, params)
+        return gw, rpcs
+
+    gw_local, _ = build(remote=False)
+    gw_rpc, rpcs = build(remote=True)
+    try:
+        local = _drive_sequence(gw_local, keys, obs_seq)
+        rpc = _drive_sequence(gw_rpc, keys, obs_seq)
+        assert _routed(gw_local) == _routed(gw_rpc)
+        for (a1, l1, v1), (a2, l2, v2) in zip(local, rpc):
+            np.testing.assert_array_equal(a1, a2)
+            np.testing.assert_allclose(l1, l2, rtol=1e-6)
+            np.testing.assert_allclose(v1, v2, rtol=1e-6)
+    finally:
+        for r in rpcs:
+            r.close()
+
+
+def test_gateway_behind_rpc_serves_infserver_protocol(served):
+    """GatewayBackend: a plain InfServerClient pointed at a gateway
+    address serves against the whole fleet, deadline tag included."""
+    from repro.distributed.transport import (InfServerClient, RpcClient,
+                                             RpcServer)
+
+    cfg, params = served
+    replicas = [InfServer(cfg, 6, params, max_batch=16, seed=i)
+                for i in range(2)]
+    gw = ServingGateway(replicas)
+    rpc = RpcServer({"inf": GatewayBackend(gw)}).start()
+    try:
+        client = InfServerClient(RpcClient(rpc.address))
+        t = client.submit(np.zeros((2, 26), np.int32), deadline_s=5.0)
+        a, logp, v = client.get(t)
+        assert a.shape == (2,) and v.shape == (2,)
+        assert client.telemetry()["alive_replicas"] == 2
+        assert gw.stats()["requests"] == 1
+        assert gw.deadlines.snapshot()                 # deadline recorded
+    finally:
+        rpc.close()
+
+
+def test_failover_resubmits_to_survivor(served):
+    """A replica death between submit and get: the retained obs rows are
+    resubmitted to a survivor and the request still answers."""
+    from repro.distributed.transport import InfServerBackend, RpcServer
+    from repro.serving.fleet import connect
+
+    cfg, params = served
+    servers = [InfServer(cfg, 6, params, max_batch=16, seed=i)
+               for i in range(2)]
+    rpcs = [RpcServer({"inf": InfServerBackend(s)}).start() for s in servers]
+    try:
+        gw = ServingGateway([connect(r.address) for r in rpcs],
+                            router="round_robin")
+        t1 = gw.submit(np.zeros((2, 26), np.int32))
+        victim = t1.handle.index
+        rpcs[victim].close()                           # hard death
+        a, logp, v = gw.get(t1)                        # fails over
+        assert a.shape == (2,)
+        assert gw.failovers >= 1 and gw.alive_replicas == 1
+        assert gw.stats()["replicas_died"] == 1
+    finally:
+        for r in rpcs:
+            try:
+                r.close()
+            except Exception:
+                pass
