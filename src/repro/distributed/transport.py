@@ -975,7 +975,11 @@ class InfServerBackend:
         self._tickets: Dict[int, Any] = {}       # insertion-ordered
         self._lock = threading.Lock()
 
-    def submit(self, obs, model: Hashable = None) -> int:
+    def submit(self, obs, model: Hashable = None,
+               deadline_s: Optional[float] = None) -> int:
+        # `deadline_s` is accepted so a gateway-aware client can talk to
+        # a single server unchanged; a lone InfServer is size-bucketed
+        # only, so the hint is ignored rather than raised on.
         t = self._server.submit(np.asarray(obs), model=model)
         with self._lock:
             self._tickets[t.tid] = t

@@ -263,7 +263,7 @@ class ServingGateway:
             gid = self._next_gid
             self._next_gid += 1
             self._acquire(h, gid, rows, deadline_abs)
-        inner = self._submit_on(h, gid, obs, model)
+        h, inner = self._submit_on(h, gid, obs, model, deadline_abs)
         gt = GatewayTicket(gid, model, obs, deadline_s, h, inner, self)
         with self._lock:
             self.requests += 1
@@ -293,30 +293,36 @@ class ServingGateway:
             self._inflight_total -= rows
             return True
 
-    def _submit_on(self, h: _Handle, gid: int, obs, model) -> Any:
+    def _submit_on(self, h: _Handle, gid: int, obs, model,
+                   deadline_abs: Optional[float]) -> Tuple[_Handle, Any]:
         """The replica call, OUTSIDE the gateway lock (it may block for a
-        replica flush). A transport death here fails over immediately."""
-        try:
-            if model is not None:
-                self._ensure_route(h, model)
-            return h.replica.submit(obs, model=model)
-        except (TransportError, OSError):
-            self._mark_dead(h)
-            self._release(gid, h)
-            with self._lock:
-                try:
-                    idx = self._router.route(
-                        model, obs.shape[0],
-                        [x.view() for x in self._handles])
-                except NoReplicas:
-                    raise AdmissionRejected(
-                        "no_replicas", rows=obs.shape[0],
-                        inflight_rows=self._inflight_total,
-                        limit=self.max_inflight_rows) from None
-                h2 = self._handles[idx]
-                self._acquire(h2, gid, obs.shape[0], None)
-            self.failovers += 1
-            return self._submit_on(h2, gid, obs, model)
+        replica flush). A transport death here fails over immediately.
+        Returns (handle, inner ticket) for the replica the submit
+        actually LANDED on — every failover hop releases the previous
+        handle's ledger and re-acquires (deadline intact) on the next, so
+        the caller's ticket always points at the replica holding the
+        rows."""
+        while True:
+            try:
+                if model is not None:
+                    self._ensure_route(h, model)
+                return h, h.replica.submit(obs, model=model)
+            except (TransportError, OSError):
+                self._mark_dead(h)
+                self._release(gid, h)
+                with self._lock:
+                    try:
+                        idx = self._router.route(
+                            model, obs.shape[0],
+                            [x.view() for x in self._handles])
+                    except NoReplicas:
+                        raise AdmissionRejected(
+                            "no_replicas", rows=obs.shape[0],
+                            inflight_rows=self._inflight_total,
+                            limit=self.max_inflight_rows) from None
+                    h = self._handles[idx]
+                    self._acquire(h, gid, obs.shape[0], deadline_abs)
+                self.failovers += 1
 
     def _ensure_route(self, h: _Handle, model: Hashable) -> None:
         """Install `model` on `h` if the gateway knows its params and has
@@ -350,13 +356,18 @@ class ServingGateway:
                 self._mark_dead(h)
                 deaths += 1
                 if deaths > self.failover_retries:
+                    self._release(gt.gid, h)
                     raise
                 self._failover(gt)
             except RemoteError:
                 # the replica is alive but no longer holds the ticket
-                # (restarted, or expired it) — resubmit, same budget
+                # (restarted, or expired it) — resubmit, same budget.
+                # On exhaustion the ledger must be released HERE: the
+                # replica stays alive, so no _mark_dead sweep will ever
+                # reclaim this gid's rows or its pending deadline.
                 deaths += 1
                 if deaths > self.failover_retries:
+                    self._release(gt.gid, h)
                     raise
                 self._failover(gt)
         self._release(gt.gid, h)
@@ -386,8 +397,8 @@ class ServingGateway:
                             else gt.t_submit + gt.deadline_s)
             self._acquire(h2, gt.gid, gt.rows, deadline_abs)
         self.failovers += 1
-        gt.handle = h2
-        gt.inner = self._submit_on(h2, gt.gid, gt.obs, gt.model)
+        gt.handle, gt.inner = self._submit_on(
+            h2, gt.gid, gt.obs, gt.model, deadline_abs)
 
     def _mark_dead(self, h: _Handle) -> None:
         with self._lock:

@@ -293,6 +293,11 @@ def test_stats_and_telemetry_cross_rpc_seam(served):
         tel = client.telemetry()
         assert tel["rows_served"] == 2 and tel["queue_depth"] == 0
         assert set(tel) <= set(st)        # the probe is a strict subset
+        # deadline_s rides along harmlessly to a single (non-gateway)
+        # server: accepted and ignored, not a server-side TypeError
+        a, _, _ = client.get(client.submit(np.zeros((2, 26), np.int32),
+                                           deadline_s=0.5))
+        assert a.shape == (2,)
     finally:
         rpc.close()
 
@@ -370,6 +375,55 @@ def test_gateway_behind_rpc_serves_infserver_protocol(served):
         assert gw.deadlines.snapshot()                 # deadline recorded
     finally:
         rpc.close()
+
+
+def test_submit_side_failover_repoints_ticket_and_keeps_deadline():
+    """A replica that dies DURING the submit call: the returned ticket
+    must point at the replica that actually holds the rows (get/release
+    target `gt.handle`), the fleet ledger must balance — rows acquired
+    on the survivor, zero on the corpse — and the request's deadline
+    must survive the hop so the pump can still cut a batch for it."""
+    from repro.distributed.transport import TransportError
+
+    class DyingReplica(FakeReplica):
+        def submit(self, obs, model=None):
+            raise TransportError("connection reset by peer")
+
+    dying, live = DyingReplica(), FakeReplica()
+    gw = ServingGateway([dying, live], router="least_loaded")
+    t = gw.submit(OBS, deadline_s=0.05)       # least-loaded tie -> index 0
+    assert t.handle.index == 1                # repointed to the survivor
+    assert gw.failovers == 1 and gw.alive_replicas == 1
+    assert gw.inflight_rows == OBS.shape[0]   # ledgered exactly once
+    per = {r["replica"]: r for r in gw.stats()["replicas"]}
+    assert per[0]["inflight_rows"] == 0
+    assert per[1]["inflight_rows"] == OBS.shape[0]
+    # the deadline followed the request: the pump flushes the survivor
+    assert gw.pump(now=time.perf_counter() + 10.0) == 1
+    assert live.flushes == 1
+    gw.get(t)
+    assert gw.inflight_rows == 0              # nothing leaked
+
+
+def test_get_exhaustion_releases_ledger_on_alive_replica():
+    """RemoteError exhaustion — the replica is ALIVE but lost the ticket
+    and the failover budget is spent — must release the gid's rows and
+    pending deadline on the way out: an alive replica is never swept by
+    `_mark_dead`, so a leak here would erode the admission cap forever
+    and make the pump flush the replica on every tick."""
+    from repro.distributed.transport import RemoteError
+
+    class AmnesiacReplica(FakeReplica):
+        def get(self, ticket):
+            raise RemoteError("KeyError: unknown ticket")
+
+    gw = ServingGateway([AmnesiacReplica()], failover_retries=0)
+    t = gw.submit(OBS, deadline_s=0.05)
+    with pytest.raises(RemoteError):
+        gw.get(t)
+    assert gw.inflight_rows == 0
+    assert gw.pump(now=time.perf_counter() + 10.0) == 0  # no stale deadline
+    assert gw.alive_replicas == 1
 
 
 def test_failover_resubmits_to_survivor(served):
