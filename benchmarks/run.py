@@ -1404,15 +1404,203 @@ def serving_gateway(out_path: str | None = None, against: str | None = None):
         _write_bench(out, record)
 
 
+def transport_throughput(out_path: str | None = None,
+                         against: str | None = None):
+    """ISSUE 10 acceptance: the transport plane's three headline axes.
+
+      * pipelining  — small-call throughput over ONE connection with a
+                      sliding window of 1 / 8 / 64 requests in flight vs
+                      the strict serial v1 loop, against a seam with a
+                      500 us service time (what real dispatches cost:
+                      BENCH_sharded puts request_task at ~340 us and
+                      inf_round at ~2800 us); the serial loop eats
+                      service + RTT per call, the pipelined connection
+                      overlaps them across the server's worker pool.
+                      Depth 64 must be >= 3x serial.
+      * shm fast path — collector-sized frames (a trajectory segment,
+                      MBs of ndarray rows) shipped same-host through the
+                      shared-memory ring vs forced TCP chunked
+                      streaming; >= 2x frames/sec (one memcpy into the
+                      ring vs kernel round trips per 256 KiB chunk)
+      * seam re-run — the BENCH_sharded rpc_seams axis (pool_pull /
+                      request_task / inf_round) re-timed on the
+                      pipelined transport, so the seam-overhead
+                      trajectory stays comparable across PRs
+
+    Writes BENCH_transport.json; with `against`, compares to the stored
+    record and fails on regression (the CI mode)."""
+    import collections
+
+    from repro.configs import get_arch
+    from repro.core import LeagueMgr, ModelKey
+    from repro.distributed import transport as tp
+    from repro.infserver import InfServer
+    from repro.models import init_params
+
+    prior = (json.loads(pathlib.Path(against).read_text())
+             if against else None)
+
+    class Sink:
+        """Echo for small calls; swallow-and-ack for frame shipping
+        (mirrors actor->DataServer put: rows go one way, a tiny ack
+        comes back)."""
+
+        SVC_S = 0.0005            # 500 us of backend service per call
+
+        @staticmethod
+        def echo(x):
+            return x
+
+        @classmethod
+        def work(cls, x):
+            time.sleep(cls.SVC_S)     # models the seam's dispatch cost
+            return x
+
+        @staticmethod
+        def take(traj):
+            return int(next(iter(traj.values())).shape[0])
+        # like DataServer.put*: consumes during dispatch, never retains —
+        # eligible for zero-copy delivery from the shm ring
+        take.__func__._zero_copy_ok = True
+
+    # -- (a) pipelined vs serial small calls ---------------------------------
+    n_calls = 600
+
+    def serial_cps(client):
+        t0 = time.perf_counter()
+        for i in range(n_calls):
+            client.call("b.work", i)
+        return n_calls / (time.perf_counter() - t0)
+
+    def windowed_cps(client, depth):
+        q = collections.deque()
+        t0 = time.perf_counter()
+        for i in range(n_calls):
+            q.append(client.call_async("b.work", i))
+            if len(q) >= depth:
+                q.popleft().result(timeout=60.0)
+        while q:
+            q.popleft().result(timeout=60.0)
+        return n_calls / (time.perf_counter() - t0)
+
+    with tp.RpcServer({"b": Sink()}) as srv:
+        v1 = tp.RpcClient(srv.address, pipeline=False)
+        serial = serial_cps(v1)                   # warm
+        serial = max(serial_cps(v1) for _ in range(2))
+        v1.close()
+        c = tp.RpcClient(srv.address)
+        depth_cps = {}
+        for depth in (1, 8, 64):
+            windowed_cps(c, depth)                # warm
+            depth_cps[depth] = max(windowed_cps(c, depth) for _ in range(2))
+            _emit(f"transport/pipelined_depth{depth}", 1e6 / depth_cps[depth],
+                  f"calls_per_s={depth_cps[depth]:.0f};svc_us=500")
+        c.close()
+    _emit("transport/serial", 1e6 / serial,
+          f"calls_per_s={serial:.0f};svc_us=500")
+    pipeline_x = depth_cps[64] / serial
+    _emit("transport/pipeline_speedup", 0.0, f"depth64_x={pipeline_x:.2f}")
+    assert pipeline_x >= 3.0, \
+        f"pipelined depth-64 only {pipeline_x:.2f}x serial (< 3x)"
+
+    # -- (b) shm ring vs TCP chunked streaming, collector-sized frames -------
+    rows, T, obs_dim = 64, 16, 1024
+    traj = {"obs": np.random.default_rng(0)
+            .normal(size=(rows, T, obs_dim)).astype(np.float32),
+            "actions": np.zeros((rows, T), np.int32)}      # ~4 MB of rows
+    frame_bytes = sum(a.nbytes for a in traj.values())
+    n_frames = 64
+
+    def frames_per_s(client):
+        t0 = time.perf_counter()
+        for _ in range(n_frames):
+            assert client.call("b.take", traj) == rows
+        return n_frames / (time.perf_counter() - t0)
+
+    fps = {}
+    with tp.RpcServer({"b": Sink()}) as srv:
+        for name, kw in (("tcp", {"shm": False}), ("shm", {})):
+            client = tp.RpcClient(srv.address, **kw)
+            frames_per_s(client)                  # warm + negotiate
+            fps[name] = max(frames_per_s(client) for _ in range(2))
+            st = client.transport_stats()
+            _emit(f"transport/{name}_frames", 1e6 / fps[name],
+                  f"frames_per_s={fps[name]:.1f};"
+                  f"MBps={fps[name] * frame_bytes / 2**20:.0f};"
+                  f"shm_blobs={st['shm_blobs']}")
+            if name == "shm":
+                assert st["shm_blobs"] > 0, "shm path never engaged"
+            client.close()
+    shm_x = fps["shm"] / fps["tcp"]
+    _emit("transport/shm_speedup", 0.0, f"x={shm_x:.2f}")
+    assert shm_x >= 2.0, f"shm only {shm_x:.2f}x TCP (< 2x)"
+
+    # -- (c) BENCH_sharded rpc_seams axis on the pipelined transport ---------
+    cfg = get_arch("tleague-policy-s")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    obs1 = np.zeros((1, 26), np.int32)
+    league = LeagueMgr()
+    league.add_learning_agent("main", params)
+    inf = InfServer(cfg, 6, params, max_batch=8)
+    inf.get(inf.submit(obs1))                     # compile off the clock
+    srv = tp.serve_league(league, inf)
+    lg = tp.LeagueMgrClient(srv.address)
+    ic = tp.InfServerClient(tp.RpcClient(srv.address))
+    key = ModelKey("main", 0)
+    try:
+        seams = {
+            "pool_pull": lambda: lg.model_pool.pull(key),
+            "request_task": lambda: lg.request_task("main"),
+            "inf_round": lambda: ic.get(ic.submit(obs1)),
+        }
+        rpc_seams = {}
+        for name, fn in seams.items():
+            us = _time(fn, iters=16)
+            rpc_seams[name] = {"rpc_us": round(us, 2)}
+            _emit(f"transport/rpc_{name}", us, "pipelined")
+    finally:
+        srv.close()
+
+    record = {
+        "codec": tp.CODEC,
+        "proto": tp._PROTO,
+        "serial_cps": round(serial, 1),
+        "pipelined_1_cps": round(depth_cps[1], 1),
+        "pipelined_8_cps": round(depth_cps[8], 1),
+        "pipelined_64_cps": round(depth_cps[64], 1),
+        "pipeline_speedup_64x": round(pipeline_x, 2),
+        "frame_bytes": frame_bytes,
+        "tcp_fps": round(fps["tcp"], 2),
+        "shm_fps": round(fps["shm"], 2),
+        "shm_speedup_x": round(shm_x, 2),
+        "rpc_seams": rpc_seams,
+    }
+    out = (pathlib.Path(out_path) if out_path
+           else _REPO / "BENCH_transport.json")
+    if against:
+        _check_against(record, prior, against, floors={
+            # the acceptance ratios are ABSOLUTE floors; the raw rates get
+            # a loose relative bar (runner classes differ)
+            "pipeline_speedup_64x": (3.0, 0.0),
+            "shm_speedup_x": (2.0, 0.0),
+            "pipelined_64_cps": (1000.0, 0.4),
+            "shm_fps": (20.0, 0.4),
+        })
+    else:
+        _write_bench(out, record)
+    return record
+
+
 BENCHES = ("table3_throughput", "table3_scaleup", "seed_infserver",
            "infserver_throughput", "learner_throughput", "league_throughput",
            "sharded_serving", "param_plane", "collector_throughput",
-           "fault_recovery", "serving_gateway", "kernels", "fig4_winrate",
-           "table12_league_eval")
+           "fault_recovery", "serving_gateway", "transport_throughput",
+           "kernels", "fig4_winrate", "table12_league_eval")
 
 # benches whose record supports the `--against FILE` regression gate
 _AGAINST_BENCHES = ("param_plane", "collector_throughput", "fault_recovery",
-                    "learner_throughput", "serving_gateway")
+                    "learner_throughput", "serving_gateway",
+                    "transport_throughput")
 
 
 def main() -> None:

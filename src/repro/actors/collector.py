@@ -182,12 +182,17 @@ class ServedCollector:
         assert self._phase == "submit", f"submit_step() in phase {self._phase}"
         E, n_l, n_o = self.venv.num_envs, self.n_l, self.n_o
         obs_np = np.asarray(self._obs)
-        tkt_l = server.submit(
+        # pipelined submits when the server speaks them (InfServerClient
+        # over the v2 transport): both slot groups' rows go on the wire
+        # back to back with no ack round trip in between — across many
+        # collectors this is the 64-actor submit storm overlapping
+        sub = getattr(server, "submit_async", None) or server.submit
+        tkt_l = sub(
             obs_np[:, list(self.learner_slots)].reshape(E * n_l, -1),
             model=theta_key)
         tkt_o = None
         if self.opp_slots:
-            tkt_o = server.submit(
+            tkt_o = sub(
                 obs_np[:, list(self.opp_slots)].reshape(E * n_o, -1),
                 model=phi_key)
         if not self.coalesce:
@@ -234,7 +239,8 @@ class ServedCollector:
             f"submit_bootstrap() in phase {self._phase}"
         E, n_l = self.venv.num_envs, self.n_l
         final_obs = np.asarray(self._obs)
-        self._boot_tkt = server.submit(
+        sub = getattr(server, "submit_async", None) or server.submit
+        self._boot_tkt = sub(
             final_obs[:, list(self.learner_slots)].reshape(E * n_l, -1),
             model=theta_key)
         if not self.coalesce:

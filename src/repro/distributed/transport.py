@@ -2,11 +2,11 @@
 
 The paper connects LeagueMgr, ModelPool, Learner, Actor and InfServer with
 ZeroMQ so each module can live in its own process on a hybrid cluster.
-This module is that transport layer for the PR 3 thread seams: a small
-length-prefixed **msgpack-over-TCP RPC** (msgpack when available — it is a
-dev extra — with a pickle fallback for bare installs; both are
-trusted-cluster protocols, not internet-facing ones) plus thin
-client/server wrappers that mirror the in-process seam APIs exactly:
+This module is that transport layer: a length-prefixed **msgpack-over-TCP
+RPC** (msgpack when available — it is a dev extra — with a pickle fallback
+for bare installs; both are trusted-cluster protocols, not internet-facing
+ones) plus thin client/server wrappers that mirror the in-process seam
+APIs exactly:
 
   * `ModelPoolClient`   — pull / push / pull_attr / freeze / keys
   * `LeagueMgrClient`   — request_task / report_result / should_freeze /
@@ -14,6 +14,32 @@ client/server wrappers that mirror the in-process seam APIs exactly:
   * `InfServerClient`   — submit / flush / get (ticket ids travel as ints)
                           / update_params / ensure_model / evict_model
   * `DataServerClient`  — put / put_when_room / wait_ready / throughput
+
+**Pipelining (protocol v2):** a client opens with a `__hello__` frame
+carrying its protocol version and host boot id. A v2 server acks, and
+from then on every request frame carries a request id (`"i"`); the
+client keeps up to `max_inflight` requests on the wire at once and a
+reader thread matches out-of-order replies to `_Future`s. `call` is
+submit-then-await-one (unchanged semantics), `call_async` returns the
+future, and `notify` is one-way fire-and-forget (frames tagged `"n"` get
+no reply at all — telemetry/priority/beat traffic stops paying a round
+trip). The server dispatches each connection's requests on a small
+thread pool so a slow method does not head-of-line-block the rest. A
+legacy peer simply errors the hello (old servers) or never sends one
+(old clients); both sides then fall back to the strict serial
+one-in-flight protocol, so mixed deployments negotiate down cleanly.
+
+**Same-host shared-memory fast path:** when the hello exchange shows
+both peers on the same host (identical boot ids) and shm is enabled, the
+client creates a `multiprocessing.shared_memory` ring and registers it
+with a `__shm__` frame. Large ndarray blobs (the streamed leaves below)
+are then written into the ring and the wire carries a 17-byte
+(tag, offset, length) stub instead of the bytes; the ring never wraps a
+blob across its physical end and falls back to inline TCP bytes whenever
+it is full, so TCP remains the universal fallback. The ring is
+client→server only (puts and obs submits are the asymmetric bulk);
+replies always travel TCP. A producer that dies unlinks its segment via
+its own resource tracker — the consumer just sees the connection drop.
 
 Every pytree that crosses the wire is freshly deserialized in the
 receiving process, so a remote WRITER can never corrupt local buffers.
@@ -25,9 +51,10 @@ exactly as in-process callers must.
 
 Wire format: 1 codec byte + 8-byte big-endian length, then one msgpack
 (or pickle) message. Requests are `{"m": "ns.method", "a": [...], "k":
-{...}}`; replies `{"ok": result}` or `{"err": message, "tb": traceback}`
-— a remote exception re-raises client-side as `RemoteError` with the
-server traceback attached, and a dead peer raises `TransportError` (the
+{...}}` (+ `"i"` under v2, + `"n": 1` for notifies); replies `{"ok":
+result}` or `{"err": message, "tb": traceback}` (+ the echoed `"i"`) — a
+remote exception re-raises client-side as `RemoteError` with the server
+traceback attached, and a dead peer raises `TransportError` (the
 killed-server path the transport tests exercise).
 
 **Streaming transfer (the param plane):** any ndarray leaf at or above
@@ -35,18 +62,24 @@ killed-server path the transport tests exercise).
 The frame carries a tiny `{"__nds__": [index, dtype, shape]}` stub
 (codec byte gains the 0x80 stream flag) and the raw leaf buffers follow
 the frame as length-prefixed blobs, sent and received in bounded
-`_CHUNK_BYTES` slices. A 100 MB pytree therefore never exists as one
-giant msgpack frame on either side: the sender streams the live array
-buffers (no serialization copy of the bulk data) and the receiver
+`_CHUNK_BYTES` slices (or as shm stubs on a negotiated ring, above).
+A 100 MB pytree therefore never exists as one giant msgpack frame on
+either side: the sender streams the live array buffers and the receiver
 assembles each leaf zero-copy via `np.frombuffer` over its own
 bytearray. A peer that dies mid-blob raises `TransportError`, exactly
 like one that dies mid-frame. `chunking(...)` overrides the
-threshold/slice size per process (the param_plane benchmark's
-monolithic-vs-chunked axis); the pickle fallback codec never streams.
+threshold/slice size per process; the pickle fallback codec never
+streams. Frame payloads land in a per-connection growable scratch
+buffer (`recv_into`, no per-frame bytes allocation); blob buffers are
+fresh per message because the decoded arrays alias them.
 
 `serve_league` is the one-call server: it namespaces one LeagueMgr (and
 its ModelPool, and optionally an InfServer) behind a single `RpcServer`
 socket — the layout `launch/train.py --role coordinator` binds.
+
+Env knobs: `REPRO_PIPELINE=0` forces the serial v1 protocol,
+`REPRO_SHM=0` disables the shm fast path, `REPRO_SHM_MB` sizes the ring
+(default 16).
 """
 from __future__ import annotations
 
@@ -61,10 +94,16 @@ import struct
 import threading
 import time
 import traceback
+from concurrent.futures import ThreadPoolExecutor
 from types import SimpleNamespace
 from typing import Any, Dict, Hashable, Iterable, List, Optional, Tuple, Union
 
 import numpy as np
+
+try:                                       # NumPy 2.0 moved byte_bounds
+    from numpy.lib.array_utils import byte_bounds as _byte_bounds
+except ImportError:                        # pragma: no cover — NumPy 1.x
+    _byte_bounds = np.byte_bounds
 
 from repro.core.types import (FreezeGate, Hyperparam, MatchResult, ModelKey,
                               Task)
@@ -84,7 +123,9 @@ except ImportError:                              # bare install: no dev extras
 
 
 class TransportError(ConnectionError):
-    """The peer is gone (refused, reset, or closed mid-message)."""
+    """The peer is gone (refused, reset, or closed mid-message). An
+    instance with `.unsent = True` guarantees the request never reached
+    the wire — always safe to retry."""
 
 
 class RetryableError(TransportError):
@@ -104,6 +145,12 @@ class RemoteError(RuntimeError):
     def __init__(self, message: str, remote_tb: str = ""):
         super().__init__(message)
         self.remote_tb = remote_tb
+
+
+class _IdleTimeout(Exception):
+    """Internal: the socket timed out between frames (no header byte yet).
+    The pipelined reader treats this as 'keep waiting' when nothing is in
+    flight and as a dead peer when replies are owed."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +182,40 @@ class RetryPolicy:
                     return
                 d = min(d, left)
             yield d
+
+
+# -- protocol constants -------------------------------------------------------
+_PROTO = 2                     # this build speaks pipelined v2, serial v1
+_HELLO_METHOD = "__hello__"    # v2 opener: a legacy server errors it, which
+                               # IS the negotiate-down signal
+_SHM_METHOD = "__shm__"        # ring registration (same-host fast path)
+
+
+def _env_flag(name: str, default: bool) -> bool:
+    v = os.environ.get(name)
+    if v is None:
+        return default
+    return v.strip().lower() not in ("0", "false", "no", "off", "")
+
+
+_PIPELINE_ENABLED = _env_flag("REPRO_PIPELINE", True)
+_SHM_ENABLED = _env_flag("REPRO_SHM", True)
+_SHM_DEFAULT_MB = float(os.environ.get("REPRO_SHM_MB", "16") or 16)
+
+
+def _host_boot_id() -> str:
+    """Same-host detection for the shm negotiation: two processes on one
+    machine read the same kernel boot id; containers with private /proc
+    fall back to hostname+MAC, which still only matches same-host."""
+    try:
+        with open("/proc/sys/kernel/random/boot_id") as f:
+            return f.read().strip()
+    except OSError:
+        import uuid
+        return f"{socket.gethostname()}-{uuid.getnode():x}"
+
+
+_BOOT_ID = _host_boot_id()
 
 
 # -- codec -------------------------------------------------------------------
@@ -234,13 +315,14 @@ def packb(obj, blobs: Optional[List[np.ndarray]] = None) -> bytes:
     return pickle.dumps(obj)
 
 
-def unpackb(buf: bytes, codec_id: Optional[int] = None,
+def unpackb(buf, codec_id: Optional[int] = None,
             blobs: Optional[List[bytearray]] = None):
     """Decode with the codec the MESSAGE was packed with (every frame
     carries a codec byte), defaulting to this process's codec. A
     msgpack-encoded frame from a peer on a bare install (no msgpack) is a
     clear error instead of a garbled pickle failure; pickle frames decode
-    anywhere (pickle is stdlib)."""
+    anywhere (pickle is stdlib). `buf` may be a memoryview into a reused
+    scratch buffer — both codecs copy what they keep."""
     codec_id = _CODEC_ID if codec_id is None else codec_id
     if codec_id == _CODEC_MSGPACK:
         if CODEC != "msgpack":
@@ -255,13 +337,182 @@ def unpackb(buf: bytes, codec_id: Optional[int] = None,
     raise TransportError(f"unknown wire codec id {codec_id}")
 
 
+# -- shared-memory ring (same-host fast path) --------------------------------
+_SHM_HEADER = 64       # one cache line; bytes 0..8 = consumer's counter "<Q"
+
+
+class _ShmRing:
+    """Producer side: a single-producer single-consumer byte ring in one
+    `multiprocessing.shared_memory` segment. Offsets are VIRTUAL (they
+    only ever grow); a blob never wraps the physical end — the tail gap
+    is skipped and accounted, so the consumer can copy each blob with one
+    slice. `try_write` returns None when the consumer is too far behind
+    (ring full) or the blob exceeds the ring; the caller then falls back
+    to inline TCP bytes, keeping shm strictly an optimization."""
+
+    def __init__(self, size: int):
+        from multiprocessing import shared_memory
+        self.size = int(size)
+        assert self.size > 0
+        self._seg = shared_memory.SharedMemory(
+            create=True, size=_SHM_HEADER + self.size)
+        self._seg.buf[:_SHM_HEADER] = b"\x00" * _SHM_HEADER
+        self._prod = 0                 # virtual write offset
+        self.wraps = 0
+
+    @property
+    def name(self) -> str:
+        return self._seg.name
+
+    def try_write(self, mv) -> Optional[Tuple[int, int]]:
+        n = len(mv)
+        if n == 0 or n > self.size:
+            return None
+        v = self._prod
+        off = v % self.size
+        if off + n > self.size:        # skip the tail gap; never wrap a blob
+            v += self.size - off
+            off = 0
+            self.wraps += 1
+        (consumed,) = struct.unpack_from("<Q", self._seg.buf, 0)
+        if v + n - consumed > self.size:
+            return None                # consumer behind: fall back to TCP
+        try:
+            # np.copyto is measurably faster than memoryview slice
+            # assignment for MB-sized blobs — this copy IS the shm path's
+            # cost, so it gets the fast lane
+            np.copyto(np.frombuffer(self._seg.buf, np.uint8, n,
+                                    _SHM_HEADER + off),
+                      np.frombuffer(mv, np.uint8))
+        except (ValueError, TypeError):   # non-contiguous source
+            self._seg.buf[_SHM_HEADER + off:_SHM_HEADER + off + n] = mv
+        self._prod = v + n
+        return (v, n)
+
+    def close(self) -> None:
+        # close() can raise BufferError under exported views and unlink
+        # can race the peer; neither failure matters at teardown
+        with contextlib.suppress(Exception):
+            self._seg.close()
+        with contextlib.suppress(Exception):
+            self._seg.unlink()
+
+
+class _ShmReader:
+    """Consumer side: attach to the client's ring WITHOUT letting this
+    process's resource tracker adopt it (bpo-38119 — the attacher's
+    tracker would unlink a segment it does not own at exit).
+
+    Reads are ZERO-COPY: `view` returns a memoryview straight into the
+    segment (a blob never wraps the physical end, so one slice always
+    covers it) and does NOT advance the consumed counter. The frame
+    reader calls `seal()` once per frame to register the frame's ring
+    span; the dispatch worker calls `release(token)` when the handler —
+    and the reply that may still reference the blobs — is done with the
+    memory. Workers finish out of order, but the consumed counter is a
+    single monotonic offset, so spans retire in ARRIVAL order: a span is
+    only published once every earlier span has been released too."""
+
+    def __init__(self, name: str, size: int):
+        from multiprocessing import shared_memory
+        self.size = int(size)
+        try:
+            try:
+                seg = shared_memory.SharedMemory(name=name, track=False)
+            except TypeError:          # Python < 3.13: no track kwarg —
+                # suppress the attach-side resource_tracker registration
+                # (bpo-38119) instead of unregistering after the fact,
+                # which double-unregisters when both peers share a process
+                from multiprocessing import resource_tracker
+                orig = resource_tracker.register
+                resource_tracker.register = lambda *a, **k: None
+                try:
+                    seg = shared_memory.SharedMemory(name=name)
+                finally:
+                    resource_tracker.register = orig
+        except (OSError, ValueError) as e:
+            raise TransportError(
+                f"cannot attach shm ring {name!r}: {e}") from e
+        if seg.size < _SHM_HEADER + self.size:
+            with contextlib.suppress(Exception):
+                seg.close()
+            raise TransportError(
+                f"shm ring {name!r} is smaller than negotiated")
+        self._seg = seg
+        # byte bounds of the mapped segment, for the dispatch-side
+        # aliasing check (`_copy_shm_backed`)
+        self.bounds = _byte_bounds(np.frombuffer(seg.buf, np.uint8))
+        self._lock = threading.Lock()
+        self._frame_end: Optional[int] = None   # reader thread only
+        self._next_seq = 0                      # arrival order (reader)
+        self._retire_seq = 0                    # next span to publish
+        self._spans: Dict[int, int] = {}        # seq -> virtual end
+        self._released: set = set()
+
+    def view(self, v: int, n: int) -> memoryview:
+        off = v % self.size
+        if n > self.size or off + n > self.size:
+            raise TransportError(
+                f"shm blob out of bounds (virt={v}, len={n}, "
+                f"ring={self.size})")
+        if self._frame_end is None or v + n > self._frame_end:
+            self._frame_end = v + n
+        return self._seg.buf[_SHM_HEADER + off:_SHM_HEADER + off + n]
+
+    def seal(self) -> Optional[int]:
+        """End of one frame (reader thread): claim the frame's ring span
+        and return the release token, or None if no blob rode the ring."""
+        if self._frame_end is None:
+            return None
+        with self._lock:
+            seq = self._next_seq
+            self._next_seq += 1
+            self._spans[seq] = self._frame_end
+        self._frame_end = None
+        return seq
+
+    def release(self, seq: int) -> None:
+        """Dispatch worker is done with the frame's blobs: retire spans
+        in arrival order and publish the new consumed offset, which is
+        what un-fills the producer's ring."""
+        with self._lock:
+            self._released.add(seq)
+            end = None
+            while self._retire_seq in self._released:
+                self._released.remove(self._retire_seq)
+                end = self._spans.pop(self._retire_seq)
+                self._retire_seq += 1
+            if end is not None:
+                (cur,) = struct.unpack_from("<Q", self._seg.buf, 0)
+                if end > cur:
+                    struct.pack_into("<Q", self._seg.buf, 0, end)
+
+    def close(self) -> None:
+        # dispatched handlers may still hold views into the mapping;
+        # close() then raises BufferError. Deliberately LEAK the mapping
+        # until process exit in that case — and disarm SharedMemory's
+        # __del__ (which would retry close and spew "Exception ignored"
+        # at GC). The PRODUCER owns the unlink either way.
+        try:
+            self._seg.close()
+        except BufferError:
+            self._seg.close = lambda: None
+        except Exception:                  # noqa: BLE001 — teardown
+            pass
+
+
 # -- framing -----------------------------------------------------------------
 # 1-byte codec id + 8-byte big-endian length, then the payload. The codec
 # byte makes a mixed msgpack/pickle deployment either work (pickle frames
 # decode anywhere) or fail with a message that names the problem. The
 # 0x80 bit of the codec byte flags a streamed message: a 4-byte blob
-# count follows the payload, then each blob as 8-byte length + raw bytes.
-def send_msg(sock: socket.socket, obj) -> None:
+# count follows the payload, then each blob. Without a negotiated shm
+# ring each blob is 8-byte length + raw bytes; with one, each blob leads
+# with a tag byte — 0 = inline (8-byte length + bytes), 1 = shm stub
+# (8-byte virtual offset + 8-byte length, no bytes on the wire).
+
+def _send_frame(sock: socket.socket, obj, shm: Optional[_ShmRing] = None,
+                stats: Optional[dict] = None) -> None:
     blobs: Optional[List[np.ndarray]] = [] if CODEC == "msgpack" else None
     payload = packb(obj, blobs)
     streamed = bool(blobs)
@@ -273,7 +524,18 @@ def send_msg(sock: socket.socket, obj) -> None:
             sock.sendall(struct.pack(">I", len(blobs)))
             for arr in blobs:
                 mv = memoryview(arr).cast("B")
-                sock.sendall(struct.pack(">Q", len(mv)))
+                if shm is not None:
+                    slot = shm.try_write(mv)
+                    if slot is not None:
+                        sock.sendall(struct.pack(">BQQ", 1, slot[0], slot[1]))
+                        if stats is not None:
+                            stats["shm_blobs"] += 1
+                        continue
+                    sock.sendall(struct.pack(">BQ", 0, len(mv)))
+                    if stats is not None:
+                        stats["shm_fallbacks"] += 1
+                else:
+                    sock.sendall(struct.pack(">Q", len(mv)))
                 # bounded slices: the bulk buffer is handed to the kernel
                 # piecewise, never serialized into one giant frame
                 for off in range(0, len(mv), _CHUNK_BYTES):
@@ -282,52 +544,127 @@ def send_msg(sock: socket.socket, obj) -> None:
         raise TransportError(f"send failed: {e}") from e
 
 
+def send_msg(sock: socket.socket, obj) -> None:
+    _send_frame(sock, obj)
+
+
+class _FrameReader:
+    """Per-connection receive state: one growable scratch buffer that
+    every frame payload lands in (`recv_into`, no per-frame allocation)
+    plus a small metadata buffer for headers and blob prefixes — kept
+    separate so reading a blob header can never clobber the payload the
+    decoder is still aliasing. Blob bytes land in FRESH bytearrays: the
+    decoded ndarrays wrap them zero-copy and outlive the scratch."""
+
+    __slots__ = ("_sock", "_scratch", "_meta")
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._scratch = bytearray(64 * 1024)
+        self._meta = bytearray(32)
+
+    def _read_into(self, mv, n: int, first: bool = False) -> None:
+        off = 0
+        while off < n:
+            try:
+                k = self._sock.recv_into(
+                    mv[off:off + min(_CHUNK_BYTES, n - off)])
+            except socket.timeout:
+                if first and off == 0:
+                    raise _IdleTimeout() from None
+                raise TransportError("recv timed out mid-frame") from None
+            except OSError as e:
+                raise TransportError(f"recv failed: {e}") from e
+            if k == 0:
+                raise TransportError("peer closed the connection")
+            off += k
+
+    def _read_meta(self, n: int, first: bool = False):
+        mv = memoryview(self._meta)[:n]
+        self._read_into(mv, n, first)
+        return self._meta
+
+    def _read_blob(self, n: int) -> bytearray:
+        buf = bytearray(n)
+        mv = memoryview(buf)
+        off = 0
+        while off < n:
+            try:
+                k = self._sock.recv_into(
+                    mv[off:off + min(_CHUNK_BYTES, n - off)])
+            except OSError as e:
+                raise TransportError(f"recv failed mid-chunk: {e}") from e
+            if k == 0:
+                raise TransportError(
+                    f"peer closed the connection mid-chunk ({off}/{n} bytes)")
+            off += k
+        return buf
+
+    def recv(self, shm: Optional[_ShmReader] = None, idle_ok: bool = False):
+        """Receive one message. With `idle_ok`, a socket timeout BEFORE
+        the first header byte raises `_IdleTimeout` (the pipelined
+        reader's 'nothing owed, keep waiting' signal); a timeout anywhere
+        else is a dead peer. With `shm`, blob prefixes are tagged (see
+        the wire format note above)."""
+        self._read_meta(9, first=idle_ok)
+        codec_byte, n = struct.unpack_from(">BQ", self._meta)
+        codec_id = codec_byte & ~_STREAM_FLAG
+        if n > len(self._scratch):
+            self._scratch = bytearray(max(n, 2 * len(self._scratch)))
+        payload = memoryview(self._scratch)[:n]
+        self._read_into(payload, n)
+        blobs: Optional[List[bytearray]] = None
+        if codec_byte & _STREAM_FLAG:
+            self._read_meta(4)
+            (count,) = struct.unpack_from(">I", self._meta)
+            blobs = []
+            for _ in range(count):
+                if shm is not None:
+                    self._read_meta(1)
+                    if self._meta[0] == 1:
+                        self._read_meta(16)
+                        virt, ln = struct.unpack_from(">QQ", self._meta)
+                        blobs.append(shm.view(virt, ln))
+                        continue
+                self._read_meta(8)
+                (ln,) = struct.unpack_from(">Q", self._meta)
+                blobs.append(self._read_blob(ln))
+        return unpackb(payload, codec_id, blobs)
+
+
 def recv_msg(sock: socket.socket):
-    header = _recv_exactly(sock, 9)
-    codec_byte, n = struct.unpack(">BQ", header)
-    codec_id = codec_byte & ~_STREAM_FLAG
-    payload = _recv_exactly(sock, n)
-    blobs: Optional[List[bytearray]] = None
-    if codec_byte & _STREAM_FLAG:
-        (count,) = struct.unpack(">I", _recv_exactly(sock, 4))
-        blobs = []
-        for _ in range(count):
-            (ln,) = struct.unpack(">Q", _recv_exactly(sock, 8))
-            blobs.append(_recv_into(sock, ln))
-    return unpackb(payload, codec_id, blobs)
+    """One-shot receive (fresh scratch) — tests and hand-rolled wire
+    exchanges; long-lived connections keep a `_FrameReader`."""
+    return _FrameReader(sock).recv()
 
 
-def _recv_exactly(sock: socket.socket, n: int) -> bytes:
-    chunks = []
-    while n:
-        try:
-            chunk = sock.recv(min(n, 1 << 20))
-        except OSError as e:
-            raise TransportError(f"recv failed: {e}") from e
-        if not chunk:
-            raise TransportError("peer closed the connection")
-        chunks.append(chunk)
-        n -= len(chunk)
-    return b"".join(chunks)
-
-
-def _recv_into(sock: socket.socket, n: int) -> bytearray:
-    """Receive exactly `n` raw bytes into one preallocated buffer in
-    bounded slices — the zero-copy landing pad for a streamed blob. A
-    peer that dies mid-blob surfaces as TransportError here."""
-    buf = bytearray(n)
-    mv = memoryview(buf)
-    off = 0
-    while off < n:
-        try:
-            k = sock.recv_into(mv[off:off + min(_CHUNK_BYTES, n - off)])
-        except OSError as e:
-            raise TransportError(f"recv failed mid-chunk: {e}") from e
-        if k == 0:
-            raise TransportError(
-                f"peer closed the connection mid-chunk ({off}/{n} bytes)")
-        off += k
-    return buf
+def _copy_shm_backed(obj, lo: int, hi: int):
+    """Replace every ndarray whose memory lies inside the shm ring
+    [lo, hi) with a private copy. The dispatch worker runs this on the
+    request args when the target method does NOT declare
+    `_zero_copy_ok = True` — such a handler may retain the array past
+    the dispatch (e.g. `InfServer.submit` references obs until flush),
+    and the ring span is recycled the moment the dispatch returns.
+    Handlers that copy-or-finish during dispatch (`DataServer.put*`
+    copies rows into its preallocated ring) mark themselves and skip
+    this — that is the zero-copy fast path."""
+    if isinstance(obj, np.ndarray):
+        lo_a, hi_a = _byte_bounds(obj)
+        return obj.copy() if (lo_a >= lo and hi_a <= hi) else obj
+    if isinstance(obj, dict):
+        return {k: _copy_shm_backed(v, lo, hi) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return tuple(_copy_shm_backed(v, lo, hi) for v in obj)
+    if isinstance(obj, list):
+        return [_copy_shm_backed(v, lo, hi) for v in obj]
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        for f in dataclasses.fields(obj):
+            v = getattr(obj, f.name)
+            c = _copy_shm_backed(v, lo, hi)
+            if c is not v:
+                object.__setattr__(obj, f.name, c)
+        return obj
+    return obj
 
 
 def parse_addr(addr: str) -> Tuple[str, int]:
@@ -444,14 +781,26 @@ class RpcServer:
     `"ns.name"` resolves `getattr(objects[ns], name)` — called with the
     request args when callable, returned as a snapshot value otherwise
     (so plain attributes like `LeagueMgr.frozen_pool` are readable
-    remotely). Dunder/private names never resolve. One handler thread per
-    connection; the backend objects' own locks provide the concurrency
-    contract, exactly as they do for in-process threads."""
+    remotely). Dunder/private names never resolve.
+
+    One handler thread per connection; a connection whose client opens
+    with a v2 `__hello__` is upgraded to the pipelined protocol — its
+    requests dispatch on a per-connection thread pool (`conn_workers`)
+    and replies go out tagged with the request id as they finish, out of
+    order. Every other connection is served with the strict serial v1
+    loop. The backend objects' own locks provide the concurrency
+    contract, exactly as they do for in-process threads (multiple serial
+    connections already dispatched concurrently)."""
 
     def __init__(self, objects: Dict[str, Any], host: str = "127.0.0.1",
-                 port: int = 0, fault_plan: Optional[FaultPlan] = None):
+                 port: int = 0, fault_plan: Optional[FaultPlan] = None,
+                 pipeline: Optional[bool] = None, conn_workers: int = 8,
+                 shm: Optional[bool] = None):
         self._objects = {ns: o for ns, o in objects.items() if o is not None}
         self.fault_plan = fault_plan
+        self._pipeline = _PIPELINE_ENABLED if pipeline is None else bool(pipeline)
+        self._conn_workers = max(1, int(conn_workers))
+        self._shm = _SHM_ENABLED if shm is None else bool(shm)
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -484,46 +833,177 @@ class RpcServer:
                 continue
             except OSError:
                 return
+            # pipelined replies go out as bursts of small frames; Nagle
+            # would hold each burst for the peer's delayed ACK
+            with contextlib.suppress(OSError):
+                conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             with self._lock:
                 self._conns.append(conn)
             threading.Thread(target=self._serve_conn, args=(conn,),
                              daemon=True).start()
 
     def _serve_conn(self, conn: socket.socket):
+        rd = _FrameReader(conn)
+        try:
+            try:
+                first = rd.recv()
+            except TransportError:
+                return
+            if (self._pipeline and isinstance(first, dict)
+                    and first.get("m") == _HELLO_METHOD):
+                self._serve_pipelined(conn, rd, first)
+            else:
+                self._serve_legacy(conn, rd, first)
+        finally:
+            conn.close()
+
+    # - v1: strict serial request/reply (legacy clients, pipeline=False) -
+    def _serve_legacy(self, conn: socket.socket, rd: _FrameReader, req):
+        while not self._stop.is_set():
+            rule = (self.fault_plan.decide(req.get("m", ""))
+                    if self.fault_plan is not None else None)
+            if rule is not None:
+                if rule.kind == "drop":
+                    return                 # request lost, never dispatched
+                if rule.kind == "delay":
+                    time.sleep(rule.delay_s)
+            reply = self._dispatch(req)
+            if rule is not None and rule.kind == "drop_reply":
+                return                     # executed, reply lost
+            if rule is not None and rule.kind == "close_mid_chunk":
+                with contextlib.suppress(OSError):
+                    _send_truncated(conn, reply)
+                return
+            try:
+                send_msg(conn, reply)
+            except TransportError:
+                return                     # peer gone mid-reply
+            except Exception as e:         # noqa: BLE001 — result didn't
+                # serialize (packb raises before any bytes hit the
+                # socket): ship the failure as a RemoteError instead of
+                # dropping the connection, which clients would misread
+                # as a server shutdown
+                send_msg(conn, {"err": f"unserializable reply: "
+                                       f"{type(e).__name__}: {e}",
+                                "tb": traceback.format_exc()})
+            try:
+                req = rd.recv()
+            except TransportError:
+                return
+
+    # - v2: pipelined, id-tagged, out-of-order replies ----------------------
+    def _serve_pipelined(self, conn: socket.socket, rd: _FrameReader, hello):
+        send_lock = threading.Lock()
+        shm_reader: Optional[_ShmReader] = None
+        try:
+            client_proto = int((hello.get("a") or [1])[0])
+        except (TypeError, ValueError):
+            client_proto = 1
+
+        def shutdown():
+            # wake our own blocked rd.recv AND the client's reader
+            with contextlib.suppress(OSError):
+                conn.shutdown(socket.SHUT_RDWR)
+
+        def reply(msg):
+            try:
+                with send_lock:
+                    send_msg(conn, msg)
+            except TransportError:
+                shutdown()
+            except Exception as e:         # noqa: BLE001 — unserializable
+                # reply: packb raised before any bytes hit the socket
+                with contextlib.suppress(Exception):
+                    with send_lock:
+                        send_msg(conn, {
+                            "i": msg.get("i"),
+                            "err": f"unserializable reply: "
+                                   f"{type(e).__name__}: {e}",
+                            "tb": traceback.format_exc()})
+
+        reply({"i": hello.get("i"),
+               "ok": {"proto": min(_PROTO, max(1, client_proto)),
+                      "boot": _BOOT_ID, "shm": self._shm}})
+        pool = ThreadPoolExecutor(
+            max_workers=self._conn_workers,
+            thread_name_prefix=f"rpc-worker@{self.address}")
         try:
             while not self._stop.is_set():
                 try:
-                    req = recv_msg(conn)
+                    req = rd.recv(shm=shm_reader)
                 except TransportError:
                     return
-                rule = (self.fault_plan.decide(req.get("m", ""))
+                # frames that used ring blobs hold their span until the
+                # dispatch worker releases it (zero-copy reads)
+                token = shm_reader.seal() if shm_reader is not None else None
+                method = req.get("m", "") if isinstance(req, dict) else ""
+                if method == _SHM_METHOD:
+                    ok = False
+                    if self._shm:
+                        try:
+                            shm_reader = _ShmReader(
+                                req["a"][0], int(req["a"][1]))
+                            ok = True
+                        except (TransportError, Exception):  # noqa: B014
+                            shm_reader = None
+                    reply({"i": req.get("i"), "ok": bool(ok)})
+                    continue
+                rule = (self.fault_plan.decide(method)
                         if self.fault_plan is not None else None)
-                if rule is not None:
-                    if rule.kind == "drop":
-                        return                 # request lost, never dispatched
-                    if rule.kind == "delay":
-                        time.sleep(rule.delay_s)
-                reply = self._dispatch(req)
-                if rule is not None and rule.kind == "drop_reply":
-                    return                     # executed, reply lost
-                if rule is not None and rule.kind == "close_mid_chunk":
-                    with contextlib.suppress(OSError):
-                        _send_truncated(conn, reply)
-                    return
-                try:
-                    send_msg(conn, reply)
-                except TransportError:
-                    return                     # peer gone mid-reply
-                except Exception as e:         # noqa: BLE001 — result didn't
-                    # serialize (packb raises before any bytes hit the
-                    # socket): ship the failure as a RemoteError instead of
-                    # dropping the connection, which clients would misread
-                    # as a server shutdown
-                    send_msg(conn, {"err": f"unserializable reply: "
-                                           f"{type(e).__name__}: {e}",
-                                    "tb": traceback.format_exc()})
+                if rule is not None and rule.kind == "drop":
+                    return                 # request lost, never dispatched
+                pool.submit(self._handle_pipelined, conn, send_lock,
+                            shutdown, reply, req, rule, shm_reader, token)
         finally:
-            conn.close()
+            pool.shutdown(wait=False)
+            if shm_reader is not None:
+                shm_reader.close()
+
+    def _handle_pipelined(self, conn, send_lock, shutdown, reply, req, rule,
+                          shm=None, token=None):
+        try:
+            if rule is not None and rule.kind == "delay":
+                time.sleep(rule.delay_s)
+            if token is not None and not self._zero_copy_ok(req):
+                # the handler may retain the ring-backed arrays past the
+                # dispatch; privatize them before the span is recycled
+                lo, hi = shm.bounds
+                req["a"] = _copy_shm_backed(req.get("a", ()), lo, hi)
+                req["k"] = _copy_shm_backed(req.get("k", {}), lo, hi)
+            result = self._dispatch(req)
+            if req.get("n"):
+                return                     # one-way notify: no reply at all
+            if rule is not None and rule.kind == "drop_reply":
+                shutdown()                 # executed, connection dies
+                return
+            result["i"] = req.get("i")
+            if rule is not None and rule.kind == "close_mid_chunk":
+                with contextlib.suppress(OSError):
+                    with send_lock:
+                        _send_truncated(conn, result)
+                shutdown()
+                return
+            reply(result)
+        except Exception:                  # noqa: BLE001 — a worker must
+            # never die silently; treat any escape as a dead connection
+            shutdown()
+        finally:
+            if token is not None:
+                # reply (which may reference the blobs) is out: retire
+                # the frame's ring span so the producer can reuse it
+                shm.release(token)
+
+    def _zero_copy_ok(self, req) -> bool:
+        """Does the target method declare it never retains argument
+        arrays past the dispatch (`_zero_copy_ok = True`)?"""
+        try:
+            ns, _, name = req.get("m", "").partition(".")
+            if name.startswith("_") or not name:
+                return False
+            target = getattr(self._objects.get(ns), name, None)
+            return bool(getattr(target, "_zero_copy_ok", False))
+        except Exception:                  # noqa: BLE001 — resolution
+            return False                   # failures fall to the safe copy
 
     def _dispatch(self, req) -> dict:
         try:
@@ -560,9 +1040,146 @@ class RpcServer:
 
 
 # -- client ------------------------------------------------------------------
+class _Future:
+    """Minimal thread-safe future for pipelined replies. `result` raises
+    the remote/transport failure or returns the reply VALUE (`"ok"`,
+    already unwrapped)."""
+
+    __slots__ = ("_ev", "_result", "_exc")
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+
+    def set_result(self, value) -> None:
+        self._result = value
+        self._ev.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._ev.set()
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError(f"no reply within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+
+class _ClientConn:
+    """One live connection: socket + frame reader + (for v2) the pending
+    request-id → future map the reader thread resolves. `fail` is the
+    single teardown path — it poisons every pending future, wakes both a
+    blocked serial caller and the reader, and releases the shm ring."""
+
+    __slots__ = ("sock", "rd", "addr", "send_lock", "plock", "pending",
+                 "next_rid", "proto", "shm", "dead", "reader", "stats", "sem")
+
+    def __init__(self, sock: socket.socket, addr: str, max_inflight: int):
+        self.sock = sock
+        self.rd = _FrameReader(sock)
+        self.addr = addr
+        self.send_lock = threading.Lock()
+        self.plock = threading.Lock()
+        self.pending: Dict[int, _Future] = {}
+        self.next_rid = 0
+        self.proto = 1
+        self.shm: Optional[_ShmRing] = None
+        self.dead: Optional[TransportError] = None
+        self.reader: Optional[threading.Thread] = None
+        self.stats = {"shm_blobs": 0, "shm_fallbacks": 0}
+        self.sem = threading.Semaphore(max_inflight)
+
+    def rid(self) -> int:
+        with self.plock:
+            r = self.next_rid
+            self.next_rid += 1
+            return r
+
+    def has_pending(self) -> bool:
+        with self.plock:
+            return bool(self.pending)
+
+    def pop_pending(self, rid) -> Optional[_Future]:
+        with self.plock:
+            fut = self.pending.pop(rid, None)
+        if fut is not None:
+            self.sem.release()
+        return fut
+
+    def submit(self, method: str, args, kwargs) -> _Future:
+        """Register a future and put the request on the wire (v2 only).
+        Raises TransportError with `.unsent = True` when the connection
+        is already down (nothing hit the wire — safe to retry); a send
+        failure fails the whole connection and re-raises ambiguous."""
+        fut = _Future()
+        self.sem.acquire()
+        registered = False
+        try:
+            with self.plock:
+                if self.dead is not None:
+                    e = TransportError(
+                        f"connection to {self.addr} is down: {self.dead}")
+                    e.unsent = True
+                    raise e
+                rid = self.next_rid
+                self.next_rid += 1
+                self.pending[rid] = fut
+            registered = True
+        finally:
+            if not registered:
+                self.sem.release()
+        try:
+            with self.send_lock:
+                _send_frame(self.sock,
+                            {"i": rid, "m": method, "a": list(args),
+                             "k": kwargs},
+                            shm=self.shm, stats=self.stats)
+        except TransportError as e:
+            self.fail(e)
+            raise
+        return fut
+
+    def send_notify(self, method: str, args, kwargs) -> None:
+        with self.plock:
+            if self.dead is not None:
+                e = TransportError(
+                    f"connection to {self.addr} is down: {self.dead}")
+                e.unsent = True
+                raise e
+        with self.send_lock:
+            _send_frame(self.sock,
+                        {"m": method, "a": list(args), "k": kwargs, "n": 1},
+                        shm=self.shm, stats=self.stats)
+
+    def fail(self, exc: TransportError) -> None:
+        with self.plock:
+            if self.dead is None:
+                self.dead = exc
+            pending, self.pending = self.pending, {}
+        for fut in pending.values():
+            fut.set_exception(TransportError(str(exc)))
+            self.sem.release()
+        with contextlib.suppress(OSError):
+            self.sock.shutdown(socket.SHUT_RDWR)
+        with contextlib.suppress(OSError):
+            self.sock.close()
+        shm, self.shm = self.shm, None
+        if shm is not None:
+            shm.close()
+
+
 class RpcClient:
-    """One connection, serialized request/reply calls (thread-safe via a
-    lock — give each worker thread its own client for parallel calls).
+    """One connection, pipelined when the peer speaks v2 (thread-safe:
+    any number of threads may `call`/`call_async`/`notify` concurrently
+    and share the connection — requests interleave on the wire and the
+    reader thread routes each reply to its caller; against a legacy peer
+    calls serialize on a lock exactly as before).
 
     Failure handling (the robustness plane):
 
@@ -576,10 +1193,20 @@ class RpcClient:
     * a NON-idempotent call that fails after the request was (possibly)
       sent raises `RetryableError`: the side effect may have happened, so
       the caller must resolve it at the protocol layer instead of the
-      transport resending blind.
-    * `abort()` (another thread) poisons the client: the in-flight call
+      transport resending blind. A failure guaranteed pre-wire carries
+      `.unsent = True` and retries freely.
+    * `abort()` (another thread) poisons the client: every in-flight call
       wakes with TransportError and NO further retry — a heartbeat
       monitor that declared the peer dead must not fight a 5s backoff.
+    * a connection failure poisons ALL of its in-flight futures (the
+      transport cannot know which requests the dead server processed).
+
+    `call_async` submits without waiting and returns a `_Future`; against
+    a legacy peer it degrades to the synchronous call with an
+    already-resolved future. `notify` is one-way: no reply is ever
+    generated server-side (v2) or the reply is drained and discarded
+    (legacy); send failures drop the message (`notify_drops` counts) —
+    beat/telemetry traffic must never block progress.
 
     `connect_retries`/`retry_delay_s` are the legacy knobs: they map onto
     `RetryPolicy(max_attempts=connect_retries, base_s=retry_delay_s,
@@ -591,7 +1218,11 @@ class RpcClient:
                  timeout: Optional[float] = None,
                  connect_retries: int = 50, retry_delay_s: float = 0.1,
                  retry: Optional[RetryPolicy] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 pipeline: Optional[bool] = None,
+                 shm: Optional[bool] = None,
+                 shm_bytes: Optional[int] = None,
+                 max_inflight: int = 256):
         if isinstance(address, str):
             self._endpoints = [a.strip() for a in address.split(",") if a.strip()]
         else:
@@ -603,9 +1234,15 @@ class RpcClient:
             base_s=retry_delay_s, max_attempts=max(1, connect_retries),
             deadline_s=max(1, connect_retries) * retry_delay_s)
         self._rng = random.Random(seed)
-        self._sock: Optional[socket.socket] = None
+        self._pipeline = _PIPELINE_ENABLED if pipeline is None else bool(pipeline)
+        self._shm = _SHM_ENABLED if shm is None else bool(shm)
+        self._shm_bytes = int(shm_bytes if shm_bytes is not None
+                              else _SHM_DEFAULT_MB * (1 << 20))
+        self._max_inflight = max(1, int(max_inflight))
+        self._conn: Optional[_ClientConn] = None
         self._lock = threading.Lock()
         self._aborted = False
+        self.notify_drops = 0
 
     @property
     def address(self) -> str:
@@ -616,94 +1253,295 @@ class RpcClient:
     def endpoints(self) -> Tuple[str, ...]:
         return tuple(self._endpoints)
 
-    def _connect_once(self) -> socket.socket:
-        """One connection attempt to the current endpoint; no retries here
-        — `call` owns the retry/rotate/backoff loop."""
-        if self._sock is None:
+    # - connection lifecycle -------------------------------------------------
+    def _ensure_conn(self) -> _ClientConn:
+        """Return the live connection, dialing + negotiating a new one if
+        needed. Every TransportError raised here carries `.unsent = True`
+        — no caller request has touched the wire yet."""
+        with self._lock:
+            if self._aborted:
+                e = TransportError(f"client for {self.address} was aborted")
+                e.unsent = True
+                raise e
+            conn = self._conn
+            if conn is not None and conn.dead is None:
+                return conn
+            self._conn = None
             host, port = parse_addr(self.address)
             try:
                 sock = socket.create_connection((host, port), timeout=10.0)
             except OSError as e:
-                raise TransportError(
-                    f"cannot connect to {self.address}: {e}") from e
+                err = TransportError(f"cannot connect to {self.address}: {e}")
+                err.unsent = True
+                raise err from e
             sock.settimeout(self._timeout)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-            self._sock = sock
-        return self._sock
+            conn = _ClientConn(sock, self.address, self._max_inflight)
+            if self._pipeline:
+                try:
+                    self._negotiate(conn)
+                except TransportError as e:
+                    with contextlib.suppress(OSError):
+                        sock.close()
+                    e.unsent = True    # only the internal hello was on the wire
+                    raise
+            if conn.proto >= 2:
+                t = threading.Thread(
+                    target=self._reader_loop, args=(conn,),
+                    name=f"rpc-reader@{self.address}", daemon=True)
+                conn.reader = t
+                t.start()
+            self._conn = conn
+            return conn
+
+    def _negotiate(self, conn: _ClientConn) -> None:
+        """Synchronous hello exchange (the reader is not running yet). A
+        legacy server dispatches `__hello__`, fails to resolve it and
+        answers `{"err": ...}` — that IS the negotiate-down signal; we
+        stay on the serial v1 protocol over the same connection. A v2
+        server acks with its proto/boot/shm capabilities; matching boot
+        ids then negotiate the shm ring with a second exchange."""
+        _send_frame(conn.sock, {"i": conn.rid(), "m": _HELLO_METHOD,
+                                "a": [_PROTO], "k": {"boot": _BOOT_ID}})
+        reply = conn.rd.recv()
+        ack = reply.get("ok") if isinstance(reply, dict) else None
+        if not isinstance(ack, dict):
+            conn.proto = 1                 # legacy peer errored the hello
+            return
+        try:
+            conn.proto = min(_PROTO, max(1, int(ack.get("proto", 1))))
+        except (TypeError, ValueError):
+            conn.proto = 1
+        if not (conn.proto >= 2 and self._shm and ack.get("shm")
+                and ack.get("boot") == _BOOT_ID):
+            return
+        try:
+            ring = _ShmRing(self._shm_bytes)
+        except Exception:                  # noqa: BLE001 — /dev/shm full or
+            return                         # absent: silently stay on TCP
+        try:
+            _send_frame(conn.sock, {"i": conn.rid(), "m": _SHM_METHOD,
+                                    "a": [ring.name, ring.size], "k": {}})
+            ack2 = conn.rd.recv()
+        except TransportError:
+            ring.close()
+            raise
+        if isinstance(ack2, dict) and ack2.get("ok"):
+            conn.shm = ring
+        else:
+            ring.close()
+
+    def _reader_loop(self, conn: _ClientConn) -> None:
+        """Route id-tagged replies to their futures, out of order. A
+        socket timeout only kills the connection when replies are owed;
+        an idle pipelined connection waits forever (liveness is the
+        heartbeat plane's job, not the transport's)."""
+        while True:
+            try:
+                msg = conn.rd.recv(idle_ok=True)
+            except _IdleTimeout:
+                if conn.has_pending():
+                    conn.fail(TransportError(
+                        f"timed out after {self._timeout}s waiting for a "
+                        f"reply from {conn.addr}"))
+                    return
+                continue
+            except TransportError as e:
+                conn.fail(e)
+                return
+            except Exception as e:         # noqa: BLE001 — a decode bug must
+                conn.fail(TransportError(f"reader failed: {e}"))
+                return
+            rid = msg.get("i") if isinstance(msg, dict) else None
+            fut = conn.pop_pending(rid)
+            if fut is None:
+                continue                   # stale reply after a local drop
+            if "err" in msg:
+                fut.set_exception(RemoteError(msg["err"], msg.get("tb", "")))
+            else:
+                fut.set_result(msg.get("ok"))
+
+    def _drop_conn(self, conn: _ClientConn, exc: TransportError) -> None:
+        with self._lock:
+            if self._conn is conn:
+                self._conn = None
+        conn.fail(exc)
 
     def _rotate(self) -> None:
         if len(self._endpoints) > 1:
             self._ep_i = (self._ep_i + 1) % len(self._endpoints)
 
+    # - the three call shapes ------------------------------------------------
     def call(self, method: str, *args, idempotent: bool = False, **kwargs):
-        with self._lock:
-            delays = self._retry.delays(self._rng)
-            last: Optional[TransportError] = None
-            while True:
+        """Submit and await one reply (the classic shape). Pipelined
+        under v2 — other threads' calls overlap on the same connection;
+        serial with the connection lock held across the round trip under
+        v1."""
+        delays = self._retry.delays(self._rng)
+        last: Optional[TransportError] = None
+        while True:
+            if self._aborted:
+                raise last or TransportError(
+                    f"client for {self.address} was aborted")
+            sent = False
+            conn: Optional[_ClientConn] = None
+            try:
+                conn = self._ensure_conn()
+                if conn.proto >= 2:
+                    sent = True
+                    fut = conn.submit(method, args, kwargs)
+                    return fut.result()    # RemoteError propagates, no retry
+                with conn.send_lock:
+                    sent = True
+                    _send_frame(conn.sock,
+                                {"m": method, "a": list(args), "k": kwargs})
+                    reply = conn.rd.recv()
+                if "err" in reply:
+                    raise RemoteError(reply["err"], reply.get("tb", ""))
+                return reply.get("ok")
+            except TransportError as e:
+                if conn is not None:
+                    self._drop_conn(conn, e)
+                last = e
                 if self._aborted:
-                    raise last or TransportError(
-                        f"client for {self.address} was aborted")
-                sent = False
+                    raise
+                if sent and not idempotent and not getattr(e, "unsent", False):
+                    raise RetryableError(
+                        f"{method} may or may not have executed on "
+                        f"{self.address}: {e}") from e
                 try:
-                    sock = self._connect_once()
-                    sent = True          # bytes may hit the wire from here on
-                    send_msg(sock, {"m": method, "a": list(args), "k": kwargs})
-                    reply = recv_msg(sock)
-                    break
-                except TransportError as e:
-                    self.close_locked()
-                    last = e
-                    if self._aborted:
-                        raise
-                    if sent and not idempotent:
-                        raise RetryableError(
-                            f"{method} may or may not have executed on "
-                            f"{self.address}: {e}") from e
-                    try:
-                        delay = next(delays)
-                    except StopIteration:
-                        raise TransportError(
-                            f"cannot reach any of {self._endpoints} "
-                            f"for {method}: {last}") from last
-                    self._rotate()
-                    if delay > 0:
-                        time.sleep(delay)
-        if "err" in reply:
-            raise RemoteError(reply["err"], reply.get("tb", ""))
-        return reply["ok"]
+                    delay = next(delays)
+                except StopIteration:
+                    raise TransportError(
+                        f"cannot reach any of {self._endpoints} "
+                        f"for {method}: {last}") from last
+                self._rotate()
+                if delay > 0:
+                    time.sleep(delay)
 
-    def close_locked(self) -> None:
-        if self._sock is not None:
-            self._sock.close()
-            self._sock = None
+    def call_async(self, method: str, *args, **kwargs) -> _Future:
+        """Submit without waiting; returns a `_Future` whose `result()`
+        yields the reply value or raises RemoteError/TransportError. One
+        attempt, no retry loop — a connect failure raises immediately
+        (with `.unsent = True`) so fan-out callers can fail over fast.
+        Against a legacy peer this degrades to the synchronous retrying
+        `call` wrapped in an already-resolved future."""
+        if self._aborted:
+            e = TransportError(f"client for {self.address} was aborted")
+            e.unsent = True
+            raise e
+        conn = self._ensure_conn()
+        if conn.proto >= 2:
+            try:
+                return conn.submit(method, args, kwargs)
+            except TransportError as e:
+                self._drop_conn(conn, e)
+                raise
+        fut = _Future()
+        try:
+            fut.set_result(self.call(method, *args, **kwargs))
+        except (TransportError, RemoteError) as e:
+            fut.set_exception(e)
+        return fut
 
+    def notify(self, method: str, *args, **kwargs) -> bool:
+        """One-way fire-and-forget: no reply is consumed, so no round
+        trip is paid (under v2 the server generates no reply at all).
+        Returns False — and counts `notify_drops` — instead of raising
+        when the message could not be handed to the wire; beat and
+        telemetry traffic must never block or kill progress."""
+        if self._aborted:
+            self.notify_drops += 1
+            return False
+        try:
+            conn = self._ensure_conn()
+        except TransportError:
+            self.notify_drops += 1
+            return False
+        try:
+            if conn.proto >= 2:
+                conn.send_notify(method, args, kwargs)
+            else:
+                with conn.send_lock:
+                    _send_frame(conn.sock,
+                                {"m": method, "a": list(args), "k": kwargs})
+                    conn.rd.recv()         # drain + discard the v1 reply
+        except TransportError as e:
+            self._drop_conn(conn, e)
+            self.notify_drops += 1
+            return False
+        return True
+
+    # - teardown + introspection ---------------------------------------------
     def close(self) -> None:
         with self._lock:
-            self.close_locked()
+            conn, self._conn = self._conn, None
+        if conn is not None:
+            conn.fail(TransportError(f"client for {conn.addr} closed"))
 
     def abort(self) -> None:
-        """Force-close from ANOTHER thread: `shutdown` wakes a caller
-        blocked inside `recv` (it raises TransportError there), which a
-        plain `close` does not on Linux. Poisons the client against
-        further retries. Deliberately lock-free — the blocked caller is
-        holding the lock."""
+        """Force-close from ANOTHER thread: fails the connection, which
+        shuts the socket down (waking a v1 caller blocked in recv and the
+        v2 reader) and poisons every pipelined future. Poisons the client
+        against further retries. Deliberately takes no client lock — a
+        blocked caller may be holding it."""
         self._aborted = True
-        sock = self._sock
-        if sock is not None:
-            try:
-                sock.shutdown(socket.SHUT_RDWR)
-            except OSError:
-                pass
-            try:
-                sock.close()
-            except OSError:
-                pass
+        conn = self._conn
+        if conn is not None:
+            conn.fail(TransportError(
+                f"client for {self.address} was aborted"))
+
+    def transport_stats(self) -> dict:
+        """Negotiation + fast-path counters for benches and tests."""
+        conn = self._conn
+        shm = conn.shm if conn is not None else None
+        return {
+            "proto": conn.proto if conn is not None else 0,
+            "shm": shm is not None,
+            "shm_blobs": conn.stats["shm_blobs"] if conn is not None else 0,
+            "shm_fallbacks": (conn.stats["shm_fallbacks"]
+                              if conn is not None else 0),
+            "shm_wraps": shm.wraps if shm is not None else 0,
+            "notify_drops": self.notify_drops,
+        }
+
+
+class _ShipFuture:
+    """Future for a non-idempotent async ship (`put_when_room_async`):
+    a transport failure after the frame may have hit the wire surfaces
+    as `RetryableError` from `result()`, exactly like the synchronous
+    call raising it — the caller resolves the ambiguity (a duplicated or
+    lost segment is just data). A pre-wire failure (`.unsent`) passes
+    through as plain TransportError: safe to resubmit."""
+
+    __slots__ = ("_fut", "_addr")
+
+    def __init__(self, fut: _Future, addr: str):
+        self._fut = fut
+        self._addr = addr
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None):
+        try:
+            return self._fut.result(timeout)
+        except RetryableError:
+            raise
+        except TransportError as e:
+            if getattr(e, "unsent", False):
+                raise
+            raise RetryableError(
+                f"put_when_room may or may not have executed on "
+                f"{self._addr}: {e}") from e
 
 
 class _NamespaceClient:
     """Shared plumbing: bind an RpcClient (or address/endpoint-list) to
     one namespace. `_get` marks the call idempotent — safe to resend with
-    backoff and to fail over across endpoints."""
+    backoff and to fail over across endpoints. `_notify` is one-way,
+    `_call_async` returns a future (both degrade against legacy peers —
+    see RpcClient)."""
 
     def __init__(self, client, ns: str):
         self._c = client if isinstance(client, RpcClient) else RpcClient(client)
@@ -716,20 +1554,31 @@ class _NamespaceClient:
         return self._c.call(f"{self._ns}.{name}", *args, idempotent=True,
                             **kwargs)
 
+    def _call_async(self, name: str, *args, **kwargs) -> _Future:
+        return self._c.call_async(f"{self._ns}.{name}", *args, **kwargs)
+
+    def _notify(self, name: str, *args, **kwargs) -> bool:
+        return self._c.notify(f"{self._ns}.{name}", *args, **kwargs)
+
     def ping(self) -> bool:
         """Idempotent liveness probe against the namespace's server; True
-        when any method on it answers (the remote `ping` if it exists)."""
+        when any method on it answers (the remote `ping` if it exists).
+        Deliberately a round trip, NOT a notify — liveness consumers
+        (the heartbeat monitor) need the reply."""
         try:
             self._get("ping")
         except RemoteError:
             pass                       # server is up, ns just has no ping
         return True
 
+    def transport_stats(self) -> dict:
+        return self._c.transport_stats()
+
     def close(self) -> None:
         self._c.close()
 
     def abort(self) -> None:
-        """Wake a blocked in-flight call with TransportError (see
+        """Wake blocked in-flight calls with TransportError (see
         `RpcClient.abort`)."""
         self._c.abort()
 
@@ -937,11 +1786,22 @@ class _RemoteAgents:
 
 class RemoteTicket:
     """Client-side future for a submitted batch; mirrors `infserver.Ticket`
-    (the integer ticket id is what actually crossed the wire)."""
-    __slots__ = ("tid", "model", "rows", "_client")
+    (the integer ticket id is what actually crossed the wire). Under the
+    pipelined protocol the id itself may still be in flight
+    (`submit_async`): `tid` resolves it lazily on first touch, so a
+    collector can stage its next submit before the previous ack lands."""
+    __slots__ = ("_tid", "model", "rows", "_client")
 
-    def __init__(self, tid: int, model, rows: int, client: "InfServerClient"):
-        self.tid, self.model, self.rows, self._client = tid, model, rows, client
+    def __init__(self, tid, model, rows: int, client: "InfServerClient"):
+        self._tid, self.model, self.rows, self._client = \
+            tid, model, rows, client
+
+    @property
+    def tid(self) -> int:
+        t = self._tid
+        if not isinstance(t, int):
+            self._tid = t = int(t.result())
+        return t
 
     def done(self) -> bool:
         return self._client.poll(self.tid)
@@ -953,7 +1813,8 @@ class RemoteTicket:
         return self.tid
 
     def __repr__(self):
-        return f"RemoteTicket({self.tid}, model={self.model!r}, rows={self.rows})"
+        t = self._tid if isinstance(self._tid, int) else "<pending>"
+        return f"RemoteTicket({t}, model={self.model!r}, rows={self.rows})"
 
 
 class InfServerBackend:
@@ -1037,7 +1898,9 @@ class InfServerClient(_NamespaceClient):
     """Remote `repro.infserver.InfServer` speaking the same
     submit/flush/get protocol as the in-process server, so
     `build_served_rollout` (and therefore a served Actor) can run against
-    either without knowing which it has."""
+    either without knowing which it has. The `*_async` variants pipeline
+    submits/probes on the shared connection — a collector overlaps its
+    per-slot submits, the gateway fans probes across a fleet."""
 
     def __init__(self, client, ns: str = "inf"):
         super().__init__(client, ns)
@@ -1055,6 +1918,20 @@ class InfServerClient(_NamespaceClient):
                              deadline_s=deadline_s)
         return RemoteTicket(tid, model, obs.shape[0], self)
 
+    def submit_async(self, obs: np.ndarray, model: Hashable = None,
+                     deadline_s: Optional[float] = None) -> RemoteTicket:
+        """Pipelined submit: returns immediately with a ticket whose id
+        resolves lazily (first `get`/`poll`/`int()` touch). Lets a caller
+        put several submits on the wire back to back — the obs rows ride
+        the shm ring when negotiated — before awaiting any ack."""
+        obs = np.asarray(obs)
+        if deadline_s is None:
+            fut = self._call_async("submit", obs, model=model)
+        else:
+            fut = self._call_async("submit", obs, model=model,
+                                   deadline_s=deadline_s)
+        return RemoteTicket(fut, model, obs.shape[0], self)
+
     def poll(self, tid) -> bool:
         return self._get("poll", int(tid))
 
@@ -1063,6 +1940,9 @@ class InfServerClient(_NamespaceClient):
 
     def flush(self) -> None:
         self._call("flush")
+
+    def flush_async(self) -> _Future:
+        return self._call_async("flush")
 
     def update_params(self, params, key: Hashable = None,
                       content_hash: Optional[str] = None,
@@ -1096,6 +1976,10 @@ class InfServerClient(_NamespaceClient):
                   content_hash: Optional[str] = None) -> bool:
         return self._get("has_model", key, content_hash)
 
+    def has_model_async(self, key: Hashable,
+                        content_hash: Optional[str] = None) -> _Future:
+        return self._call_async("has_model", key, content_hash)
+
     def evict_model(self, key: Hashable) -> bool:
         return self._call("evict_model", key)
 
@@ -1112,6 +1996,12 @@ class InfServerClient(_NamespaceClient):
         seam."""
         return self._get("telemetry")
 
+    def telemetry_async(self) -> _Future:
+        """Pipelined telemetry probe — the gateway fans these across its
+        fleet with a shared deadline so one stalled replica only goes
+        stale, never freezes the occupancy view."""
+        return self._call_async("telemetry")
+
 
 class DataServerClient(_NamespaceClient):
     """Remote `repro.learners.DataServer` put-side: the Actor→Learner data
@@ -1119,7 +2009,8 @@ class DataServerClient(_NamespaceClient):
     embeds it there); Actors connect here to ship segments. Backpressure
     crosses the boundary: `put_when_room` blocks server-side under the
     ring's condition variable and returns False on timeout exactly like
-    the in-process call."""
+    the in-process call. `put_when_room_async` overlaps that server-side
+    backpressure wait with the actor staging its NEXT segment."""
 
     def __init__(self, client, ns: str = "data"):
         super().__init__(client, ns)
@@ -1129,6 +2020,32 @@ class DataServerClient(_NamespaceClient):
 
     def put_when_room(self, traj, timeout: Optional[float] = None) -> bool:
         return self._call("put_when_room", traj, timeout=timeout)
+
+    def put_when_room_async(self, traj,
+                            timeout: Optional[float] = None) -> _ShipFuture:
+        """Ship a segment without blocking on the server's admission
+        decision: the bulk rows go on the wire (or shm ring) now and the
+        returned future resolves to the server's True/False once the ring
+        admits or times the segment out. Failure semantics match the
+        sync call: ambiguous-after-send surfaces as `RetryableError` from
+        `result()`; a failure guaranteed pre-wire falls back to the
+        retrying synchronous path before giving up."""
+        try:
+            fut = self._c.call_async(f"{self._ns}.put_when_room", traj,
+                                     timeout=timeout)
+        except TransportError as e:
+            fut = _Future()
+            if getattr(e, "unsent", False):
+                # nothing hit the wire — the retrying sync path may still
+                # land it (endpoint rotation, backoff)
+                try:
+                    fut.set_result(
+                        self._call("put_when_room", traj, timeout=timeout))
+                except (TransportError, RemoteError) as e2:
+                    fut.set_exception(e2)
+            else:
+                fut.set_exception(e)
+        return _ShipFuture(fut, self._c.address)
 
     def wait_ready(self, timeout: Optional[float] = None) -> bool:
         return self._call("wait_ready", timeout=timeout)
@@ -1142,12 +2059,18 @@ class DataServerClient(_NamespaceClient):
     def last_sample_info(self):
         return self._call("last_sample_info")
 
-    def update_priorities(self, slots, priorities, gen=None) -> int:
+    def update_priorities(self, slots, priorities, gen=None) -> None:
         """Prioritized-replay write-back over the wire: a remote learner
         (or a priority-computing sidecar) echoes the sampled slots and
         generations back with fresh priorities; the server drops updates
-        for rows the ring has overwritten since."""
-        return self._call("update_priorities", slots, priorities, gen=gen)
+        for rows the ring has overwritten since.
+
+        One-way by design: no caller ever consumed the applied-count the
+        server used to return, and the generation guard already makes a
+        LOST update harmless (stale rows keep their old priority until
+        resampled) — so the learner's train loop no longer pays a round
+        trip per batch."""
+        self._notify("update_priorities", slots, priorities, gen=gen)
 
 
 # -- one-call league server ---------------------------------------------------

@@ -395,7 +395,11 @@ def run_learner(role_name: str, connect: str, *, env_name: str = "rps",
                 continue
             if learner.learn(num_steps=1):
                 period_steps += 1
-                ctrl.call("ctrl.report_learner", role_name, learner.step_count)
+                # one-way telemetry: nobody consumes a reply, so the train
+                # loop no longer pays a ctrl round trip per step (the loop
+                # condition's should_stop still detects a dead coordinator)
+                ctrl.notify("ctrl.report_learner", role_name,
+                            learner.step_count)
         steps = learner.step_count
     except TransportError as e:
         # the coordinator owns the run's lifetime: once we were connected,
@@ -434,7 +438,10 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
     params with failover across `pool_endpoints` when given, and treats
     an ambiguous segment ship (`RetryableError`) as a dropped segment —
     trajectory frames are data, losing one is cheaper than double-feeding
-    the ring."""
+    the ring. Segment shipping is overlapped: `put_when_room_async` puts
+    the rows on the wire immediately and the next segment's env steps run
+    while the server waits out ring backpressure; beats and progress
+    reports ride one-way notifies instead of round trips."""
     from repro.actors import Actor
     from repro.configs import get_arch
     from repro.envs import make_env
@@ -461,28 +468,60 @@ def run_actor(role_name: str, connect: str, *, actor_index: int = 0,
                       unroll_len=unroll_len,
                       seed=seed * 1000 + actor_index, inf_server=inf,
                       actor_id=actor_id)
-        while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
-            traj, _task = actor.run_segment()
-            # backpressure: the server blocks on the ring condition for the
-            # whole timeout, so a LONG timeout means the segment is shipped
-            # once and waits server-side — retrying at the poll interval
-            # would re-serialize the full pytree 20x/s exactly when the
-            # learner is already the bottleneck
-            while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
-                ctrl.call("ctrl.actor_beat", actor_id)  # slow != dead
+        # the ship pipeline: at most ONE segment in flight. The rows go on
+        # the wire (or the shm ring) the moment a segment completes; the
+        # server-side backpressure wait then overlaps the NEXT segment's
+        # env steps + inference instead of blocking the actor. Depth 1 is
+        # deliberate — deeper would buffer trajectories actor-side exactly
+        # when the learner is already the bottleneck.
+        pending = None                     # (_ShipFuture, traj)
+
+        def _settle(fut, traj):
+            """Resolve one in-flight ship: re-submit on server-side
+            ring-full timeouts, beat the ctrl plane while waiting (a
+            backpressured actor is slow, not dead), drop the segment on
+            an ambiguous failure. The server blocks on the ring condition
+            for the whole timeout, so a LONG timeout means the segment is
+            shipped once and waits server-side — client-side re-polling
+            would re-serialize the full pytree 20x/s exactly when the
+            learner is already the bottleneck."""
+            nonlocal segments, segments_dropped
+            while not coord_dead.is_set():
                 try:
-                    if data.put_when_room(traj, timeout=2.0):
-                        segments += 1
-                        break
+                    ok = fut.result(timeout=2.5)
+                except TimeoutError:
+                    ctrl.notify("ctrl.actor_beat", actor_id)  # slow != dead
+                    continue
                 except RetryableError:
                     # the learner may or may not have taken the segment (a
                     # restarting learner pod, a dropped reply): frames are
                     # data, not protocol state — drop it and move on rather
                     # than risk feeding the ring twice
                     segments_dropped += 1
-                    break
-            ctrl.call("ctrl.report_actor", actor_id, segments,
-                      actor.frames_produced)
+                    return
+                if ok:
+                    segments += 1
+                    return
+                # server-side timeout: the ring stayed full — re-ship
+                # unless the run is coming down anyway
+                if ctrl.call("ctrl.should_stop"):
+                    return
+                ctrl.notify("ctrl.actor_beat", actor_id)
+                fut = data.put_when_room_async(traj, timeout=2.0)
+
+        while not coord_dead.is_set() and not ctrl.call("ctrl.should_stop"):
+            traj, _task = actor.run_segment()
+            if pending is not None:        # previous ship: await admission
+                _settle(*pending)
+                pending = None
+            ctrl.notify("ctrl.actor_beat", actor_id)
+            pending = (data.put_when_room_async(traj, timeout=2.0), traj)
+            # one-way progress telemetry: no reply consumed, no round trip
+            ctrl.notify("ctrl.report_actor", actor_id, segments,
+                        actor.frames_produced)
+        if pending is not None and not coord_dead.is_set():
+            _settle(*pending)              # drain the in-flight ship
+            pending = None
         frames = actor.frames_produced
     except TransportError as e:
         # a vanished coordinator is shutdown, not failure (see run_learner)

@@ -437,42 +437,85 @@ class ServingGateway:
                 if min(h.pending_deadlines.values()) <= now + margin:
                     h.pending_deadlines.clear()
                     to_flush.append(h)
-        for h in to_flush:
-            try:
-                h.replica.flush()
-            except (TransportError, OSError):
-                self._mark_dead(h)
+        self._flush_fanout(to_flush)
         return len(to_flush)
 
     def flush(self) -> None:
-        """Flush the whole fleet (and clear the deadline ledger)."""
+        """Flush the whole fleet concurrently (and clear the deadline
+        ledger): remote replicas take a pipelined `flush_async`, so one
+        slow replica no longer serializes the rest."""
         with self._lock:
             handles = [h for h in self._handles if h.alive]
             for h in handles:
                 h.pending_deadlines.clear()
+        self._flush_fanout(handles)
+
+    def _flush_fanout(self, handles) -> None:
+        """Submit every flush before awaiting any ack; in-process
+        replicas (no `flush_async`) flush inline."""
+        futs = []
         for h in handles:
+            fa = getattr(h.replica, "flush_async", None)
             try:
-                h.replica.flush()
+                if fa is None:
+                    h.replica.flush()
+                else:
+                    futs.append((h, fa()))
             except (TransportError, OSError):
                 self._mark_dead(h)
+        for h, fut in futs:
+            try:
+                fut.result()
+            except (TransportError, OSError):
+                self._mark_dead(h)
+            except RemoteError:
+                pass                   # replica alive; flush itself failed
 
-    def refresh_telemetry(self) -> None:
+    def refresh_telemetry(self, probe_timeout_s: float = 0.25) -> None:
         """Pull each replica's occupancy/latency probe into the router's
-        view of the fleet — `InfServer.telemetry()` in-process, the same
-        method over `InfServerClient` for an RPC fleet."""
+        view of the fleet — `InfServer.telemetry()` in-process, a
+        pipelined `telemetry_async` fan-out over RPC. All probes go out
+        before any reply is awaited, under ONE shared deadline: a replica
+        that cannot answer within `probe_timeout_s` just keeps its stale
+        view (NOT marked dead — a late reply resolves harmlessly in the
+        reader; liveness is the failover path's call), so one stalled
+        replica can no longer freeze the router's occupancy view or the
+        pump thread's deadline math. A replica whose transport is
+        actually gone IS marked dead."""
+        probes = []
         for h in self._handles:
             if not h.alive:
                 continue
+            probe = getattr(h.replica, "telemetry_async", None)
+            if probe is None:          # in-process replica: local + cheap
+                try:
+                    self._fold_telemetry(h, h.replica.telemetry())
+                except (TransportError, OSError):
+                    self._mark_dead(h)
+                continue
             try:
-                t = h.replica.telemetry()
+                probes.append((h, probe()))
+            except (TransportError, OSError):
+                self._mark_dead(h)
+        deadline = time.perf_counter() + probe_timeout_s
+        for h, fut in probes:
+            try:
+                t = fut.result(max(0.0, deadline - time.perf_counter()))
+            except TimeoutError:
+                continue               # stale this round, not dead
             except (TransportError, OSError):
                 self._mark_dead(h)
                 continue
-            with self._lock:
-                h.queue_depth = int(t.get("queue_depth", 0))
-                lat = t.get("mean_batch_latency_ms")
-                if lat:
-                    h.ewma_latency_s = max(h.ewma_latency_s, lat / 1e3)
+            except RemoteError:
+                continue               # replica alive; probe itself failed
+            self._fold_telemetry(h, t)
+
+    def _fold_telemetry(self, h: "_Handle", t: dict) -> None:
+        with self._lock:
+            h.queue_depth = int(t.get("queue_depth", 0))
+            lat = t.get("mean_batch_latency_ms")
+            if lat:
+                h.ewma_latency_s = max(h.ewma_latency_s, lat / 1e3)
 
     def start(self) -> "ServingGateway":
         """Run the deadline pump (+ periodic telemetry refresh) in a
@@ -536,9 +579,33 @@ class ServingGateway:
         bytes_shipped = 0
         with self._lock:
             handles = [h for h in self._handles if h.alive]
+        # probe the whole fleet concurrently (pipelined has_model_async
+        # on RPC replicas), then ship params only where the probe said
+        # the content is missing — the warm-fleet rollout pays N
+        # overlapped probe round trips instead of N serial ones
+        t1s: Dict[int, float] = {}
+        hosted: Dict[int, bool] = {}
+        probes = []
         for h in handles:
-            t1 = time.perf_counter()
-            if h.replica.has_model(key, manifest.tree_hash):
+            t1s[h.index] = time.perf_counter()
+            probe = getattr(h.replica, "has_model_async", None)
+            if probe is None:          # in-process replica
+                hosted[h.index] = bool(
+                    h.replica.has_model(key, manifest.tree_hash))
+                continue
+            try:
+                probes.append((h, probe(key, manifest.tree_hash)))
+            except (TransportError, OSError):
+                self._mark_dead(h)
+        for h, fut in probes:
+            try:
+                hosted[h.index] = bool(fut.result())
+            except (TransportError, OSError, RemoteError):
+                self._mark_dead(h)
+        for h in handles:
+            if h.index not in hosted:
+                continue               # died during the probe pass
+            if hosted[h.index]:
                 shipped = False
                 self.rollout_noops += 1
             else:
@@ -550,7 +617,7 @@ class ServingGateway:
             h.hosted.add(key)
             per.append({"replica": h.index, "shipped": shipped,
                         "bytes": manifest.nbytes if shipped else 0,
-                        "ms": (time.perf_counter() - t1) * 1e3})
+                        "ms": (time.perf_counter() - t1s[h.index]) * 1e3})
         with self._lock:
             self._sources[key] = (params, manifest.tree_hash,
                                   manifest.version)

@@ -1,0 +1,139 @@
+"""CI shm smoke (ISSUE 10): the same-host shared-memory fast path must
+not leak segments or wedge the server when the PRODUCER is SIGKILLed
+mid-stream.
+
+Not a pytest module (no `test_` prefix — real kill -9 semantics across
+processes): run as `PYTHONPATH=src python tests/smoke_shm.py`.
+
+The scenario:
+  1. Parent serves an echo backend over `RpcServer` (shm enabled).
+  2. A child process connects, negotiates the shm ring (same host, same
+     boot id) and streams large frames through it in a tight loop,
+     printing the negotiated segment name.
+  3. Parent kill -9s the child mid-stream. The server must shrug the
+     dead connection off, the child's /dev/shm segment must disappear
+     within ~10 s (the resource tracker reaps it), and a FRESH client
+     must negotiate its own ring and round-trip bit-exact.
+"""
+import os
+import pathlib
+import re
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.distributed import transport as tp  # noqa: E402
+
+ENV = dict(os.environ)
+ENV["PYTHONPATH"] = os.pathsep.join(
+    p for p in (str(REPO / "src"), os.environ.get("PYTHONPATH")) if p)
+
+CHILD = r"""
+import sys, time
+import numpy as np
+from repro.distributed import transport as tp
+
+c = tp.RpcClient(sys.argv[1])
+blob = np.arange(96 * 1024, dtype=np.float32)          # 384 KiB
+c.call("b.echo", blob)                                 # negotiate first
+st = c.transport_stats()
+name = c._conn.shm.name if (c._conn and c._conn.shm) else ""
+print(f"SHM name={name} proto={st['proto']}", flush=True)
+i = 0
+while True:                                            # stream until killed
+    c.call("b.echo", blob + i)
+    i += 1
+"""
+
+
+class _Echo:
+    def __init__(self):
+        self.frames = 0
+        self._lock = threading.Lock()
+
+    def echo(self, x):
+        with self._lock:
+            self.frames += 1
+        return x
+
+
+def main() -> int:
+    backend = _Echo()
+    ok = True
+    with tp.RpcServer({"b": backend}) as srv:
+        child = subprocess.Popen(
+            [sys.executable, "-c", CHILD, srv.address], env=ENV, cwd=REPO,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+        try:
+            line = child.stdout.readline()
+            m = re.search(r"SHM name=(\S*) proto=(\d+)", line)
+            assert m, f"child never negotiated: {line!r}"
+            name, proto = m.group(1), int(m.group(2))
+            print(f"[shm] child pid={child.pid} ring={name!r} proto={proto}",
+                  flush=True)
+            if not name or proto < 2:
+                print("[shm] FAIL: child did not negotiate the shm ring",
+                      flush=True)
+                return 1
+            assert os.path.exists(f"/dev/shm/{name}"), "ring segment missing"
+
+            deadline = time.monotonic() + 30.0
+            while backend.frames < 50 and time.monotonic() < deadline:
+                time.sleep(0.05)
+            assert backend.frames >= 50, "child never streamed frames"
+            print(f"[shm] {backend.frames} frames through the ring; "
+                  "SIGKILL the producer mid-stream", flush=True)
+            os.kill(child.pid, signal.SIGKILL)
+            child.wait(timeout=10)
+        finally:
+            if child.poll() is None:
+                child.kill()
+                child.wait()
+
+        # the dead producer's segment is reaped (resource tracker), not
+        # leaked into /dev/shm for the life of the host
+        deadline = time.monotonic() + 10.0
+        while os.path.exists(f"/dev/shm/{name}"):
+            if time.monotonic() > deadline:
+                print(f"[shm] FAIL: segment {name} leaked after kill -9",
+                      flush=True)
+                ok = False
+                break
+            time.sleep(0.2)
+        else:
+            print("[shm] dead producer's segment reaped", flush=True)
+
+        # the server survived: a fresh client negotiates ITS OWN ring and
+        # round-trips bit-exact
+        before = backend.frames
+        c = tp.RpcClient(srv.address)
+        try:
+            blob = np.arange(96 * 1024, dtype=np.float32) * 2.0
+            out = c.call("b.echo", blob)
+            np.testing.assert_array_equal(out, blob)
+            st = c.transport_stats()
+            print(f"[shm] fresh client after kill: proto={st['proto']} "
+                  f"shm={st['shm']} blobs={st['shm_blobs']}", flush=True)
+            if st["proto"] < 2 or not st["shm"] or st["shm_blobs"] < 1:
+                print("[shm] FAIL: fresh client did not take the fast path",
+                      flush=True)
+                ok = False
+            if backend.frames <= before:
+                print("[shm] FAIL: server stopped serving", flush=True)
+                ok = False
+        finally:
+            c.close()
+
+    print(f"[shm] {'PASS' if ok else 'FAIL'}", flush=True)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -354,10 +354,17 @@ def test_priority_updates_over_rpc():
         ds.sample(3)
         info = client.last_sample_info()
         assert len(info["slots"]) == 3 and info["weights"] is not None
-        n = client.update_priorities(info["slots"], np.full(3, 5.0),
-                                     gen=info["gen"])
-        assert n == 3
+        # one-way notify: no reply to await — poll for the server-side
+        # tree update instead (the learner never consumed the count)
+        client.update_priorities(info["slots"], np.full(3, 5.0),
+                                 gen=info["gen"])
         eps = np.finfo(np.float32).eps.item()
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            if np.allclose(np.asarray(ds.sampler._tree[info["slots"]]),
+                           (5.0 + eps) ** 0.6):
+                break
+            time.sleep(0.01)
         assert np.allclose(np.asarray(ds.sampler._tree[info["slots"]]),
                            (5.0 + eps) ** 0.6)
         client.close()

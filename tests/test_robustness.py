@@ -253,13 +253,35 @@ class TestRetry:
             box.get("srv", srv).close()
 
     def test_nonidempotent_failure_raises_retryable(self):
+        # a drop_reply fault is the genuine ambiguity: the push DID
+        # dispatch server-side but the reply was lost — the transport
+        # must surface RetryableError, never silently resend
+        pool = ModelPool()
+        plan = tp.FaultPlan([tp.FaultRule("pool.push", "drop_reply",
+                                          max_times=1)])
+        srv = tp.RpcServer({"pool": pool}, fault_plan=plan).start()
+        client = tp.RpcClient(srv.address, retry=self.FAST, seed=0)
+        try:
+            client.call("pool.keys", idempotent=True)     # connection is live
+            with pytest.raises(tp.RetryableError):
+                client.call("pool.push", ModelKey("m", 0), _small_params())
+            assert ModelKey("m", 0) in pool.keys()        # it DID execute
+        finally:
+            client.close()
+            srv.close()
+
+    def test_nonidempotent_on_proactively_dead_conn_is_not_ambiguous(self):
+        # the pipelined reader notices a dead server BEFORE the next call,
+        # so a push that never reached the wire exhausts with a plain
+        # TransportError — retryable-by-construction, not RetryableError
         pool = ModelPool()
         srv = tp.RpcServer({"pool": pool}).start()
         client = tp.RpcClient(srv.address, retry=self.FAST, seed=0)
         try:
             client.call("pool.keys", idempotent=True)     # connection is live
             srv.close()
-            with pytest.raises(tp.RetryableError):
+            time.sleep(0.2)                # let the reader observe the close
+            with pytest.raises(tp.TransportError):
                 client.call("pool.push", ModelKey("m", 0), _small_params())
         finally:
             client.close()

@@ -3,9 +3,11 @@ round trip per league seam (pool pull/push, league request/report,
 infserver submit/poll, dataserver put), killed-server error propagation,
 and sharded-vs-single-device InfServer forward parity (local mesh
 in-process; a forced multi-device CPU mesh in a subprocess)."""
+import os
 import subprocess
 import sys
 import threading
+import time
 
 import jax
 import numpy as np
@@ -485,3 +487,182 @@ def test_sharded_forward_parity_multidevice():
     r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
                        capture_output=True, text=True, timeout=580, env=env)
     assert "SHARDED-PARITY" in r.stdout, (r.stdout[-2000:], r.stderr[-2000:])
+
+
+# -- pipelined protocol (ISSUE 10) -------------------------------------------
+class _Bench:
+    """Test backend: an echo that can stall, for out-of-order replies."""
+
+    @staticmethod
+    def echo(x, delay=0.0):
+        if delay:
+            time.sleep(delay)
+        return x
+
+    def __init__(self):
+        self.seen = []
+        self._lock = threading.Lock()
+
+    def record(self, x):
+        with self._lock:
+            self.seen.append(x)
+        return len(self.seen)
+
+
+def test_pipelined_out_of_order_64_callers():
+    """64 requests in flight on ONE connection; the slow ones reply after
+    the fast ones, and every future still resolves to ITS OWN payload."""
+    with tp.RpcServer({"b": _Bench()}, conn_workers=8) as srv:
+        c = tp.RpcClient(srv.address)
+        try:
+            # even request ids stall so their replies arrive out of order
+            futs = [c.call_async("b.echo", i, delay=0.05 if i % 2 == 0 else 0.0)
+                    for i in range(64)]
+            assert c.transport_stats()["proto"] >= 2
+            got = [f.result(timeout=30.0) for f in futs]
+            assert got == list(range(64))
+        finally:
+            c.close()
+
+
+def test_pipelined_slow_does_not_block_fast():
+    """A stalled request must not head-of-line-block the connection: a
+    fast call submitted AFTER a slow one completes first."""
+    with tp.RpcServer({"b": _Bench()}) as srv:
+        c = tp.RpcClient(srv.address)
+        try:
+            slow = c.call_async("b.echo", "slow", delay=1.0)
+            t0 = time.monotonic()
+            assert c.call("b.echo", "fast") == "fast"
+            fast_s = time.monotonic() - t0
+            assert fast_s < 0.5, f"fast call waited {fast_s:.2f}s behind slow"
+            assert slow.result(timeout=10.0) == "slow"
+        finally:
+            c.close()
+
+
+def test_abort_poisons_inflight_futures():
+    """abort() from another thread fails every pipelined future promptly
+    (TransportError, not a hang) and poisons the client for new calls."""
+    with tp.RpcServer({"b": _Bench()}) as srv:
+        c = tp.RpcClient(srv.address)
+        futs = [c.call_async("b.echo", i, delay=30.0) for i in range(4)]
+        threading.Timer(0.2, c.abort).start()
+        for f in futs:
+            with pytest.raises(tp.TransportError):
+                f.result(timeout=10.0)
+        with pytest.raises(tp.TransportError):
+            c.call("b.echo", 1)
+
+
+def test_legacy_server_negotiates_down():
+    """New client against a serial v1 server: the hello is rejected, the
+    client drops to proto 1, and call/call_async/notify all still work."""
+    with tp.RpcServer({"b": _Bench()}, pipeline=False) as srv:
+        c = tp.RpcClient(srv.address)
+        try:
+            assert c.call("b.echo", "x") == "x"
+            assert c.transport_stats()["proto"] == 1
+            assert c.call_async("b.echo", 7).result(timeout=10.0) == 7
+            assert c.notify("b.record", "n1")
+            assert c.call("b.record", "n2") == 2   # notify reached the server
+        finally:
+            c.close()
+
+
+def test_legacy_client_against_pipelined_server():
+    """Old-style client (no hello) against the new server: the serial v1
+    loop serves it, interoperating with a pipelined client on the same
+    server."""
+    with tp.RpcServer({"b": _Bench()}) as srv:
+        old = tp.RpcClient(srv.address, pipeline=False)
+        new = tp.RpcClient(srv.address)
+        try:
+            assert old.transport_stats()["proto"] == 0  # never negotiated
+            assert old.call("b.echo", "v1") == "v1"
+            assert old.transport_stats()["proto"] == 1
+            assert new.call("b.echo", "v2") == "v2"
+            assert new.transport_stats()["proto"] >= 2
+        finally:
+            old.close()
+            new.close()
+
+
+def test_shm_ring_wraparound_and_oversize_fallback():
+    """A ring much smaller than the traffic wraps repeatedly and every
+    frame is still bit-exact; a blob that cannot fit the ring at all
+    falls back to in-frame TCP bytes, also bit-exact."""
+    rng = np.random.default_rng(7)
+    with tp.RpcServer({"b": _Bench()}) as srv:
+        c = tp.RpcClient(srv.address, shm_bytes=1 << 20)      # 1 MiB ring
+        try:
+            # 300 KiB: no whole number of blobs tiles the 1 MiB ring, so
+            # the writer must skip the tail gap (a wrap) every few frames
+            blob = rng.normal(size=(75, 1024)).astype(np.float32)
+            for i in range(8):
+                out = c.call("b.echo", {"i": i, "w": blob + i})
+                np.testing.assert_array_equal(out["w"], blob + i)
+            st = c.transport_stats()
+            assert st["shm"], "same-host client should have negotiated shm"
+            assert st["shm_blobs"] >= 8
+            assert st["shm_wraps"] >= 1, st
+            huge = rng.normal(size=(600, 1024)).astype(np.float32)  # 2.4 MiB
+            np.testing.assert_array_equal(c.call("b.echo", huge), huge)
+            assert c.transport_stats()["shm_fallbacks"] >= 1
+        finally:
+            c.close()
+
+
+def test_shm_segment_unlinked_on_close():
+    """close() must unlink the shared-memory segment — leaked /dev/shm
+    files outlive the process and fill the host."""
+    with tp.RpcServer({"b": _Bench()}) as srv:
+        c = tp.RpcClient(srv.address)
+        c.call("b.echo", np.zeros((200_000,), np.float32))   # force negotiate
+        conn = c._conn
+        if conn is None or conn.shm is None:
+            pytest.skip("shm not negotiated on this host")
+        name = conn.shm.name
+        assert os.path.exists(f"/dev/shm/{name}")
+        c.close()
+        assert not os.path.exists(f"/dev/shm/{name}")
+
+
+def test_chunked_blobs_interleave_with_small_calls():
+    """Large streamed payloads and small control calls share one
+    pipelined connection: the small calls stay fast and correct while
+    multi-chunk blobs are in flight, and the blobs come back bit-exact."""
+    rng = np.random.default_rng(11)
+    big = rng.normal(size=(900, 1024)).astype(np.float32)     # ~3.7 MB
+    with tp.RpcServer({"b": _Bench()}) as srv:
+        # shm off: force the TCP chunked path the test is about
+        c = tp.RpcClient(srv.address, shm=False)
+        try:
+            bigs = [c.call_async("b.echo", {"i": i, "w": big * (i + 1)})
+                    for i in range(3)]
+            smalls = [c.call_async("b.echo", i) for i in range(20)]
+            assert [f.result(timeout=30.0) for f in smalls] == list(range(20))
+            for i, f in enumerate(bigs):
+                out = f.result(timeout=60.0)
+                assert out["i"] == i
+                np.testing.assert_array_equal(out["w"], big * (i + 1))
+        finally:
+            c.close()
+
+
+def test_notify_is_one_way_and_reaches_server():
+    """notify() returns without consuming a reply; the effect lands."""
+    b = _Bench()
+    with tp.RpcServer({"b": b}) as srv:
+        c = tp.RpcClient(srv.address)
+        try:
+            for i in range(10):
+                assert c.notify("b.record", i)
+            deadline = time.monotonic() + 5.0
+            while len(b.seen) < 10 and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert b.seen == list(range(10))
+            # a round trip after 10 notifies proves framing stayed aligned
+            assert c.call("b.echo", "ok") == "ok"
+        finally:
+            c.close()
